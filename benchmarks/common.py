@@ -1,0 +1,92 @@
+"""Shared benchmark plumbing: result recording, table printing, and the
+standard simulator configuration used across the paper reproductions."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.serving.cost_model import H100X2, CostModel
+from repro.serving.metrics import SLOConfig, request_metrics
+from repro.serving.simulator import Simulator
+from repro.serving.traffic import DATASETS, poisson_trace
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "results")
+
+# Paper Table 5 SLOs.
+SLOS = {
+    ("qwen3-30b-a3b", "sharegpt"): SLOConfig(5.0, 0.125),
+    ("qwen3-30b-a3b", "arxiv"): SLOConfig(10.0, 0.125),
+    ("gpt-oss-20b", "sharegpt"): SLOConfig(5.0, 0.100),
+    ("gpt-oss-20b", "arxiv"): SLOConfig(10.0, 0.100),
+}
+
+N_SLOTS = 128
+
+
+def run_sim(model: str, dataset: str, scheduler: str, rate: float,
+            n_requests: int = 100, seed: int = 0, **sched_kw):
+    cfg = get_config(model)
+    trace = poisson_trace(DATASETS[dataset], rate, n_requests, seed=seed)
+    defaults = dict(token_budget=512, quantum=512)
+    defaults.update(sched_kw)
+    sim = Simulator(cfg, scheduler, H100X2, n_slots=N_SLOTS, **defaults)
+    res = sim.run(trace)
+    slo = SLOS.get((model, dataset))
+    m = request_metrics(res.requests, slo)
+    m.update({
+        "model": model, "dataset": dataset, "scheduler": scheduler,
+        "rate": rate,
+        "energy_per_token_mj": res.energy_per_token * 1e3,
+        "expert_bytes_total": res.total_expert_bytes,
+        "mean_decode_batch": res.mean_decode_batch,
+        "n_iterations": res.n_iterations,
+    })
+    return m, res
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+def table(rows: List[Dict], cols: List[str], title: str = "") -> str:
+    out = []
+    if title:
+        out.append(title)
+    widths = [max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols]
+    out.append("  ".join(c.ljust(w) for c, w in zip(cols, widths)))
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(_fmt(r.get(c)).ljust(w)
+                             for c, w in zip(cols, widths)))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e5 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.3f}" if abs(v) < 10 else f"{v:.1f}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.time() - self.t0

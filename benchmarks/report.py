@@ -1,0 +1,90 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables in markdown from
+the dry-run artifacts. Run after launch/dryrun --all:
+
+  PYTHONPATH=src:. python -m benchmarks.report > experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(mesh):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"*_{mesh}.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x >= 0.01:
+        return f"{x:.3f}"
+    return f"{x:.2e}"
+
+
+def main() -> None:
+    single = load("16x16")
+    multi = load("2x16x16")
+
+    print("### Dry-run matrix (status x mesh)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | mem/dev 16x16 (GB) |"
+          " mem/dev 2x16x16 (GB) |")
+    print("|---|---|---|---|---|---|")
+    for key in sorted(single):
+        s, m = single[key], multi.get(key, {})
+        ms = s.get("peak_memory_per_device")
+        mm = m.get("peak_memory_per_device")
+        print(f"| {key[0]} | {key[1]} | {s['status']} | "
+              f"{m.get('status', '?')} | "
+              f"{ms / 1e9:.2f} | " if ms else
+              f"| {key[0]} | {key[1]} | {s['status']} | "
+              f"{m.get('status', '?')} | - | ", end="")
+        print(f"{mm / 1e9:.2f} |" if mm else "- |")
+
+    print("\n### Roofline terms (single pod, 256 chips, per device)\n")
+    print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) |"
+          " bottleneck | MODEL/HLO flops | mem/dev GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(single):
+        d = single[key]
+        if d.get("status") == "skipped":
+            print(f"| {key[0]} | {key[1]} | — | — | — | skipped "
+                  f"(sub-quadratic gate) | — | — |")
+            continue
+        if "t_compute_s" not in d:
+            continue
+        mem = d.get("peak_memory_per_device")
+        print(f"| {key[0]} | {key[1]} | {fmt_t(d['t_compute_s'])} | "
+              f"{fmt_t(d['t_memory_s'])} | {fmt_t(d['t_collective_s'])} | "
+              f"{d['bottleneck']} | {d['useful_flops_ratio']:.2f} | "
+              f"{mem / 1e9:.1f} |" if mem else "- |")
+
+    print("\n### Collective mix (single pod; bytes/device by kind)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter |"
+          " all-to-all | permute |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(single):
+        d = single[key]
+        cb = d.get("collective_by_kind")
+        if not cb:
+            continue
+        def g(k):
+            v = cb.get(k, 0)
+            return f"{v / 1e9:.2f}G" if v else "0"
+        print(f"| {key[0]} | {key[1]} | {g('all-gather')} | "
+              f"{g('all-reduce')} | {g('reduce-scatter')} | "
+              f"{g('all-to-all')} | {g('collective-permute')} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Roofline aggregation: reads the dry-run artifacts (experiments/dryrun)
+and prints the per-(arch x shape) three-term roofline table — the source of
+EXPERIMENTS.md §Roofline. Also selects the three hillclimb pairs."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save, table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_reports(mesh: str = "16x16"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("status") == "skipped":
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "status": "skipped", "reason": d["reason"][:40]})
+            continue
+        if d.get("status") != "ok" or "t_compute_s" not in d:
+            continue
+        tc, tm, tcoll = d["t_compute_s"], d["t_memory_s"], d["t_collective_s"]
+        dom = max(tc, tm, tcoll)
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "status": "ok",
+            "t_compute_s": tc, "t_memory_s": tm, "t_collective_s": tcoll,
+            "bottleneck": d["bottleneck"],
+            "useful_flops_ratio": d.get("useful_flops_ratio", 0.0),
+            "roofline_frac": (max(tc, tm) / dom if dom else 0.0),
+            "mem_gb": (d.get("peak_memory_per_device") or 0) / 1e9,
+        })
+    return rows
+
+
+def main() -> dict:
+    rows = load_reports()
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(table(ok, ["arch", "shape", "t_compute_s", "t_memory_s",
+                     "t_collective_s", "bottleneck", "useful_flops_ratio",
+                     "mem_gb"],
+                "Roofline terms per (arch x shape), 16x16 single pod"))
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    if skipped:
+        print("\nskipped (documented in DESIGN.md §Shape skips):")
+        for r in skipped:
+            print(f"  {r['arch']} x {r['shape']}: {r['reason']}...")
+
+    # hillclimb selection: worst useful-flops ratio, most collective-bound,
+    # most representative of the paper (MoE decode)
+    by_useful = sorted(ok, key=lambda r: r["useful_flops_ratio"])
+    coll_bound = sorted(ok, key=lambda r: -(r["t_collective_s"]
+                                            / max(r["t_compute_s"],
+                                                  r["t_memory_s"], 1e-12)))
+    checks = {"n_ok": len(ok), "n_skipped": len(skipped),
+              "all_combos_accounted": len(ok) + len(skipped) == 40}
+    print("\nworst useful-flops:", [(r["arch"], r["shape"]) for r in
+                                    by_useful[:3]])
+    print("most collective-bound:", [(r["arch"], r["shape"]) for r in
+                                     coll_bound[:3]])
+    print("checks:", checks)
+    result = {"rows": rows, "checks": checks,
+              "pass": checks["all_combos_accounted"]}
+    save("roofline", result)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one entry per paper table/figure plus the roofline
+aggregation. ``python -m benchmarks.run [--fast]`` runs everything and
+prints a pass/fail summary (results land in experiments/results/)."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (fig2_chunk_microbench, fig3_slo_attainment,
+                        fig5_tokens_over_time, roofline, table1_coverage,
+                        table2_chunk_tradeoff, table6_latency,
+                        table7_expert_loads, table8_energy)
+
+BENCHES = [
+    ("table1_coverage", table1_coverage.main, {}),
+    ("fig2_chunk_microbench", fig2_chunk_microbench.main, {}),
+    ("table2_chunk_tradeoff", table2_chunk_tradeoff.main, {}),
+    ("fig3_slo_attainment", fig3_slo_attainment.main, {"fast_kw": "n_requests"}),
+    ("table6_latency", table6_latency.main, {"fast_kw": "n_requests"}),
+    ("table7_expert_loads", table7_expert_loads.main, {"fast_kw": "n_requests"}),
+    ("fig5_tokens_over_time", fig5_tokens_over_time.main, {"fast_kw": "n_requests"}),
+    ("table8_energy", table8_energy.main, {"fast_kw": "n_requests"}),
+    ("roofline", roofline.main, {}),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller traces (CI-speed)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    summary = []
+    for name, fn, meta in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        kw = {}
+        if args.fast and meta.get("fast_kw"):
+            kw[meta["fast_kw"]] = 60
+        print(f"\n{'=' * 72}\n{name}\n{'=' * 72}")
+        t0 = time.time()
+        res = fn(**kw)
+        summary.append((name, res.get("pass", None), time.time() - t0))
+
+    print(f"\n{'=' * 72}\nSUMMARY\n{'=' * 72}")
+    failed = []
+    for name, ok, dt in summary:
+        status = {True: "PASS", False: "FAIL", None: "-"}[ok]
+        print(f"  {name:<28} {status:<6} {dt:6.1f}s")
+        if ok is False:
+            failed.append(name)
+    if failed:
+        sys.exit(f"benchmark validation failures: {failed}")
+    print("\nall paper-validation checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 2: chunk-size trade-offs for Qwen on the arXiv workload.
+Larger chunks improve runtime/energy/throughput but inflate tail TBT.
+
+Request rates per chunk size follow the paper (rates chosen there to hold
+TTFT ~2.5 s): 512 -> 1.3, 1024 -> 1.7, 2048 -> 2.6 req/s.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_sim, save, table
+
+ROWS_PAPER = {  # chunk: (rate, ttft_mean, ttft_p99, tbt_mean, tbt_p99, load_gb, mj_tok)
+    512: (1.3, 2.68, 8.05, 29.0, 48.4, 955, 60.2),
+    1024: (1.7, 2.32, 5.83, 43.6, 83.4, 631, 45.4),
+    2048: (2.6, 2.56, 5.58, 73.6, 129, 304, 32.4),
+}
+
+
+def main(n_requests: int = 100) -> dict:
+    rows = []
+    for chunk, paper in ROWS_PAPER.items():
+        m, res = run_sim("qwen3-30b-a3b", "arxiv", "chunked", paper[0],
+                         n_requests=n_requests, token_budget=chunk)
+        rows.append({
+            "chunk": chunk, "rate": paper[0],
+            "ttft_mean": m["ttft_mean"], "ttft_p99": m["ttft_p99"],
+            "tbt_mean_ms": m["tbt_mean"] * 1e3,
+            "tbt_p99_ms": m["tbt_p99"] * 1e3,
+            "load_gb_req": m["expert_bytes_total"] / n_requests / 1e9,
+            "mj_tok": m["energy_per_token_mj"],
+            "paper_load": paper[5], "paper_mj": paper[6],
+        })
+    print(table(rows, ["chunk", "rate", "ttft_mean", "ttft_p99",
+                       "tbt_mean_ms", "tbt_p99_ms", "load_gb_req",
+                       "paper_load", "mj_tok", "paper_mj"],
+                "Table 2 — chunk-size trade-offs (Qwen, arXiv)"))
+    by = {r["chunk"]: r for r in rows}
+    checks = {
+        # larger chunks raise tail TBT sharply (paper: 48 -> 129 ms p99)
+        "tbt_tail_grows": by[512]["tbt_p99_ms"] < by[1024]["tbt_p99_ms"]
+        < by[2048]["tbt_p99_ms"],
+        # energy/token falls ~46% from 512 to 2048 (paper: 60.2 -> 32.4)
+        "energy_falls": by[2048]["mj_tok"] < 0.70 * by[512]["mj_tok"],
+        # expert load falls with chunk size (paper: 955 -> 304 GB/req)
+        "load_falls": by[2048]["load_gb_req"] < 0.45 * by[512]["load_gb_req"],
+        # absolute load within 40% of the paper's measurement
+        "load_magnitude": abs(by[512]["load_gb_req"] - 955) / 955 < 0.4,
+    }
+    print("\nchecks:", checks)
+    result = {"rows": rows, "checks": checks, "pass": all(checks.values())}
+    save("table2_chunk_tradeoff", result)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 6: Qwen on arXiv at 1.3 req/s — TTFT/TBT mean and p99 for
+chunked vs layered. Paper: chunked 2.803/8.651 s TTFT, 32.9/51.1 ms TBT;
+layered 1.237/4.098 s TTFT, 21.5/37.1 ms TBT.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_sim, save, table
+
+PAPER = {
+    "chunked": {"ttft_mean": 2.803, "ttft_p99": 8.651,
+                "tbt_mean_ms": 32.9, "tbt_p99_ms": 51.1},
+    "layered": {"ttft_mean": 1.237, "ttft_p99": 4.098,
+                "tbt_mean_ms": 21.5, "tbt_p99_ms": 37.1},
+}
+
+
+def main(n_requests: int = 150) -> dict:
+    rows = []
+    got = {}
+    for sched in ("chunked", "layered"):
+        m, _ = run_sim("qwen3-30b-a3b", "arxiv", sched, 1.3,
+                       n_requests=n_requests)
+        got[sched] = {"ttft_mean": m["ttft_mean"], "ttft_p99": m["ttft_p99"],
+                      "tbt_mean_ms": m["tbt_mean"] * 1e3,
+                      "tbt_p99_ms": m["tbt_p99"] * 1e3,
+                      "e2e_mean": m["e2e_mean"]}
+        rows.append({"sched": sched, **got[sched],
+                     **{f"paper_{k}": v for k, v in PAPER[sched].items()}})
+    print(table(rows, ["sched", "ttft_mean", "paper_ttft_mean", "ttft_p99",
+                       "paper_ttft_p99", "tbt_mean_ms", "paper_tbt_mean_ms",
+                       "tbt_p99_ms", "paper_tbt_p99_ms", "e2e_mean"],
+                "Table 6 — Qwen on arXiv @1.3 req/s"))
+    ttft_ratio = got["layered"]["ttft_mean"] / got["chunked"]["ttft_mean"]
+    paper_ratio = PAPER["layered"]["ttft_mean"] / PAPER["chunked"]["ttft_mean"]
+    checks = {
+        # paper: mean TTFT drops >50% at the same rate
+        "ttft_halved": ttft_ratio < 0.55,
+        "ttft_ratio_matches_paper": abs(ttft_ratio - paper_ratio) < 0.15,
+        "tbt_mean_lower": got["layered"]["tbt_mean_ms"]
+        < got["chunked"]["tbt_mean_ms"],
+        "tails_tighter": got["layered"]["ttft_p99"]
+        < got["chunked"]["ttft_p99"],
+    }
+    print(f"\nTTFT ratio layered/chunked: {ttft_ratio:.2f} "
+          f"(paper {paper_ratio:.2f})")
+    print("checks:", checks)
+    result = {"rows": rows, "ttft_ratio": ttft_ratio,
+              "paper_ratio": paper_ratio, "checks": checks,
+              "pass": all(checks.values())}
+    save("table6_latency", result)
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Table 8: energy per token + latency at steady-state SLO-compliant
+operating points on arXiv.
+
+Paper (Qwen):  chunked @1.3 -> 56.6 J/tok*; layered @1.3 -> 51.7 (-9%);
+               layered @1.6 -> 44.2 (-22%), i.e. +23% usable capacity.
+Paper (GPT):   chunked @2.1 -> 37.4; layered @2.1 -> 34.3 (-8%);
+               layered @2.7 -> 29.8 (-20%), +29% capacity.
+(*paper's units are mJ/tok in Table 2 and J/tok in Table 8; magnitudes
+match mJ/tok — we report mJ/tok.)
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import run_sim, save, table
+
+POINTS = [
+    # (model, sched, rate)
+    ("qwen3-30b-a3b", "chunked", 1.3),
+    ("qwen3-30b-a3b", "layered", 1.3),
+    ("qwen3-30b-a3b", "layered", 1.6),
+    ("gpt-oss-20b", "chunked", 2.1),
+    ("gpt-oss-20b", "layered", 2.1),
+    ("gpt-oss-20b", "layered", 2.7),
+]
+
+PAPER_MJ = {("qwen3-30b-a3b", "chunked", 1.3): 56.6,
+            ("qwen3-30b-a3b", "layered", 1.3): 51.7,
+            ("qwen3-30b-a3b", "layered", 1.6): 44.2,
+            ("gpt-oss-20b", "chunked", 2.1): 37.4,
+            ("gpt-oss-20b", "layered", 2.1): 34.3,
+            ("gpt-oss-20b", "layered", 2.7): 29.8}
+
+
+def main(n_requests: int = 120) -> dict:
+    rows = []
+    got = {}
+    for model, sched, rate in POINTS:
+        m, _ = run_sim(model, "arxiv", sched, rate, n_requests=n_requests)
+        got[(model, sched, rate)] = m["energy_per_token_mj"]
+        rows.append({
+            "model": model.split("-")[0], "sched": sched, "rate": rate,
+            "ttft_mean": m["ttft_mean"], "tbt_mean_ms": m["tbt_mean"] * 1e3,
+            "mj_tok": m["energy_per_token_mj"],
+            "paper_mj": PAPER_MJ[(model, sched, rate)],
+            "slo": m["slo_attainment"],
+        })
+    print(table(rows, ["model", "sched", "rate", "ttft_mean", "tbt_mean_ms",
+                       "mj_tok", "paper_mj", "slo"],
+                "Table 8 — energy per output token (arXiv)"))
+    q, g = "qwen3-30b-a3b", "gpt-oss-20b"
+    same_rate_q = got[(q, "layered", 1.3)] / got[(q, "chunked", 1.3)] - 1
+    high_rate_q = got[(q, "layered", 1.6)] / got[(q, "chunked", 1.3)] - 1
+    same_rate_g = got[(g, "layered", 2.1)] / got[(g, "chunked", 2.1)] - 1
+    high_rate_g = got[(g, "layered", 2.7)] / got[(g, "chunked", 2.1)] - 1
+    checks = {
+        # same-rate savings (paper -8..-9%); accept -4% or better
+        "qwen_same_rate_saves": same_rate_q < -0.04,
+        "gpt_same_rate_saves": same_rate_g < -0.04,
+        # higher sustainable rate still cheaper than chunked baseline
+        "qwen_high_rate_saves_more": high_rate_q < same_rate_q,
+        "gpt_high_rate_saves_more": high_rate_g < same_rate_g,
+        # layered at the higher rate remains SLO-compliant (>=90%)
+        "qwen_high_rate_slo": [r for r in rows if r["model"] == "qwen3" and
+                               r["rate"] == 1.6][0]["slo"] >= 0.9,
+    }
+    print("\nsavings: qwen same-rate "
+          f"{same_rate_q:+.1%} (paper -9%), high-rate {high_rate_q:+.1%} "
+          f"(paper -22%); gpt same-rate {same_rate_g:+.1%} (paper -8%), "
+          f"high-rate {high_rate_g:+.1%} (paper -20%)")
+    print("checks:", checks)
+    result = {"rows": rows,
+              "savings": {"qwen_same": same_rate_q, "qwen_high": high_rate_q,
+                          "gpt_same": same_rate_g, "gpt_high": high_rate_g},
+              "checks": checks, "pass": all(checks.values())}
+    save("table8_energy", result)
+    return result
+
+
+if __name__ == "__main__":
+    main()

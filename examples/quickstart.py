@@ -1,0 +1,65 @@
+"""Quickstart: build a tiny MoE model, serve three requests with LAYERED
+PREFILL through the real engine, and print per-request latency plus the
+expert-load savings vs chunked prefill.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.base import make_scheduler
+from repro.models.model import DecoderModel
+from repro.serving.engine import Engine
+
+
+def build():
+    # a reduced Qwen3-MoE-family model (same structure, CPU-sized)
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    cfg = dataclasses.replace(cfg, n_layers=4)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def serve(cfg, model, params, scheduler: str):
+    sched = make_scheduler(scheduler, model.n_blocks, n_slots=4,
+                           quantum=16, token_budget=32)
+    eng = Engine(model, params, sched, n_slots=4, max_len=256)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, n).tolist()
+               for n in (48, 64, 24)]
+    rids = [eng.submit(p, max_new_tokens=8) for p in prompts]
+    eng.run()
+    return eng, rids
+
+
+def main() -> None:
+    cfg, model, params = build()
+    results = {}
+    for scheduler in ("chunked", "layered"):
+        eng, rids = serve(cfg, model, params, scheduler)
+        results[scheduler] = eng
+        print(f"\n=== {scheduler} prefill ===")
+        for rid in rids:
+            r = eng.requests[rid]
+            toks = eng.outputs[rid]
+            print(f"  req {rid}: prompt={r.prompt_len:3d} tok "
+                  f"ttft_iter={r.ttft():4.0f} generated={toks}")
+        print(f"  iterations: {eng.iteration}, "
+              f"expert-load: {eng.expert_load_bytes / 1e6:.1f} MB")
+
+    c, l = results["chunked"], results["layered"]
+    assert c.outputs == l.outputs, "schedulers must agree on outputs!"
+    print(f"\nidentical outputs; layered expert-load "
+          f"{l.expert_load_bytes / max(c.expert_load_bytes, 1):.0%} "
+          "of chunked (the paper's Table 7 mechanism, on a real router)")
+
+
+if __name__ == "__main__":
+    main()

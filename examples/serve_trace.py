@@ -1,0 +1,59 @@
+"""End-to-end serving driver: replay a Poisson trace through the
+discrete-event simulator under every scheduler and print the paper's
+headline metrics side by side (TTFT / TBT / SLO attainment / energy /
+expert traffic).
+
+Run:  PYTHONPATH=src python examples/serve_trace.py \
+          [--model qwen3-30b-a3b] [--dataset arxiv] [--rate 1.3] [--n 150]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, list_configs
+from repro.serving.cost_model import H100X2, TPU_V5E
+from repro.serving.metrics import SLOConfig, request_metrics
+from repro.serving.simulator import Simulator
+from repro.serving.traffic import DATASETS, poisson_trace
+
+SCHEDULERS = ("static", "continuous", "chunked", "layered", "hybrid")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="qwen3-30b-a3b",
+                    choices=list_configs())
+    ap.add_argument("--dataset", default="arxiv", choices=list(DATASETS))
+    ap.add_argument("--rate", type=float, default=1.3)
+    ap.add_argument("--n", type=int, default=150)
+    ap.add_argument("--hw", default="h100x2", choices=["h100x2", "tpu_v5e"])
+    ap.add_argument("--ttft-slo", type=float, default=10.0)
+    ap.add_argument("--tbt-slo", type=float, default=0.125)
+    args = ap.parse_args()
+
+    cfg = get_config(args.model)
+    hw = H100X2 if args.hw == "h100x2" else TPU_V5E
+    trace = poisson_trace(DATASETS[args.dataset], args.rate, args.n, seed=0)
+    slo = SLOConfig(args.ttft_slo, args.tbt_slo)
+
+    print(f"{args.model} on {args.dataset} @ {args.rate} req/s "
+          f"({args.n} requests, {hw.name})")
+    hdr = (f"{'scheduler':<12}{'TTFT(s)':>9}{'p99':>8}{'TBT(ms)':>9}"
+           f"{'p99':>8}{'SLO':>7}{'mJ/tok':>8}{'expert TB':>11}")
+    print(hdr)
+    print("-" * len(hdr))
+    for name in SCHEDULERS:
+        sim = Simulator(cfg, name, hw, n_slots=128,
+                        token_budget=512, quantum=512)
+        res = sim.run(trace)
+        m = request_metrics(res.requests, slo)
+        print(f"{name:<12}{m['ttft_mean']:>9.2f}{m['ttft_p99']:>8.2f}"
+              f"{m['tbt_mean'] * 1e3:>9.1f}{m['tbt_p99'] * 1e3:>8.1f}"
+              f"{m['slo_attainment']:>7.2f}"
+              f"{res.energy_per_token * 1e3:>8.1f}"
+              f"{res.total_expert_bytes / 1e12:>11.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""The four assigned input shapes + per-(arch, shape) applicability rules
+and ShapeDtypeStruct input builders for the multi-pod dry-run.
+
+Shapes (from the brief):
+  train_4k     seq=4096    global_batch=256   (training step)
+  prefill_32k  seq=32768   global_batch=32    (inference prefill)
+  decode_32k   seq=32768   global_batch=128   (one decode token, 32k KV)
+  long_500k    seq=524288  global_batch=1     (long-context decode)
+
+``long_500k`` requires sub-quadratic attention: it runs for the SSM/hybrid
+archs (xlstm, recurrentgemma) and is SKIPPED for pure full-attention archs
+(see DESIGN.md §Shape skips). ``applicable`` returns (ok, reason).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+# archs with sub-quadratic token mixing (bounded attention state)
+_SUBQUADRATIC = {"recurrentgemma-9b", "xlstm-1.3b"}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k":
+        if cfg.name in _SUBQUADRATIC or cfg.sliding_window:
+            return True, ""
+        return False, ("full quadratic attention at 524k context — skipped "
+                       "per DESIGN.md §Shape skips (run for SSM/hybrid and "
+                       "sliding-window variants)")
+    if shape.kind == "train" and cfg.name == "whisper-base":
+        return True, ""   # enc-dec trains with stub encoder embeddings
+    return True, ""
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.kind in ("prefill", "decode"):
+        # VLM backbones prepend n_patches stub patch embeddings to the text
+        # tokens — the KV cache must cover them too.
+        return shape.seq_len + cfg.vision.n_patches
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, model=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step function
+    lowered for this (arch, shape) — weak-type-correct, no allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        if cfg.encoder.enabled:
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.encoder.enabled:
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.n_frames, cfg.d_model), cfg.dtype)
+        if cfg.vision.enabled:
+            specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision.n_patches, cfg.d_model), cfg.dtype)
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["offsets"] = jax.ShapeDtypeStruct((b,), i32)
+    return specs
+
+
+def cache_specs(model, shape: InputShape) -> Optional[list]:
+    if shape.kind == "train":
+        return None
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch,
+                                 cache_len_for(model.cfg, shape)))

@@ -1,0 +1,19 @@
+# The paper's primary contribution: prefill scheduling with the layer axis
+# as a first-class scheduling unit (plus the token-axis baselines it is
+# evaluated against, and the §4.3 hybrid generalization).
+from repro.core.base import SCHEDULERS, Scheduler, make_scheduler
+from repro.core.chunked import ChunkedPrefillScheduler
+from repro.core.continuous import ContinuousBatchingScheduler
+from repro.core.hybrid import HybridPrefillScheduler
+from repro.core.layered import LayeredPrefillScheduler
+from repro.core.plan import (IterationPlan, PrefillSlice, Request,
+                             RequestState)
+from repro.core.static_batch import StaticBatchScheduler
+
+__all__ = [
+    "Scheduler", "SCHEDULERS", "make_scheduler",
+    "IterationPlan", "PrefillSlice", "Request", "RequestState",
+    "ChunkedPrefillScheduler", "LayeredPrefillScheduler",
+    "ContinuousBatchingScheduler", "StaticBatchScheduler",
+    "HybridPrefillScheduler",
+]

@@ -1,0 +1,117 @@
+"""Scheduler base: request table, admission, decode bookkeeping.
+
+Schedulers are *pure control logic* — no jax, no timing. The same scheduler
+instance drives either the real-execution engine (serving/engine.py) or the
+discrete-event simulator (serving/simulator.py); that the two share this
+code is what makes the functional-equivalence tests meaningful.
+
+Invariants enforced here and asserted by tests/test_scheduler_invariants.py:
+  I1 (stall-free): every iteration's plan decodes EVERY request in DECODE
+      state — decode work is never preempted by prefill.
+  I2 (coverage): over a request's lifetime its prefill slices tile the
+      rectangle [0, prompt_len) x [0, n_blocks) exactly once — each layer
+      sees each prompt token exactly once (the paper's anti-amplification
+      property is I2 plus the per-iteration shape of the slices).
+  I3 (order): slices of a request are emitted in block-major/token-major
+      order consistent with causal dependencies.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+
+
+class Scheduler:
+    name = "base"
+
+    def __init__(self, n_blocks: int, *, n_slots: int = 16,
+                 token_budget: int = 512, quantum: int = 512):
+        self.n_blocks = n_blocks
+        self.n_slots = n_slots
+        self.token_budget = token_budget
+        self.quantum = quantum
+        self.requests: Dict[int, Request] = {}
+        self.waiting: deque = deque()
+        self.iteration = 0
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        assert req.req_id not in self.requests
+        req.state = RequestState.WAITING
+        self.requests[req.req_id] = req
+        self.waiting.append(req.req_id)
+
+    def finish(self, req_id: int) -> None:
+        """Executor signals EOS / client cancel before max_new_tokens."""
+        self.requests[req_id].state = RequestState.DONE
+
+    @property
+    def active(self) -> List[Request]:
+        return [r for r in self.requests.values()
+                if r.state in (RequestState.PREFILL, RequestState.DECODE)]
+
+    @property
+    def n_active(self) -> int:
+        return len(self.active)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.n_active > 0
+
+    def decode_ids(self) -> List[int]:
+        return sorted(r.req_id for r in self.requests.values()
+                      if r.state == RequestState.DECODE)
+
+    # -- admission ------------------------------------------------------------
+
+    def admit(self, now: float, limit: Optional[int] = None) -> List[int]:
+        admitted = []
+        while self.waiting and self.n_active < self.n_slots:
+            if limit is not None and len(admitted) >= limit:
+                break
+            rid = self.waiting.popleft()
+            r = self.requests[rid]
+            r.state = RequestState.PREFILL
+            r.admit_time = now
+            admitted.append(rid)
+        return admitted
+
+    # -- per-iteration hooks ----------------------------------------------------
+
+    def next_plan(self, now: float = 0.0) -> IterationPlan:
+        raise NotImplementedError
+
+    def _finish_decode_bookkeeping(self, plan: IterationPlan) -> None:
+        """Advance decode counters; retire requests that hit max_new_tokens.
+        The first token of a request is produced by its final prefill slice,
+        so a request entering DECODE already has n_generated == 1."""
+        for rid in plan.decode_ids:
+            r = self.requests[rid]
+            r.n_generated += 1
+            if r.n_generated >= r.max_new_tokens:
+                r.state = RequestState.DONE
+        for sl in plan.prefill:
+            if sl.emits_first_token:
+                r = self.requests[sl.req_id]
+                r.state = RequestState.DECODE
+                r.n_generated = 1
+                if r.max_new_tokens <= 1:
+                    r.state = RequestState.DONE
+        self.iteration += 1
+
+
+SCHEDULERS: Dict[str, type] = {}
+
+
+def register(cls):
+    SCHEDULERS[cls.name] = cls
+    return cls
+
+
+def make_scheduler(name: str, n_blocks: int, **kw) -> Scheduler:
+    if name not in SCHEDULERS:
+        raise KeyError(f"unknown scheduler {name!r}; known: {list(SCHEDULERS)}")
+    return SCHEDULERS[name](n_blocks, **kw)

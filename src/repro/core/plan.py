@@ -1,0 +1,93 @@
+"""Scheduling primitives shared by every scheduler, the engine and the
+discrete-event simulator.
+
+The central abstraction generalizing chunked *and* layered prefill is the
+2-D **PrefillSlice** — a rectangle (token range × block range) of one
+request's prefill work:
+
+  - chunked prefill  : (chunk_i tokens,            ALL blocks)
+  - layered prefill  : (ALL tokens,                group_g blocks)
+  - hybrid (§4.3)    : (chunk_i tokens,            group_g blocks)
+  - continuous (Orca): (ALL tokens,                ALL blocks)
+
+An ``IterationPlan`` is what a scheduler emits per engine iteration: the
+decode batch (every request in DECODE state — stall-freeness is precisely
+the property that this list is never preempted) plus the prefill slices
+co-scheduled with it.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt_len: int
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    # engine-only: actual token ids (None in the simulator)
+    prompt_tokens: Optional[object] = None
+    state: RequestState = RequestState.WAITING
+    # prefill progress
+    tokens_done: int = 0            # prompt tokens fully processed (all blocks)
+    blocks_done: int = 0            # blocks processed for the current chunk
+    n_generated: int = 0
+    # metrics (filled by engine/simulator)
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def remaining_prompt(self) -> int:
+        return self.prompt_len - self.tokens_done
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def tbts(self) -> List[float]:
+        ts = [self.first_token_time] + self.token_times \
+            if self.first_token_time is not None else self.token_times
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+
+@dataclass(frozen=True)
+class PrefillSlice:
+    req_id: int
+    token_start: int
+    token_end: int
+    block_start: int
+    block_end: int
+    emits_first_token: bool = False   # last slice of the request's prefill
+
+    @property
+    def n_tokens(self) -> int:
+        return self.token_end - self.token_start
+
+    @property
+    def n_blocks(self) -> int:
+        return self.block_end - self.block_start
+
+
+@dataclass
+class IterationPlan:
+    decode_ids: List[int] = field(default_factory=list)
+    prefill: List[PrefillSlice] = field(default_factory=list)
+    admitted_ids: List[int] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return not self.decode_ids and not self.prefill

@@ -1,0 +1,97 @@
+"""Pallas TPU decode-attention kernel.
+
+One new query token per sequence attending over a padded slot KV cache with
+per-row valid lengths — the memory-bound stage whose stall-freeness the
+schedulers protect. Grid is (batch, kv_heads): each step streams that kv
+head's cache once from HBM through VMEM while computing all ``group`` query
+heads that share it (GQA reuse), with online softmax over KV tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, kv_blk: int,
+                   scale: float, max_len: int, window: Optional[int]):
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (g, hd)
+    g = q.shape[0]
+    length = len_ref[0]                                    # valid kv entries
+
+    n_kv = max_len // kv_blk
+    hi = jnp.minimum((length + kv_blk - 1) // kv_blk, n_kv)
+    if window is not None:
+        lo = jnp.maximum((length - window) // kv_blk, 0)
+    else:
+        lo = 0
+
+    acc = jnp.zeros((g, q.shape[-1]), jnp.float32)
+    m = jnp.full((g,), NEG_INF, jnp.float32)
+    l = jnp.zeros((g,), jnp.float32)
+
+    def body(t, carry):
+        acc, m, l = carry
+        k = k_ref[0, 0, pl.ds(t * kv_blk, kv_blk)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(t * kv_blk, kv_blk)].astype(jnp.float32)
+        s = q @ k.T                                        # (g, kv_blk)
+        kv_pos = t * kv_blk + jax.lax.iota(jnp.int32, kv_blk)
+        mask = kv_pos[None, :] < length
+        if window is not None:
+            mask &= kv_pos[None, :] >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc, m, l))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array, *,
+                            kv_blk: int = 128,
+                            window: Optional[int] = None,
+                            scale: Optional[float] = None,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); caches: (B, S_max, Hkv, hd); lengths: (B,) int32
+    (#valid entries INCLUDING the new token's K/V already written).
+    Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    s_max, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    assert s_max % kv_blk == 0, (s_max, kv_blk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # g-major grouping (q head h -> kv head h % hkv): gather each kv
+    # head's g query heads into a contiguous block for the kernel.
+    qg = q.reshape(b, g, hkv, hd).transpose(0, 2, 1, 3)
+    kt = k_cache.transpose(0, 2, 1, 3)    # (B, Hkv, S, hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, kv_blk=kv_blk, scale=scale,
+                               max_len=s_max, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+            pl.BlockSpec((1, 1, g, hd), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s_max, hd), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s_max, hd), lambda bi, hi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.transpose(0, 2, 1, 3).reshape(b, h, hd)

@@ -1,0 +1,113 @@
+"""Pallas TPU flash-attention kernel (prefill path).
+
+Causal (optionally sliding-window) self-attention with GQA, online-softmax
+over KV tiles. Tiling is MXU/VMEM-aware: the q tile (q_blk × head_dim) and
+one kv tile (kv_blk × head_dim) plus the (q_blk × kv_blk) score tile live in
+VMEM; accumulation is float32.
+
+Grid: (batch, q_heads, n_q_tiles). The kv BlockSpec index maps a q head to
+its kv head (h % hkv — g-major grouping, matching the model's
+sharding-friendly convention) so GQA never materialises repeated K/V.
+
+This kernel is the TPU analogue of the FlashAttention-3 prefill kernels the
+paper's system uses — the compute-bound stage whose scheduling layered
+prefill rearranges.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kv_blk: int, causal: bool,
+                  window: Optional[int], scale: float, seq_len: int):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (q_blk, hd)
+    q_blk = q.shape[0]
+    q_start = qi * q_blk
+
+    n_kv = seq_len // kv_blk
+    if causal:
+        # tiles beyond the causal frontier contribute nothing
+        hi = jnp.minimum((q_start + q_blk + kv_blk - 1) // kv_blk, n_kv)
+    else:
+        hi = n_kv
+    if window is not None:
+        lo = jnp.maximum((q_start - window) // kv_blk, 0)
+    else:
+        lo = 0
+
+    acc = jnp.zeros((q_blk, q_ref.shape[-1]), jnp.float32)
+    m = jnp.full((q_blk,), NEG_INF, jnp.float32)
+    l = jnp.zeros((q_blk,), jnp.float32)
+
+    q_pos = q_start + jax.lax.iota(jnp.int32, q_blk)
+
+    def body(t, carry):
+        acc, m, l = carry
+        k = k_ref[0, 0, pl.ds(t * kv_blk, kv_blk)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(t * kv_blk, kv_blk)].astype(jnp.float32)
+        s = q @ k.T                                        # (q_blk, kv_blk)
+        kv_pos = t * kv_blk + jax.lax.iota(jnp.int32, kv_blk)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, (acc, m, l))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           q_blk: int = 128, kv_blk: int = 128,
+                           scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd) -> (B, S, H, hd).
+    S must be a multiple of the tile sizes (ops.py pads)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    assert s % q_blk == 0 and s % kv_blk == 0, (s, q_blk, kv_blk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qt = q.transpose(0, 2, 1, 3)      # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)      # (B, Hkv, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_flash_kernel, kv_blk=kv_blk, causal=causal,
+                               window=window, scale=scale, seq_len=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, s // q_blk),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, hd), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, hd),
+                         lambda bi, hi, qi: (bi, hi % hkv, 0, 0)),
+            pl.BlockSpec((1, 1, s, hd),
+                         lambda bi, hi, qi: (bi, hi % hkv, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_blk, hd),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,92 @@
+"""Jit-wrapped public entry points for the Pallas kernels.
+
+On CPU (this container) the kernels execute through Pallas interpret mode —
+bit-accurate algorithm validation without a TPU. On TPU backends they lower
+to Mosaic. ``interpret`` is auto-detected from the default backend; padding
+to tile multiples happens here so the kernels stay shape-strict.
+
+The model plugs these in via ``gmm_fn=`` (MoE) or by swapping the attention
+reference path; correctness of the swap is covered by tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_gmm import moe_gmm_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",
+                                             "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_blk: int = 128,
+                    kv_blk: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Padding-safe wrapper: pads S to tile multiples; padded queries are
+    discarded, padded keys are causally masked out (pos > any real q)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    s0 = q.shape[1]
+    blk = max(q_blk, kv_blk)
+    q_p, _ = _pad_to(q, 1, blk)
+    k_p, _ = _pad_to(k, 1, blk)
+    v_p, _ = _pad_to(v, 1, blk)
+    if not causal and s0 != q_p.shape[1]:
+        # non-causal needs an explicit mask for padded keys; window/causal
+        # paths mask padding structurally.
+        raise ValueError("non-causal flash attention requires S % tile == 0")
+    out = flash_attention_pallas(q_p, k_p, v_p, causal=causal, window=window,
+                                 q_blk=q_blk, kv_blk=kv_blk,
+                                 interpret=interpret)
+    return out[:, :s0]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_blk", "interpret"))
+def decode_attention(q, k_cache, v_cache, lengths, *,
+                     window: Optional[int] = None, kv_blk: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    interpret = _auto_interpret() if interpret is None else interpret
+    k_p, _ = _pad_to(k_cache, 1, kv_blk)
+    v_p, _ = _pad_to(v_cache, 1, kv_blk)
+    return decode_attention_pallas(q, k_p, v_p, lengths, window=window,
+                                   kv_blk=kv_blk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("c_blk", "f_blk", "interpret"))
+def moe_gmm(x, w_gate, w_up, w_down, *, c_blk: int = 128, f_blk: int = 128,
+            interpret: Optional[bool] = None) -> jax.Array:
+    interpret = _auto_interpret() if interpret is None else interpret
+    x_p, c0 = _pad_to(x, 1, min(c_blk, max(x.shape[1], 1)))
+    wg_p, f0 = _pad_to(w_gate, 2, min(f_blk, max(w_gate.shape[2], 1)))
+    wu_p, _ = _pad_to(w_up, 2, min(f_blk, max(w_up.shape[2], 1)))
+    wd_p, _ = _pad_to(w_down, 1, min(f_blk, max(w_down.shape[1], 1)))
+    out = moe_gmm_pallas(x_p, wg_p, wu_p, wd_p, c_blk=c_blk, f_blk=f_blk,
+                         interpret=interpret)
+    return out[:, :c0]
+
+
+def model_gmm_fn(cfg=None):
+    """Adapter matching models.moe.apply_moe's ``gmm_fn`` contract."""
+    def fn(cfg_, p, buf):
+        return moe_gmm(buf, p["w_gate"], p["w_up"], p["w_down"])
+    return fn

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets for the
+per-kernel shape/dtype sweep tests)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,S,Hkv,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    # g-major GQA grouping (q head h -> kv head h % hkv), matching the
+    # model's sharding-friendly convention.
+    qf = q.reshape(b, s, g, hkv, hd).astype(jnp.float32) * scale
+    scores = jnp.einsum("bqgkd,bskd->bgkqs", qf, k.astype(jnp.float32))
+    pos = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= pos[None, :] > pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgkqs,bskd->bqgkd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,hd); caches: (B,S,Hkv,hd); lengths: (B,) -> (B,H,hd)."""
+    b, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q.reshape(b, g, hkv, hd).astype(jnp.float32) * scale
+    scores = jnp.einsum("bgkd,bskd->bgks", qf, k_cache.astype(jnp.float32))
+    pos = jnp.arange(s)
+    mask = pos[None, :] < lengths[:, None]
+    if window is not None:
+        mask &= pos[None, :] >= (lengths[:, None] - window)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgks,bskd->bgkd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def moe_gmm_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                w_down: jax.Array) -> jax.Array:
+    """x: (E,C,d) -> (E,C,d), fused SwiGLU per expert."""
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", xf, w_gate.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", xf, w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h,
+                      w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh — 16×16 single-pod and 2×16×16 multi-pod — and
+extract memory/cost/collective analyses for the roofline report.
+
+THE FIRST TWO LINES of this file set XLA_FLAGS before any other import
+(jax locks the device count at first init). Do not reorder.
+
+Cost-extraction strategy (single CPU core, exact numbers):
+  1. the FULL model is lowered+compiled with segment scans (compact HLO) —
+     this is the feasibility proof and the source of memory_analysis();
+  2. XLA's cost_analysis counts while-loop bodies ONCE, so flops/bytes/
+     collective-bytes come from two small UNROLLED variants with
+     L1 = remainder + period and L2 = remainder + 2·period layers: per-layer
+     cost is affine in the repeat count, so
+        F(L) = F(L1) + (k-1) · (F(L2) - F(L1)),  k = (L - r) / p
+     is exact for the homogeneous segment structure of every config.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--out DIR]
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+
+from repro.configs import ASSIGNED, get_config          # noqa: E402
+from repro.configs.shapes import (SHAPES, applicable, cache_len_for,  # noqa: E402
+                                  input_specs)
+from repro.launch import analysis            # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.steps import make_step_fn  # noqa: E402
+from repro.models.model import DecoderModel  # noqa: E402
+from repro.sharding.partition import (cache_shardings, default_rules,  # noqa: E402
+                                      moment_shardings, param_shardings,
+                                      sharding_context)
+from repro.training.optimizer import adamw   # noqa: E402
+
+
+def _compile_step(cfg, shape, mesh, rules, *, unroll: bool):
+    """Lower + compile one step function for (cfg, shape) on mesh."""
+    remat = shape.kind == "train"
+    model = DecoderModel(cfg, unroll=unroll, remat=remat)
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = param_shardings(params_struct, mesh, rules)
+    in_specs = input_specs(cfg, shape, model)
+
+    def batch_shardings():
+        bspec = rules.get("batch")
+        n = 1
+        for a in (bspec or ()):
+            n *= mesh.shape[a]
+        if shape.global_batch % max(n, 1) != 0:
+            bspec = None
+        return {
+            k: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(
+                    bspec, *([None] * (len(v.shape) - 1))))
+            for k, v in in_specs.items()}
+
+    if shape.kind == "train":
+        opt = adamw()
+        step = make_step_fn(model, shape, opt)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        m_shard = moment_shardings(params_struct, mesh, rules)
+        o_shard = type(opt_struct)(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=m_shard, nu=m_shard)
+        args = [params_struct, opt_struct, in_specs]
+        shardings = [p_shard, o_shard, batch_shardings()]
+        donate = (0, 1)
+    else:
+        step = make_step_fn(model, shape)
+        cache_struct = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch,
+                                     cache_len_for(cfg, shape)))
+        c_shard = cache_shardings(cache_struct, mesh, shape.global_batch,
+                                  rules)
+        args = [params_struct, cache_struct, in_specs]
+        shardings = [p_shard, c_shard, batch_shardings()]
+        donate = (1,)
+
+    with mesh, sharding_context(mesh, rules):
+        lowered = jax.jit(step, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _layer_split(cfg):
+    """(period, repeats, remainder) of the dominant segment structure."""
+    segs = cfg.scan_segments()
+    main = max(segs, key=lambda s: len(s[0]) * s[1])
+    p = len(main[0])
+    k = main[1]
+    r = cfg.n_layers - p * k
+    return p, k, r
+
+
+def _measure(compiled) -> dict:
+    cost = analysis.extract_cost(compiled)
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = analysis.collective_bytes(hlo)
+    return {"flops": cost["flops"], "bytes": cost["bytes"],
+            "coll": dict(coll)}
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               analyze: bool = True, verbose: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, reason = applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(mesh)
+
+    # 1. feasibility proof + memory: full model, scanned segments
+    _, compiled_full = _compile_step(cfg, shape, mesh, rules, unroll=False)
+    mem = analysis.extract_memory(compiled_full)
+    compile_s = time.time() - t0
+
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok", "compile_s": compile_s,
+           "peak_memory_per_device": mem}
+
+    if analyze:
+        p, k, r = _layer_split(cfg)
+        if k >= 3:
+            l1, l2 = r + p, r + 2 * p
+            cfg1 = dataclasses.replace(cfg, n_layers=l1)
+            cfg2 = dataclasses.replace(cfg, n_layers=l2)
+            _, c1 = _compile_step(cfg1, shape, mesh, rules, unroll=True)
+            _, c2 = _compile_step(cfg2, shape, mesh, rules, unroll=True)
+            m1, m2 = _measure(c1), _measure(c2)
+            scale = k - 1
+            flops = m1["flops"] + scale * (m2["flops"] - m1["flops"])
+            bytes_ = m1["bytes"] + scale * (m2["bytes"] - m1["bytes"])
+            coll = {kk: m1["coll"].get(kk, 0)
+                    + scale * (m2["coll"].get(kk, 0) - m1["coll"].get(kk, 0))
+                    for kk in m2["coll"]}
+            out["extrapolation"] = {"L1": l1, "L2": l2, "period": p,
+                                    "repeats": k, "remainder": r,
+                                    "m1": m1, "m2": m2}
+        else:
+            _, c_direct = _compile_step(cfg, shape, mesh, rules, unroll=True)
+            m = _measure(c_direct)
+            flops, bytes_, coll = m["flops"], m["bytes"], m["coll"]
+
+        rep = analysis.RooflineReport(
+            arch=arch, shape=shape_name, mesh=mesh_name,
+            n_chips=512 if multi_pod else 256,
+            hlo_flops=flops, hlo_bytes=bytes_,
+            coll_bytes=coll.get("total", 0), coll_by_kind=coll,
+            model_flops=analysis.model_flops_estimate(cfg, shape),
+            peak_memory_per_device=mem)
+        out.update(rep.to_dict())
+        out["status"] = "ok"
+
+    out["total_s"] = time.time() - t0
+    if verbose:
+        msg = (f"[dryrun] {arch} × {shape_name} × {mesh_name}: ok "
+               f"compile={compile_s:.0f}s total={out['total_s']:.0f}s")
+        if analyze:
+            msg += (f" flops/dev={out['hlo_flops']:.3e}"
+                    f" bytes/dev={out['hlo_bytes']:.3e}"
+                    f" coll/dev={out['collective_bytes']:.3e}"
+                    f" bottleneck={out['bottleneck']}")
+        if mem is not None:
+            msg += f" mem/dev={mem/1e9:.2f}GB"
+        print(msg, flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.all else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached", flush=True)
+                    continue
+                try:
+                    # roofline numbers only needed on the single-pod mesh
+                    rec = dryrun_one(arch, shape, multi_pod=mp,
+                                     analyze=not mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": str(e)}
+                    failures.append(tag)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=2)
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print("[dryrun] all requested combinations compiled", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Step functions lowered by the dry-run and used by the launchers.
+
+One factory per input-shape kind:
+  train   : (params, opt_state, batch)        -> (params, opt_state, metrics)
+  prefill : (params, cache, batch)            -> (last_logits, cache)
+  decode  : (params, cache, batch)            -> (logits, cache)
+
+All are mesh-agnostic; distribution comes from in_shardings (params/cache)
+plus the shard_hint constraints inside the model.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models.model import DecoderModel
+from repro.training.optimizer import AdamW, adamw
+from repro.training.train import make_train_step
+
+
+def make_step_fn(model: DecoderModel, shape: InputShape,
+                 opt: Optional[AdamW] = None) -> Callable:
+    cfg = model.cfg
+    if shape.kind == "train":
+        opt = opt or adamw(lr=3e-4, schedule="cosine", total_steps=1000,
+                           warmup=100)
+        return make_train_step(model, opt, cfg.encoder.enabled)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, cache, batch):
+            tokens = batch["tokens"]
+            b = tokens.shape[0]
+            offset = jnp.zeros((b,), jnp.int32)
+            enc_frames = batch.get("enc_out")
+            enc_out = (model.encode(params, enc_frames)
+                       if enc_frames is not None else None)
+            logits, cache, _ = model.forward(
+                params, tokens, cache=cache, offset=offset, enc_out=enc_out,
+                extra_embeds=batch.get("extra_embeds"))
+            return logits[:, -1], cache
+        return prefill_step
+
+    def decode_step(params, cache, batch):
+        logits, cache, _ = model.forward(
+            params, batch["tokens"], cache=cache, offset=batch["offsets"])
+        return logits[:, -1], cache
+    return decode_step
+
+
+def make_layered_step_fn(model: DecoderModel, *, group: tuple,
+                         prefill_len: int):
+    """The paper's fused iteration: decode one token for the whole batch
+    across ALL blocks while prefilling ``prefill_len`` tokens of one request
+    through blocks [group[0], group[1]). Lowered by the dry-run for the
+    paper's own models to prove the layered schedule shards."""
+    b0, b1 = group
+
+    def layered_step(params, cache, batch):
+        from repro.serving.engine import _scatter_cache, _slice_cache
+        # decode part (all blocks)
+        logits, cache, _ = model.forward(
+            params, batch["tokens"], cache=cache, offset=batch["offsets"],
+            valid=batch["valid"][:, None])
+        # prefill part (one layer group over slot 0's cache row, boundary
+        # activations in/out — the layered-prefill carry state)
+        hidden = batch["hidden"]        # (1, prefill_len, d)
+        positions = jnp.arange(prefill_len, dtype=jnp.int32)[None]
+        offset = jnp.zeros((1,), jnp.int32)
+        row = _slice_cache(cache, jnp.int32(0))
+        h_out, row, _ = model.run_blocks(
+            params, hidden, b0, b1 - b0, positions=positions, offset=offset,
+            cache=row)
+        cache = _scatter_cache(cache, row, jnp.int32(0))
+        return logits[:, -1], h_out, cache
+    return layered_step

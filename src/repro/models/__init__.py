@@ -1,0 +1,6 @@
+from repro.models.config import (BlockSpec, EncoderConfig, MLAConfig,
+                                 ModelConfig, MoEConfig, reduced)
+from repro.models.model import DecoderModel
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "EncoderConfig",
+           "BlockSpec", "DecoderModel", "reduced"]

@@ -1,0 +1,477 @@
+"""Attention mixers: GQA (full / sliding-window / local), DeepSeek-V2 MLA,
+and whisper-style cross attention — with a uniform KV-cache protocol.
+
+Cache protocol (per attention block):
+  GQA:  {"k": (B, S_max, n_kv, hd), "v": (B, S_max, n_kv, hd)}
+  MLA:  {"ckv": (B, S_max, kv_lora), "kr": (B, S_max, rope_dim)}
+  cross (extra, read-only after admission): {"xk": (B, T, n_kv, hd), "xv": ...}
+
+The *filled length* is tracked by the caller as ``offset`` (B,) int32: new
+tokens are written at [offset, offset+S) per row and attention is masked to
+positions < offset + S (plus causal/window masks).  This is the slot-cache
+layout used by the serving engine and by the decode dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.config import (MIXER_GQA, MIXER_LOCAL, MIXER_MLA, BlockSpec,
+                                 ModelConfig)
+from repro.models.layers import _dense
+from repro.sharding.partition import active_context
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(cfg: ModelConfig, spec: BlockSpec, key) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 12)
+    if spec.mixer == MIXER_MLA:
+        m = cfg.mla
+        qdim = cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+        p = {}
+        if m.q_lora_rank:
+            p["w_dq"] = _dense(ks[0], (d, m.q_lora_rank), dt)
+            p["q_norm"] = layers.init_norm(cfg, m.q_lora_rank)
+            p["w_uq"] = _dense(ks[1], (m.q_lora_rank, qdim), dt)
+        else:
+            p["w_q"] = _dense(ks[1], (d, qdim), dt)
+        p["w_dkv"] = _dense(ks[2], (d, m.kv_lora_rank), dt)
+        p["kv_norm"] = layers.init_norm(cfg, m.kv_lora_rank)
+        p["w_kr"] = _dense(ks[3], (d, m.qk_rope_dim), dt)
+        p["w_uk"] = _dense(ks[4], (m.kv_lora_rank, cfg.n_heads * m.qk_nope_dim), dt)
+        p["w_uv"] = _dense(ks[5], (m.kv_lora_rank, cfg.n_heads * m.v_head_dim), dt)
+        p["w_o"] = _dense(ks[6], (cfg.n_heads * m.v_head_dim, d), dt)
+        return p
+    p = {
+        "w_q": _dense(ks[0], (d, cfg.n_heads * hd), dt),
+        "w_k": _dense(ks[1], (d, cfg.n_kv_heads * hd), dt),
+        "w_v": _dense(ks[2], (d, cfg.n_kv_heads * hd), dt),
+        "w_o": _dense(ks[3], (cfg.n_heads * hd, d), dt),
+    }
+    if spec.cross_attn:
+        p["x_q"] = _dense(ks[4], (d, cfg.n_heads * hd), dt)
+        p["x_k"] = _dense(ks[5], (d, cfg.n_kv_heads * hd), dt)
+        p["x_v"] = _dense(ks[6], (d, cfg.n_kv_heads * hd), dt)
+        p["x_o"] = _dense(ks[7], (cfg.n_heads * hd, d), dt)
+        p["x_norm"] = layers.init_norm(cfg)
+    return p
+
+
+def init_cache_attn(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                    max_len: int, dtype=None) -> dict:
+    dt = dtype or cfg.dtype
+    if spec.mixer == MIXER_MLA:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+            "kr": jnp.zeros((batch, max_len, m.qk_rope_dim), dt),
+        }
+    hd = cfg.head_dim_
+    c = {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd), dt),
+    }
+    if spec.cross_attn:
+        t = cfg.encoder.n_frames
+        c["xk"] = jnp.zeros((batch, t, cfg.n_kv_heads, hd), dt)
+        c["xv"] = jnp.zeros((batch, t, cfg.n_kv_heads, hd), dt)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention (pure jnp reference path; the Pallas kernels in
+# repro.kernels implement the same contract and are swapped in via ops)
+# ---------------------------------------------------------------------------
+
+
+# query-chunk size above which attention switches to the memory-bounded
+# chunked path (never materialises Sq×Skv scores — the pure-jnp analogue of
+# the Pallas flash kernel's tiling; keeps dry-run activation memory real).
+_CHUNK_THRESHOLD = 1024
+_Q_CHUNK = 512
+
+
+def masked_attention(q: Array, k: Array, v: Array, q_pos: Array, kv_pos: Array,
+                     kv_valid: Array, *, causal: bool,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None) -> Array:
+    """q: (B,Sq,H,hd); k/v: (B,Skv,Hkv,hd'); q_pos: (B,Sq); kv_pos: (B,Skv)
+    or (Skv,); kv_valid: (B,Skv) bool. GQA is handled by head grouping."""
+    sq_ = q.shape[1]
+    if sq_ >= _CHUNK_THRESHOLD and sq_ % _Q_CHUNK == 0:
+        return _masked_attention_chunked(q, k, v, q_pos, kv_pos, kv_valid,
+                                         causal=causal, window=window,
+                                         scale=scale)
+    return _masked_attention_dense(q, k, v, q_pos, kv_pos, kv_valid,
+                                   causal=causal, window=window, scale=scale)
+
+
+def _masked_attention_dense(q, k, v, q_pos, kv_pos, kv_valid, *, causal,
+                            window=None, scale=None):
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else (1.0 / (q.shape[-1] ** 0.5))
+    # g-major grouping: query head h serves kv head h % hkv, so the merged
+    # head dim shards contiguously over TP (DESIGN.md §Hardware adaptation;
+    # a checkpoint loader permutes w_q columns to match).
+    qf = q.reshape(b, sq, g, hkv, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqgkd,bskd->bgkqs", qf, kf) * scale
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (b, kv_pos.shape[0]))
+    mask = kv_valid[:, None, None, None, :]
+    if causal:
+        mask = mask & (kv_pos[:, None, None, None, :] <= q_pos[:, None, None, :, None])
+    if window is not None:
+        mask = mask & (kv_pos[:, None, None, None, :]
+                       > q_pos[:, None, None, :, None] - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    # guard fully-masked rows (e.g. padding queries)
+    w = jnp.where(jnp.any(mask, axis=-1, keepdims=True), w, 0.0)
+    out = jnp.einsum("bgkqs,bskd->bqgkd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+_KV_CHUNK = 1024
+
+
+def _masked_attention_chunked(q, k, v, q_pos, kv_pos, kv_valid, *, causal,
+                              window=None, scale=None):
+    """lax.map over query chunks of _Q_CHUNK; within each query chunk the
+    KV axis is processed by an online-softmax lax.scan over _KV_CHUNK
+    blocks when S_kv is long (flash-attention recurrence in pure jnp) —
+    peak score buffer is (B, Hkv, G, Qc, KVc) and the S_q x S_kv matrix
+    never reaches HBM. Same numerics as dense (fp32 accumulators)."""
+    b, sq, h, hd = q.shape
+    n_chunks = sq // _Q_CHUNK
+    qc = q.reshape(b, n_chunks, _Q_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(b, n_chunks, _Q_CHUNK).transpose(1, 0, 2)
+    skv = k.shape[1]
+    # flash only where the (Qc x Skv) buffer truly explodes: at 4k-train
+    # scale the kv-scan's backward residuals cost MORE than the dense
+    # score buffer (measured on minicpm train_4k: 2.9 -> 8.2 s memory;
+    # and the fusion-free byte count also loses slightly at 32 k prefill)
+    flash = skv >= 65536 and skv % _KV_CHUNK == 0
+
+    def one(args):
+        q_i, pos_i = args
+        if flash:
+            return _masked_attention_flash(q_i, k, v, pos_i, kv_pos,
+                                           kv_valid, causal=causal,
+                                           window=window, scale=scale)
+        return _masked_attention_dense(q_i, k, v, pos_i, kv_pos, kv_valid,
+                                       causal=causal, window=window,
+                                       scale=scale)
+
+    out = jax.lax.map(one, (qc, pc))            # (n_chunks, B, cq, H, hd')
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, out.shape[-1])
+
+
+def _masked_attention_flash(q, k, v, q_pos, kv_pos, kv_valid, *, causal,
+                            window=None, scale=None):
+    """Online-softmax scan over KV chunks (exact, fp32 running max/denom)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    g = h // hkv
+    n_kv = skv // _KV_CHUNK
+    scale = scale if scale is not None else (1.0 / (hd ** 0.5))
+    qf = q.reshape(b, sq, g, hkv, hd).astype(jnp.float32) * scale
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (b, skv))
+
+    kc = k.reshape(b, n_kv, _KV_CHUNK, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_kv, _KV_CHUNK, hkv, hdv).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(b, n_kv, _KV_CHUNK).transpose(1, 0, 2)
+    mc = kv_valid.reshape(b, n_kv, _KV_CHUNK).transpose(1, 0, 2)
+
+    acc0 = jnp.zeros((b, g, hkv, sq, hdv), jnp.float32)
+    m0 = jnp.full((b, g, hkv, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, g, hkv, sq), jnp.float32)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        k_i, v_i, pos_i, ok_i = blk
+        s_blk = jnp.einsum("bqgkd,bskd->bgkqs", qf,
+                           k_i.astype(jnp.float32))
+        mask = ok_i[:, None, None, None, :]
+        if causal:
+            mask = mask & (pos_i[:, None, None, None, :]
+                           <= q_pos[:, None, None, :, None])
+        if window is not None:
+            mask = mask & (pos_i[:, None, None, None, :]
+                           > q_pos[:, None, None, :, None] - window)
+        s_blk = jnp.where(mask, s_blk, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+        p_blk = jnp.where(mask, jnp.exp(s_blk - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p_blk, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgkqs,bskd->bgkqd", p_blk, v_i.astype(jnp.float32))
+        return (acc, m_new, l), None
+
+    (acc, _, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, pc, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.where((l > 0)[..., None], out, 0.0)
+    # (B, G, Hkv, Sq, hdv) -> (B, Sq, H, hdv); h = g * hkv + kv (g-major)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hdv)
+    return out.astype(q.dtype)
+
+
+def _write_cache(buf: Array, new: Array, offset: Array,
+                 row_ok: Optional[Array] = None) -> Array:
+    """Write ``new`` (B,S,...) into ``buf`` (B,S_max,...) at per-row offsets.
+    Rows with ``row_ok == False`` keep their previous contents (the engine's
+    full-pool decode step must not corrupt slots that are idle or mid-way
+    through a layered prefill)."""
+    def row(b, n, off):
+        idx = (off,) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, n, idx)
+    written = jax.vmap(row)(buf, new.astype(buf.dtype), offset)
+    if row_ok is None:
+        return written
+    sel = row_ok.reshape((-1,) + (1,) * (buf.ndim - 1))
+    return jnp.where(sel, written, buf)
+
+
+# ---------------------------------------------------------------------------
+# GQA / local / sliding-window attention block mixer
+# ---------------------------------------------------------------------------
+
+
+def apply_gqa(cfg: ModelConfig, spec: BlockSpec, p, x: Array, *,
+              positions: Array, offset: Optional[Array] = None,
+              cache: Optional[dict] = None,
+              valid: Optional[Array] = None,
+              positions3: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    """x: (B,S,D). With a cache: writes the S new tokens at ``offset`` and
+    attends over the whole (masked) cache. Without: plain causal attention
+    over x (training path)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["w_q"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["w_k"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["w_v"]).reshape(b, s, cfg.n_kv_heads, hd)
+
+    if cfg.pos_emb == "mrope":
+        p3 = positions3 if positions3 is not None else layers.position_plane(positions)
+        q = layers.apply_mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.pos_emb in ("rope", "rope_partial"):
+        pct = cfg.rotary_pct if cfg.pos_emb == "rope_partial" else 1.0
+        q = layers.apply_rope(q, positions, cfg.rope_theta, pct)
+        k = layers.apply_rope(k, positions, cfg.rope_theta, pct)
+
+    # Windowed (local) attention in the no-cache training forward does
+    # fine under auto-sharding (recurrentgemma train: 6.2 -> 6.9 s when
+    # ungated); full attention and every cached path need the shard_map
+    # (qwen3-moe train collective is 7x worse without it).
+    skip = cache is None and spec.window is not None
+    plan = None if skip else _attn_shard_plan(cfg, b, s)
+    if cache is not None:
+        row_ok = valid.any(axis=-1) if valid is not None else None
+        kbuf = _write_cache(cache["k"], k, offset, row_ok)
+        vbuf = _write_cache(cache["v"], v, offset, row_ok)
+        s_max = kbuf.shape[1]
+        kv_pos = jnp.arange(s_max, dtype=jnp.int32)
+        kv_valid = kv_pos[None, :] < (offset + s)[:, None]
+        if plan is not None:
+            out = _sharded_masked_attention(plan, q, kbuf, vbuf, positions,
+                                            kv_pos, kv_valid, causal=True,
+                                            window=spec.window)
+        else:
+            out = masked_attention(q, kbuf, vbuf, positions, kv_pos,
+                                   kv_valid, causal=True,
+                                   window=spec.window)
+        new_cache = dict(cache, k=kbuf, v=vbuf)
+    else:
+        kv_valid = jnp.ones((b, s), dtype=bool)
+        if plan is not None:
+            out = _sharded_masked_attention(plan, q, k, v, positions,
+                                            positions, kv_valid, causal=True,
+                                            window=spec.window)
+        else:
+            out = masked_attention(q, k, v, positions, positions, kv_valid,
+                                   causal=True, window=spec.window)
+        new_cache = None
+    return out.reshape(b, s, -1) @ p["w_o"], new_cache
+
+
+def _attn_shard_plan(cfg: ModelConfig, b: int, s: int, n_kv: int = None,
+                     force_mha: bool = False):
+    """shard_map plan for head-parallel attention: batch over the batch
+    axes, q heads over the TP axes (g-major grouping makes each device's
+    contiguous head block cover whole kv groups), K/V replicated over TP
+    inside the region (gathered once per layer at the boundary — cheap for
+    GQA's few kv heads). Falls back to XLA auto-sharding when shapes do
+    not divide (see DESIGN.md §Perf).
+
+    Two modes: "gqa" (few kv heads — K/V replicated over TP inside) and
+    "mha" (n_kv == n_heads, e.g. MLA/stablelm — K/V heads sharded with the
+    query heads). Gated to s >= 256: for decode steps the XLA-auto
+    sharding (seq-sharded KV stream) is strictly better than gathering
+    K/V per layer (measured: recurrentgemma decode collective 0.4 ms ->
+    129 ms under an ungated shard_map)."""
+    ctx = active_context()
+    if ctx is None or s < 256:
+        return None
+    n_kv = cfg.n_kv_heads if n_kv is None else n_kv
+    mesh, rules = ctx
+    tp = rules.get("tp") or ()
+    batch = rules.get("batch") or ()
+    tp_n = 1
+    for a in tp:
+        tp_n *= mesh.shape.get(a, 1)
+    b_n = 1
+    for a in batch:
+        b_n *= mesh.shape.get(a, 1)
+    if tp_n <= 1 or b_n <= 1 or b % b_n:
+        return None
+    h_loc = cfg.n_heads // tp_n
+    if cfg.n_heads % tp_n:
+        return None
+    if force_mha and n_kv == cfg.n_heads:
+        mode = "mha"                     # kv heads shard with q heads (MLA)
+    elif n_kv < tp_n and h_loc % n_kv == 0:
+        # GQA with fewer kv heads than the TP degree — the regime where
+        # XLA-auto loses (it cannot shard the kv-head dim and falls into
+        # full rematerialization of the 2-D-sharded cache). Plain MHA
+        # archs (stablelm) do BETTER under auto-sharding: measured
+        # stablelm train 1.61 -> 2.50 s with an ungated mha mode.
+        mode = "gqa"
+    else:
+        return None
+    return mesh, tuple(batch), tuple(tp), mode
+
+
+def _sharded_masked_attention(plan, q, k, v, q_pos, kv_pos, kv_valid, *,
+                              causal, window, scale=None):
+    mesh, batch_axes, tp_axes, mode = plan
+    kv_spec = (P(batch_axes, None, tp_axes, None) if mode == "mha"
+               else P(batch_axes, None, None, None))
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (q.shape[0],
+                                                 kv_pos.shape[0]))
+
+    def body(q_, k_, v_, qp_, kp_, kvv_):
+        return masked_attention(q_, k_, v_, qp_, kp_, kvv_, causal=causal,
+                                window=window, scale=scale)
+
+    ba = batch_axes
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(ba, None, tp_axes, None), kv_spec, kv_spec,
+                  P(ba, None), P(ba, None), P(ba, None)),
+        out_specs=P(ba, None, tp_axes, None), check_rep=False,
+    )(q, k, v, q_pos, kv_pos, kv_valid)
+
+
+def apply_cross_attn(cfg: ModelConfig, p, x: Array, cache: dict) -> Array:
+    """Whisper decoder cross attention over precomputed encoder K/V."""
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["x_q"]).reshape(b, s, cfg.n_heads, hd)
+    t = cache["xk"].shape[1]
+    kv_valid = jnp.ones((b, t), dtype=bool)
+    q_pos = jnp.zeros((b, s), dtype=jnp.int32)
+    out = masked_attention(q, cache["xk"], cache["xv"], q_pos,
+                           jnp.arange(t, dtype=jnp.int32), kv_valid,
+                           causal=False)
+    return out.reshape(b, s, -1) @ p["x_o"]
+
+
+def encode_cross_kv(cfg: ModelConfig, p, enc_out: Array) -> Tuple[Array, Array]:
+    """Project encoder output once at admission; stored in the cache."""
+    b, t, d = enc_out.shape
+    hd = cfg.head_dim_
+    xk = (enc_out @ p["x_k"]).reshape(b, t, cfg.n_kv_heads, hd)
+    xv = (enc_out @ p["x_v"]).reshape(b, t, cfg.n_kv_heads, hd)
+    return xk, xv
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 Multi-head Latent Attention
+# ---------------------------------------------------------------------------
+
+
+def apply_mla(cfg: ModelConfig, spec: BlockSpec, p, x: Array, *,
+              positions: Array, offset: Optional[Array] = None,
+              cache: Optional[dict] = None,
+              valid: Optional[Array] = None,
+              positions3: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+
+    if m.q_lora_rank:
+        cq = layers.apply_norm(cfg, p["q_norm"], x @ p["w_dq"])
+        q = (cq @ p["w_uq"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    else:
+        q = (x @ p["w_q"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = layers.apply_norm(cfg, p["kv_norm"], x @ p["w_dkv"])   # (B,S,r)
+    kr = (x @ p["w_kr"])[:, :, None, :]                           # (B,S,1,rope)
+    kr = layers.apply_rope(kr, positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        row_ok = valid.any(axis=-1) if valid is not None else None
+        ckv_buf = _write_cache(cache["ckv"], ckv, offset, row_ok)
+        kr_buf = _write_cache(cache["kr"], kr, offset, row_ok)
+        s_kv = ckv_buf.shape[1]
+        kv_valid = (jnp.arange(s_kv, dtype=jnp.int32)[None, :]
+                    < (offset + s)[:, None])
+        ckv_att, kr_att = ckv_buf, kr_buf
+        new_cache = {"ckv": ckv_buf, "kr": kr_buf}
+    else:
+        s_kv = s
+        kv_valid = jnp.ones((b, s), dtype=bool)
+        ckv_att, kr_att = ckv, kr
+        new_cache = None
+
+    # Decompress (naive path; the absorbed path lives in kernels/ops as a
+    # perf variant): k_nope (B,Skv,H,nope), v (B,Skv,H,vdim)
+    k_nope = (ckv_att @ p["w_uk"]).reshape(b, s_kv, h, m.qk_nope_dim)
+    vv = (ckv_att @ p["w_uv"]).reshape(b, s_kv, h, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_att[:, :, None, :], (b, s_kv, h, m.qk_rope_dim))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kv_pos = jnp.arange(s_kv, dtype=jnp.int32)
+    scale = 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+    plan = _attn_shard_plan(cfg, b, s, n_kv=h, force_mha=True)
+    if plan is not None:
+        out = _sharded_masked_attention(plan, q_full, k, vv, positions,
+                                        kv_pos, kv_valid, causal=True,
+                                        window=spec.window, scale=scale)
+    else:
+        out = masked_attention(q_full, k, vv, positions, kv_pos, kv_valid,
+                               causal=True, window=spec.window, scale=scale)
+    return out.reshape(b, s, -1) @ p["w_o"], new_cache
+
+
+def apply_mixer_attn(cfg: ModelConfig, spec: BlockSpec, p, x: Array, **kw):
+    if spec.mixer == MIXER_MLA:
+        return apply_mla(cfg, spec, p, x, **kw)
+    assert spec.mixer in (MIXER_GQA, MIXER_LOCAL), spec.mixer
+    return apply_gqa(cfg, spec, p, x, **kw)

@@ -1,0 +1,163 @@
+"""Shared primitive layers: norms, positional embeddings, MLPs.
+
+Pure-JAX, pytree-parameter style: each layer is an ``init_*`` returning a
+param pytree plus an ``apply_*`` function. No framework dependency.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=cfg.param_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=cfg.param_dtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard / partial / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> Array:
+    """Inverse frequencies for a rotary dim (must be even)."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x: Array, cos: Array, sin: Array) -> Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: Array, positions: Array, theta: float,
+               rotary_pct: float = 1.0) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) int32. Rotates the first
+    ``rotary_pct`` fraction of the head dim (stablelm-style partial RoPE)."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv = rope_freqs(rot, theta)                      # (rot/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x_rot = _rotate(x_rot.astype(jnp.float32), cos, sin).astype(x.dtype)
+    return jnp.concatenate([x_rot, x_pass], axis=-1) if x_pass.shape[-1] else x_rot
+
+
+def apply_mrope(x: Array, positions3: Array, theta: float,
+                sections: Tuple[int, ...]) -> Array:
+    """Qwen2-VL M-RoPE. positions3: (3, B, S) — (temporal, height, width)
+    position ids; ``sections`` splits the rot/2 frequency channels among the
+    three axes. For pure text all three id planes are equal, which makes
+    M-RoPE degenerate to standard RoPE (the property tests assert this)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang_all = positions3.astype(jnp.float32)[..., None] * inv  # (3, B, S, hd/2)
+    # which position plane drives each frequency channel
+    import numpy as _np
+    sel = _np.repeat(_np.arange(len(sections)), _np.asarray(sections))  # (hd/2,)
+    assert sel.shape[0] == hd // 2, (sections, hd)
+    ang = ang_all[sel, :, :, _np.arange(hd // 2)]     # (hd/2, B, S)
+    ang = jnp.moveaxis(ang, 0, -1)                    # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def position_plane(positions: Array) -> Array:
+    """Text-only M-RoPE position ids: (B,S) -> (3,B,S) with equal planes."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU / GeGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    std = scale if scale is not None else (1.0 / jnp.sqrt(fan_in))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense(ks[0], (d, f), dt),
+            "w_up": _dense(ks[1], (d, f), dt),
+            "w_down": _dense(ks[2], (f, d), dt),
+        }
+    return {"w_up": _dense(ks[0], (d, f), dt), "w_down": _dense(ks[1], (f, d), dt)}
+
+
+def apply_mlp(cfg: ModelConfig, p, x: Array) -> Array:
+    if cfg.activation in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+        return (act * u) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 3)
+    p = {"tok": _dense(ks[0], (cfg.vocab_size, cfg.d_model), cfg.param_dtype, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense(ks[1], (cfg.d_model, cfg.vocab_size), cfg.param_dtype)
+    if cfg.pos_emb == "learned":
+        p["pos"] = _dense(ks[2], (cfg.max_seq_len, cfg.d_model), cfg.param_dtype,
+                          scale=0.02)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens: Array) -> Array:
+    return p["tok"][tokens].astype(cfg.dtype)
+
+
+def unembed(cfg: ModelConfig, p, x: Array) -> Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

@@ -1,0 +1,145 @@
+"""RecurrentGemma's recurrent block: causal depthwise conv + RG-LRU
+(Real-Gated Linear Recurrent Unit), arXiv:2402.19427.
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)),  c = 8
+
+The recurrence is linear in h, so prefill uses ``jax.lax.associative_scan``
+(TPU-friendly log-depth scan) rather than a sequential loop; decode is a
+single fused step.  State per block: conv tail (B, conv_width-1, W) and the
+LRU hidden (B, W).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense
+
+Array = jax.Array
+_C = 8.0
+_N_GATE_BLOCKS = 16
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def _block_diag(x: Array, w: Array) -> Array:
+    """x: (..., W) @ block-diagonal w: (NB, W/NB, W/NB) -> (..., W)."""
+    nb, bw, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bw))
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return yb.reshape(x.shape)
+
+
+def init_rglru(cfg: ModelConfig, key) -> dict:
+    d, w = cfg.d_model, lru_width(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a^2 ~ U[0.81, 0.999] (paper's init)
+    u = jax.random.uniform(ks[0], (w,), minval=0.81, maxval=0.999)
+    log_a = 0.5 * jnp.log(u)                              # log a
+    a_param = jnp.log(jnp.expm1(-log_a / _C))             # inv softplus
+    return {
+        "w_x": _dense(ks[1], (d, w), dt),                 # input branch
+        "w_gate": _dense(ks[2], (d, w), dt),              # multiplicative gate
+        "w_out": _dense(ks[3], (w, d), dt),
+        "conv_w": _dense(ks[4], (cfg.conv_width, w), dt, scale=0.1),
+        "conv_b": jnp.zeros((w,), dt),
+        # Griffin uses block-diagonal gate projections (block_width blocks);
+        # this is also what keeps the gates tensor-parallel friendly.
+        "w_input_gate": _dense(ks[5], (_N_GATE_BLOCKS, w // _N_GATE_BLOCKS,
+                                       w // _N_GATE_BLOCKS), dt, scale=0.02),
+        "w_rec_gate": _dense(ks[6], (_N_GATE_BLOCKS, w // _N_GATE_BLOCKS,
+                                     w // _N_GATE_BLOCKS), dt, scale=0.02),
+        "a_param": a_param.astype(jnp.float32),
+    }
+
+
+def init_cache_rglru(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    w = lru_width(cfg)
+    dt = dtype or cfg.dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def _causal_conv(p, x: Array, conv_state: Optional[Array],
+                 valid: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Depthwise causal conv1d. x: (B,S,W). Returns (y, new_tail).
+
+    With ``valid`` (B,S), the returned tail is taken at each row's true
+    length (the last cw-1 REAL inputs), so right-padding never leaks into
+    the decode-time conv state. Assumes valid tokens are a prefix."""
+    cw = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B,S+cw-1,W)
+    y = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i] for i in range(cw))
+    y = y + p["conv_b"]
+    if valid is None:
+        new_tail = xp[:, -(cw - 1):, :]
+    else:
+        lengths = valid.sum(axis=-1).astype(jnp.int32)      # (B,)
+        idx = lengths[:, None] + jnp.arange(cw - 1)[None]   # xp rows [L, L+cw-2]
+        new_tail = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    return y, new_tail
+
+
+def _lru_scan(a: Array, b: Array, h0: Array) -> Array:
+    """Linear recurrence h_t = a_t h_{t-1} + b_t over axis=1 via an
+    associative scan; h0: (B,W) initial state. Returns h for every t."""
+    # fold h0 into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(cfg: ModelConfig, p, x: Array, *,
+                cache: Optional[dict] = None,
+                valid: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    """x: (B,S,D) -> (out (B,S,D), new_cache). ``valid`` (B,S) turns masked
+    timesteps into identity state updates (a=1, b=0) so padding never
+    perturbs the recurrent state."""
+    b, s, d = x.shape
+    gate = jax.nn.gelu(x @ p["w_gate"])                   # (B,S,W)
+    xin = x @ p["w_x"]                                    # (B,S,W)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_tail = _causal_conv(p, xin, conv_state, valid)
+
+    xf = xc.astype(jnp.float32)
+    rg = jax.nn.sigmoid(_block_diag(xf, p["w_rec_gate"].astype(jnp.float32)))
+    ig = jax.nn.sigmoid(_block_diag(xf, p["w_input_gate"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p["a_param"]) * rg      # (B,S,W)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = mult * (ig * xf)
+    if valid is not None:
+        v = valid[..., None]
+        a = jnp.where(v, a, 1.0)
+        bt = jnp.where(v, bt, 0.0)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, xin.shape[-1]), jnp.float32)
+    h = _lru_scan(a, bt, h0)                              # (B,S,W)
+
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        row_ok = valid.any(-1)[:, None] if valid is not None else None
+        tail = new_tail.astype(cache["conv"].dtype)
+        if row_ok is not None:
+            tail = jnp.where(row_ok[..., None], tail, cache["conv"])
+        new_cache = {"conv": tail, "h": h[:, -1]}
+    return y, new_cache

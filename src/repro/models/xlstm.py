@@ -1,0 +1,325 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, fully
+parallelizable-in-principle) and sLSTM (scalar memory with recurrent gate
+connections).  Both use exponential gating with the max-stabilizer state m.
+
+State per mLSTM block:  C (B,H,dk,dv), n (B,H,dk), m (B,H), conv tail.
+State per sLSTM block:  c, n, h (B,D_inner), m (B,D_inner).
+
+Prefill runs a time-major ``lax.scan`` (the chunkwise-parallel mLSTM form is
+a recorded perf-iteration candidate); decode is one step.  The xLSTM-1.3b
+config uses the paper's 7:1 mLSTM:sLSTM interleave.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense
+
+Array = jax.Array
+
+
+def _inner(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return max(cfg.n_heads, 1)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ModelConfig, key) -> dict:
+    d, di = cfg.d_model, _inner(cfg)
+    h = _heads(cfg)
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 10)
+    return {
+        "w_up": _dense(ks[0], (d, di), dt),
+        "w_z": _dense(ks[1], (d, di), dt),                 # output gate branch
+        "conv_w": _dense(ks[2], (4, di), dt, scale=0.1),
+        "conv_b": jnp.zeros((di,), dt),
+        "w_q": _dense(ks[3], (di, di), dt),
+        "w_k": _dense(ks[4], (di, di), dt),
+        "w_v": _dense(ks[5], (di, di), dt),
+        "w_if": _dense(ks[6], (di, 2 * h), dt, scale=0.02),  # i,f gate logits
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(dt),
+        "w_down": _dense(ks[7], (di, d), dt),
+    }
+
+
+def init_cache_mlstm(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    di = _inner(cfg)
+    h = _heads(cfg)
+    dk = di // h
+    return {
+        "C": jnp.zeros((batch, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype or cfg.dtype),
+    }
+
+
+def _conv4(p, x: Array, tail: Optional[Array],
+           valid: Optional[Array] = None) -> Tuple[Array, Array]:
+    cw = p["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i] for i in range(cw))
+    if valid is None:
+        new_tail = xp[:, -(cw - 1):, :]
+    else:
+        lengths = valid.sum(axis=-1).astype(jnp.int32)
+        idx = lengths[:, None] + jnp.arange(cw - 1)[None]
+        new_tail = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    return jax.nn.silu(y + p["conv_b"]), new_tail
+
+
+def _mlstm_step(q, k, v, log_i, log_f, state):
+    """One timestep. q,k,v: (B,H,dk); log_i/log_f: (B,H)."""
+    C, n, m = state
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    C = f_p[..., None] * C + i_p[..., None] * (k[..., :, None] * v[..., None, :])
+    n = f_p * n + i_p * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = jnp.einsum("bhkv,bhk->bhv", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+_CHUNK_W = 128
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f, state, valid_sb=None):
+    """Chunkwise-parallel mLSTM (§Perf iteration: xlstm train_4k).
+
+    Exact reformulation of the per-step recurrence: with F_t = cumsum(log_f)
+    and g_t = log_i_t - F_t, the stabilizer is m_t = F_t + M_t where
+    M_t = max(m_0, cummax_{j<=t} g_j), the contribution of step j at time t
+    is exp(g_j - M_t) k_j v_j^T, and the carry-in state scales by
+    exp(m_0 - M_t). All exponents are <= 0 by construction. Sequential
+    length drops from S to S/W (W = _CHUNK_W) and the intra-chunk term becomes
+    a masked matmul — this is what makes 4k-token mLSTM training fit HBM
+    (the per-step scan saved a (B,H,dk,dk) matrix per timestep for the
+    backward pass).
+
+    q,k,v: (B,S,H,dk) fp32; log_i/log_f: (B,S,H); state: (C, n, m).
+    Returns (state', h (B,S,H,dk)).
+    """
+    b, s_len, hh, dk = q.shape
+    w_ = _CHUNK_W
+    nc = s_len // w_
+
+    def to_chunks(x):
+        return x.reshape((b, nc, w_) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic, fc = to_chunks(log_i), to_chunks(log_f)
+    mask_c = (to_chunks(valid_sb) if valid_sb is not None
+              else jnp.ones((nc, b, w_), bool))
+
+    causal = jnp.tril(jnp.ones((w_, w_), bool))
+
+    def chunk_step(st, inp):
+        C0, n0, m0 = st                       # (B,H,dk,dk) (B,H,dk) (B,H)
+        q_i, k_i, v_i, li, lf, ok = inp       # (B,W,H,dk) ... (B,W)
+        li = jnp.where(ok[:, :, None], li, -1e30)
+        lf = jnp.where(ok[:, :, None], lf, 0.0)
+        F = jnp.cumsum(lf, axis=1)            # (B,W,H)
+        g = li - F
+        M = jnp.maximum(jax.lax.cummax(g, axis=1), m0[:, None])  # (B,W,H)
+        m_i = F + M
+
+        # intra-chunk: scores_ij = (q_i . k_j) exp(g_j - M_i), j <= i
+        qh = q_i.transpose(0, 2, 1, 3)        # (B,H,W,dk)
+        kh = k_i.transpose(0, 2, 1, 3)
+        vh = v_i.transpose(0, 2, 1, 3)
+        dots = jnp.einsum("bhid,bhjd->bhij", qh, kh)
+        expo = (g.transpose(0, 2, 1)[:, :, None, :]
+                - M.transpose(0, 2, 1)[:, :, :, None])
+        okj = ok[:, None, None, :]            # (B,1,1,W)
+        keep = causal[None, None] & okj
+        # mask BEFORE exp: j>i entries have positive exponents (overflow)
+        scores = dots * jnp.exp(jnp.where(keep, expo, -1e30))
+        h_intra = jnp.einsum("bhij,bhjd->bhid", scores, vh)
+
+        # inter-chunk: carry-in state scaled by exp(m0 - M_i)
+        a = jnp.exp(m0[:, None] - M).transpose(0, 2, 1)   # (B,H,W)
+        h_inter = jnp.einsum("bhid,bhde->bhie", qh, C0) * a[..., None]
+        num = h_inter + h_intra
+        qn0 = jnp.einsum("bhid,bhd->bhi", qh, n0) * a
+        denom = qn0 + jnp.sum(scores, axis=-1)
+        h = num / jnp.maximum(jnp.abs(denom), 1.0)[..., None]
+
+        # end-of-chunk state
+        M_W = M[:, -1]                        # (B,H)
+        F_W = F[:, -1]                        # (B,H)
+        decay = jnp.exp(g - M_W[:, None])     # (B,W,H), <= 1
+        decay = decay * ok[:, :, None]
+        C = jnp.exp(m0 - M_W)[..., None, None] * C0 + jnp.einsum(
+            "bhjd,bhje->bhde", kh * decay.transpose(0, 2, 1)[..., None], vh)
+        n = jnp.exp(m0 - M_W)[..., None] * n0 + jnp.sum(
+            kh * decay.transpose(0, 2, 1)[..., None], axis=2)
+        m = F_W + M_W
+        return (C, n, m), h.transpose(0, 2, 1, 3)   # back to (B,W,H,dk)
+
+    state, hs = jax.lax.scan(chunk_step, state,
+                             (qc, kc, vc, ic, fc, mask_c))
+    h = hs.swapaxes(0, 1).reshape(b, s_len, hh, dk)
+    return state, h
+
+
+def apply_mlstm(cfg: ModelConfig, p, x: Array, *,
+                cache: Optional[dict] = None,
+                valid: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    b, s, d = x.shape
+    di = _inner(cfg)
+    hh = _heads(cfg)
+    dk = di // hh
+    xin = x @ p["w_up"]
+    z = x @ p["w_z"]
+    xc, new_tail = _conv4(p, xin, cache["conv"] if cache else None, valid)
+
+    q = (xc @ p["w_q"]).reshape(b, s, hh, dk).astype(jnp.float32) / (dk ** 0.5)
+    k = (xc @ p["w_k"]).reshape(b, s, hh, dk).astype(jnp.float32) / (dk ** 0.5)
+    v = (xin @ p["w_v"]).reshape(b, s, hh, dk).astype(jnp.float32)
+    gates = xc.astype(jnp.float32) @ p["w_if"].astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    log_i, f_raw = gates[..., :hh], gates[..., hh:]
+    log_f = -jax.nn.softplus(-f_raw)                       # log sigmoid(f)
+
+    if cache is not None:
+        state = (cache["C"], cache["n"], cache["m"])
+    else:
+        state = (jnp.zeros((b, hh, dk, dk), jnp.float32),
+                 jnp.zeros((b, hh, dk), jnp.float32),
+                 jnp.full((b, hh), -1e30, jnp.float32))
+
+    if s % _CHUNK_W == 0 and s >= 2 * _CHUNK_W:
+        vb = valid.astype(bool) if valid is not None else None
+        state, hs_bshd = _mlstm_chunkwise(q, k, v, log_i, log_f, state,
+                                          valid_sb=vb)
+        h = hs_bshd.reshape(b, s, di).astype(x.dtype)
+    else:
+        valid_sb = (jnp.ones((s, b), bool) if valid is None
+                    else valid.T.astype(bool))
+
+        def step(st, inp):
+            qt, kt, vt, it, ft, vm = inp
+            new_st, h = _mlstm_step(qt, kt, vt, it, ft, st)
+            # masked steps keep the old state verbatim (C, n, m untouched)
+            st = jax.tree_util.tree_map(
+                lambda nw, old: jnp.where(
+                    vm.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, old),
+                new_st, st)
+            return st, h
+
+        xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+              log_i.swapaxes(0, 1), log_f.swapaxes(0, 1), valid_sb)
+        state, hs = jax.lax.scan(step, state, xs)          # hs: (S,B,H,dk)
+        h = hs.swapaxes(0, 1).reshape(b, s, di).astype(x.dtype)
+
+    out = (h * jax.nn.silu(z)) @ p["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": state[0], "n": state[1], "m": state[2],
+                     "conv": new_tail.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    h = _heads(cfg)
+    dh = d // h
+    dt = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    return {
+        # input weights for z,i,f,o
+        "w_zifo": _dense(ks[0], (d, 4 * d), dt),
+        "b_zifo": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]).astype(dt),
+        # block-diagonal (per-head) recurrent weights for z,i,f,o
+        "r_zifo": _dense(ks[1], (4, h, dh, dh), dt, scale=0.02),
+        "w_up": _dense(ks[2], (d, 2 * d), dt),
+        "w_down": _dense(ks[3], (d, d), dt),               # after GLU halves
+    }
+
+
+def init_cache_slstm(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(cfg: ModelConfig, p, xt: Array, state):
+    """xt: (B,D). Sequential by construction (recurrent gate connections)."""
+    c, n, h, m = state
+    b, d = xt.shape
+    hh = _heads(cfg)
+    dh = d // hh
+    wx = xt.astype(jnp.float32) @ p["w_zifo"].astype(jnp.float32) + p["b_zifo"].astype(jnp.float32)
+    hheads = h.reshape(b, hh, dh)
+    rec = jnp.einsum("bhd,ghde->gbhe", hheads, p["r_zifo"].astype(jnp.float32))
+    rec = rec.reshape(4, b, d)
+    z_raw, i_raw, f_raw, o_raw = jnp.split(wx, 4, axis=-1)
+    z = jnp.tanh(z_raw + rec[0])
+    log_i = i_raw + rec[1]
+    log_f = -jax.nn.softplus(-(f_raw + rec[2]))            # log sigmoid
+    o = jax.nn.sigmoid(o_raw + rec[3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * z
+    n = f_p * n + i_p
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new)
+
+
+def apply_slstm(cfg: ModelConfig, p, x: Array, *,
+                cache: Optional[dict] = None,
+                valid: Optional[Array] = None) -> Tuple[Array, Optional[dict]]:
+    b, s, d = x.shape
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+                 jnp.zeros((b, d), jnp.float32), jnp.full((b, d), -1e30, jnp.float32))
+
+    if valid is None:
+        valid = jnp.ones((b, s), dtype=bool)
+
+    def step(st, inp):
+        xt, vt = inp
+        new = _slstm_step(cfg, p, xt, st)
+        st = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(vt[:, None], n, o), new, st)
+        return st, st[2]
+
+    state, hs = jax.lax.scan(step, state, (x.swapaxes(0, 1), valid.T))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                  # (B,S,D)
+
+    # post up-projection (GLU)
+    u = h @ p["w_up"]
+    a, g = jnp.split(u, 2, axis=-1)
+    out = (a * jax.nn.sigmoid(g)) @ p["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": state[0], "n": state[1], "h": state[2], "m": state[3]}
+    return out, new_cache

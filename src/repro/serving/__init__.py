@@ -1,0 +1,4 @@
+from repro.serving.engine import Engine
+from repro.serving.metrics import SLOConfig, request_metrics
+
+__all__ = ["Engine", "SLOConfig", "request_metrics"]

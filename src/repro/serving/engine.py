@@ -1,0 +1,333 @@
+"""The serving engine: executes IterationPlans from any scheduler against a
+REAL JAX model. This is the functional-correctness half of the evaluation
+(the temporal half is serving/simulator.py, which drives the same scheduler
+classes through an analytic hardware model).
+
+Execution model per iteration:
+
+  1. admissions — allocate a KV slot; for enc-dec models run the encoder
+     and install per-block cross-attention K/V into the slot.
+  2. prefill slices — each slice is a (token-range × block-range) rectangle.
+     Block ranges are static per jit-cache entry (the TPU analogue of the
+     paper's CUDA-graph buckets); token ranges are padded to power-of-two
+     buckets with a validity mask. Boundary activations between layer
+     groups are stashed on the engine (this is layered prefill's carry
+     state). The final slice computes the request's FIRST token.
+  3. decode — ONE fixed-shape step over the whole slot pool: every slot
+     decodes one token; non-decoding slots are masked (their KV writes and
+     recurrent-state updates are suppressed — see models/attention._write_cache
+     and the valid-masking in the recurrent mixers).
+
+Expert-load accounting (paper §5.4): each forward returns per-block expert
+activation counts from the REAL router; the engine takes, per (iteration,
+block), the union of experts activated by decode and by every prefill slice
+touching that block — exactly the set of expert weight loads a fused hybrid
+batch would issue — and accumulates ``bytes = nnz(union) * bytes_per_expert``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.base import Scheduler, make_scheduler
+from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+from repro.models.model import DecoderModel
+from repro.serving.kvcache import SlotAllocator
+
+Array = jax.Array
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def _slice_cache(cache, slot):
+    """Select one slot row (axis 1 — axis 0 is the segment-repeat stack)."""
+    return jax.tree_util.tree_map(
+        lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1), cache)
+
+
+def _scatter_cache(full, row, slot):
+    return jax.tree_util.tree_map(
+        lambda f, r: jax.lax.dynamic_update_slice_in_dim(
+            f, r.astype(f.dtype), slot, axis=1), full, row)
+
+
+class Engine:
+    def __init__(self, model: DecoderModel, params, scheduler, *,
+                 n_slots: int = 8, max_len: int = 512,
+                 eos_token: Optional[int] = None, gmm_fn=None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, model.n_blocks,
+                                       n_slots=n_slots)
+        assert scheduler.n_slots <= n_slots, "scheduler must fit slot pool"
+        self.scheduler: Scheduler = scheduler
+        self.alloc = SlotAllocator(n_slots, max_len)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_token = eos_token
+        self.gmm_fn = gmm_fn
+
+        self.cache = model.init_cache(n_slots, max_len)
+        self.offsets = np.zeros(n_slots, np.int32)       # true filled length
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self.decoding = np.zeros(n_slots, bool)
+
+        self._next_id = 0
+        self.requests: Dict[int, Request] = {}
+        self.prompts: Dict[int, np.ndarray] = {}
+        self.outputs: Dict[int, List[int]] = {}
+        self.stash: Dict[int, Tuple[Array, int]] = {}    # req -> (hidden, len)
+        self.enc_frames: Dict[int, np.ndarray] = {}
+
+        # metrics
+        self.iteration = 0
+        self.expert_load_bytes = 0
+        self.iter_log: List[dict] = []
+        e = self.cfg.moe
+        bytes_per_el = 2 if "16" in self.cfg.param_dtype else 4
+        self._expert_bytes = self.cfg.expert_bytes(bytes_per_el)
+
+        self._jit_embed = {}
+        self._jit_prefill = {}
+        self._jit_decode = jax.jit(self._decode_step_impl)
+        self._jit_encode = jax.jit(self._encode_impl)
+
+    # ------------------------------------------------------------------ API
+
+    def submit(self, prompt_tokens, max_new_tokens: int,
+               enc_frames=None) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        prompt = np.asarray(prompt_tokens, np.int32)
+        req = Request(req_id=rid, prompt_len=len(prompt),
+                      max_new_tokens=max_new_tokens,
+                      arrival_time=float(self.iteration),
+                      prompt_tokens=prompt)
+        self.requests[rid] = req
+        self.prompts[rid] = prompt
+        self.outputs[rid] = []
+        if enc_frames is not None:
+            self.enc_frames[rid] = np.asarray(enc_frames)
+        self.scheduler.submit(req)
+        return rid
+
+    def run(self, max_iterations: int = 10_000) -> None:
+        while self.scheduler.has_work():
+            self.step()
+            if self.iteration > max_iterations:
+                raise RuntimeError("engine did not drain; scheduler stuck?")
+
+    # -------------------------------------------------------------- jit fns
+
+    def _encode_impl(self, params, frames):
+        enc = self.model.encode(params, frames)
+        return enc, self.model.precompute_cross_kv(params, enc)
+
+    def _embed_impl(self, params, tokens, positions):
+        return self.model.embed(params, tokens, positions=positions)
+
+    def _decode_step_impl(self, params, cache, tokens, offsets, valid_rows):
+        """tokens: (n_slots, 1). One decode token for every slot; masked
+        rows are no-ops (state & KV preserved)."""
+        positions = offsets[:, None]
+        valid = valid_rows[:, None]
+        logits, cache, aux = self.model.forward(
+            params, tokens, positions=positions, offset=offsets, cache=cache,
+            valid=valid, gmm_fn=self.gmm_fn, dropless=True)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache, aux["expert_counts"]
+
+    def _prefill_impl(self, start: int, n: int, emit: bool,
+                      params, cache, hidden, valid, slot, offset, length):
+        """hidden: (1, P, d). Static: (start, n, emit, P)."""
+        row = _slice_cache(cache, slot)
+        positions = offset[:, None] + jnp.arange(hidden.shape[1],
+                                                 dtype=jnp.int32)[None]
+        x, row, auxes = self.model.run_blocks(
+            params, hidden, start, n,
+            positions=positions, offset=offset, cache=row, valid=valid,
+            gmm_fn=self.gmm_fn, dropless=True)
+        cache = _scatter_cache(cache, row, slot)
+        counts = jnp.stack([a["expert_counts"] for a in auxes])  # (n, E)
+        token = jnp.int32(-1)
+        if emit:
+            h_last = jnp.take_along_axis(
+                x, (length - 1)[:, None, None], axis=1)[:, 0]
+            logits = self.model.logits(params, h_last)
+            token = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
+        return x, cache, counts, token
+
+    def _get_prefill_fn(self, start: int, n: int, emit: bool):
+        key = (start, n, emit)
+        if key not in self._jit_prefill:
+            self._jit_prefill[key] = jax.jit(
+                functools.partial(self._prefill_impl, start, n, emit))
+        return self._jit_prefill[key]
+
+    def _get_embed_fn(self):
+        if "f" not in self._jit_embed:
+            self._jit_embed["f"] = jax.jit(self._embed_impl)
+        return self._jit_embed["f"]
+
+    # -------------------------------------------------------------- stepping
+
+    def step(self) -> IterationPlan:
+        plan = self.scheduler.next_plan(now=float(self.iteration))
+        block_expert_union = np.zeros(
+            (self.model.n_blocks, max(self.cfg.moe.n_experts, 1)), bool)
+
+        for rid in plan.admitted_ids:
+            self._admit(rid)
+
+        prefill_tokens = 0
+        for sl in plan.prefill:
+            counts = self._exec_prefill_slice(sl)
+            block_expert_union[sl.block_start:sl.block_end] |= counts > 0
+            prefill_tokens += sl.n_tokens
+
+        if plan.decode_ids:
+            counts = self._exec_decode(plan.decode_ids)
+            block_expert_union |= counts > 0
+
+        if self.cfg.moe.enabled:
+            loaded = int(block_expert_union.sum())
+            self.expert_load_bytes += loaded * self._expert_bytes
+        self.iter_log.append({
+            "iteration": self.iteration,
+            "n_decode": len(plan.decode_ids),
+            "prefill_tokens": prefill_tokens,
+            "expert_load_bytes": (int(block_expert_union.sum())
+                                  * self._expert_bytes),
+            "pages_in_use": self.alloc.pages_in_use(),
+        })
+        self.iteration += 1
+        return plan
+
+    # -------------------------------------------------------------- helpers
+
+    def _admit(self, rid: int) -> None:
+        slot = self.alloc.alloc(rid)
+        self.offsets[slot] = 0
+        self.decoding[slot] = False
+        if rid in self.enc_frames:
+            frames = jnp.asarray(self.enc_frames[rid])[None]
+            _, xkv = self._jit_encode(self.params, frames)
+            # install cross K/V into this slot's cache rows
+            for s, seg in enumerate(xkv):
+                for p_idx, kv in enumerate(seg):
+                    if kv is None:
+                        continue
+                    cur = self.cache[s][p_idx]
+                    self.cache[s][p_idx] = dict(
+                        cur,
+                        xk=cur["xk"].at[:, slot].set(kv["xk"][:, 0]),
+                        xv=cur["xv"].at[:, slot].set(kv["xv"][:, 0]),
+                    )
+
+    def _exec_prefill_slice(self, sl: PrefillSlice) -> np.ndarray:
+        """Returns per-block expert counts (n_blocks_of_slice, E)."""
+        rid = sl.req_id
+        slot = self.alloc.slot_of(rid)
+        n_tok = sl.n_tokens
+
+        if sl.block_start == 0:
+            # fresh rectangle row: embed the token range
+            prompt = self.prompts[rid]
+            toks = prompt[sl.token_start:sl.token_end]
+            p = _bucket(n_tok)
+            padded = np.zeros((1, p), np.int32)
+            padded[0, :n_tok] = toks
+            positions = sl.token_start + jnp.arange(p, dtype=jnp.int32)[None]
+            hidden = self._get_embed_fn()(self.params, jnp.asarray(padded),
+                                          positions)
+        else:
+            hidden, stash_len = self.stash[rid]
+            assert stash_len == n_tok, "stash/token-range mismatch"
+            p = hidden.shape[1]
+
+        valid = jnp.arange(p)[None] < n_tok
+        offset = jnp.asarray([sl.token_start], jnp.int32)
+        length = jnp.asarray([n_tok], jnp.int32)
+        fn = self._get_prefill_fn(sl.block_start, sl.n_blocks,
+                                  sl.emits_first_token)
+        x, self.cache, counts, token = fn(
+            self.params, self.cache, hidden, valid, jnp.int32(slot), offset,
+            length)
+
+        if sl.block_end < self.model.n_blocks:
+            self.stash[rid] = (x, n_tok)
+        else:
+            self.stash.pop(rid, None)
+
+        req = self.requests[rid]
+        if sl.block_end == self.model.n_blocks:
+            # tokens fully processed through the stack
+            self.alloc.set_length(rid, sl.token_end)
+            self.offsets[slot] = sl.token_end
+        if sl.emits_first_token:
+            tok = int(token)
+            self._record_token(rid, tok, first=True)
+            self.offsets[slot] = req.prompt_len
+            self.last_tok[slot] = tok
+            # EOS can terminate on the very first token even when the
+            # scheduler already moved the request to DECODE
+            self._maybe_finish(rid, tok, after_first=True)
+            if req.state == RequestState.DECODE:
+                self.decoding[slot] = True
+        return np.asarray(counts)
+
+    def _exec_decode(self, decode_ids: List[int]) -> np.ndarray:
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        valid = np.zeros(self.n_slots, bool)
+        slot_req = {}
+        for rid in decode_ids:
+            slot = self.alloc.slot_of(rid)
+            tokens[slot, 0] = self.last_tok[slot]
+            valid[slot] = True
+            slot_req[slot] = rid
+        next_tok, self.cache, counts = self._jit_decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.offsets), jnp.asarray(valid))
+        next_tok = np.asarray(next_tok)
+        for slot, rid in slot_req.items():
+            tok = int(next_tok[slot])
+            self.offsets[slot] += 1
+            self.last_tok[slot] = tok
+            self._record_token(rid, tok, first=False)
+            self.alloc.set_length(rid, int(self.offsets[slot]))
+            self._maybe_finish(rid, tok)
+        return np.asarray(counts)
+
+    def _record_token(self, rid: int, tok: int, *, first: bool) -> None:
+        req = self.requests[rid]
+        now = float(self.iteration + 1)   # token visible at iteration end
+        self.outputs[rid].append(tok)
+        if first:
+            req.first_token_time = now
+        else:
+            req.token_times.append(now)
+
+    def _maybe_finish(self, rid: int, tok: int,
+                      after_first: bool = False) -> None:
+        req = self.requests[rid]
+        eos = self.eos_token is not None and tok == self.eos_token
+        if eos and req.state != RequestState.DONE:
+            self.scheduler.finish(rid)
+        if req.state == RequestState.DONE:
+            req.finish_time = float(self.iteration + 1)
+            slot = self.alloc.slot_of(rid)
+            self.decoding[slot] = False
+            self.alloc.free(rid)
+            self.stash.pop(rid, None)

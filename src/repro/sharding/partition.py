@@ -1,0 +1,297 @@
+"""Sharding rules: logical-role activation hints + per-parameter specs.
+
+Two pieces:
+
+1. ``shard_hint(x, *roles)`` — inside model code we annotate activations
+   with *logical roles* ("batch", "expert", "tp", ...). When a
+   ``sharding_context`` is active (the launcher/dry-run installs one around
+   tracing), roles resolve to mesh axes and become
+   ``with_sharding_constraint``s; outside any context they are no-ops, so
+   unit tests and the CPU engine never touch device state.
+
+2. ``param_specs(cfg, params)`` — map a parameter pytree to PartitionSpecs
+   by leaf path: Megatron-style tensor parallelism for dense blocks
+   (column-split w_q/w_k/w_v/w_up/w_gate, row-split w_o/w_down), expert
+   parallelism for MoE stacks (experts split over the ``model`` axis),
+   vocab-parallel embedding/unembedding. Scan-stacked leading axes (layer
+   repeats) are automatically skipped.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+def default_rules(mesh: Mesh) -> dict:
+    axes = mesh.axis_names
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    tp = ("model",) if "model" in axes else ()
+    return {
+        "batch": batch or None,
+        "data": ("data",) if "data" in axes else None,
+        "expert": tp or None,
+        "expert_inner": ("data",) if "data" in axes else None,
+        # capacity dim of the (E, C, d) dispatch buffer: co-shard over the
+        # batch axes so the buffer is never materialized unsharded (the
+        # all-gather that otherwise dominates MoE prefill/train collectives)
+        "expert_cap": batch or None,
+        "tp": tp or None,
+        "vocab": tp or None,
+        "seq": tp or None,      # sequence-sharded KV cache / seq parallelism
+        None: None,
+    }
+
+
+@contextmanager
+def sharding_context(mesh: Mesh, rules: Optional[dict] = None):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules or default_rules(mesh))
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def active_context():
+    return getattr(_TLS, "ctx", None)
+
+
+def shard_hint(x, *roles):
+    ctx = active_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = P(*[rules.get(r) for r in roles])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def shard_seq_hint(x):
+    """Residual-stream constraint between blocks: Megatron-style sequence
+    parallelism — the (B, S, D) activation is sharded over batch AND, when S
+    divides the model axis, over sequence, so remat-saved residuals fit HBM
+    at 4k-seq training shapes. No-op outside a sharding context."""
+    ctx = active_context()
+    if ctx is None or x.ndim != 3:
+        return x
+    mesh, rules = ctx
+    tp = rules.get("tp")
+    tp_n = _axes_size(mesh, tp)
+    bspec = rules.get("batch")
+    if x.shape[0] % max(_axes_size(mesh, bspec), 1) != 0:
+        bspec = None
+    if tp_n > 1 and x.shape[1] % tp_n == 0:
+        spec = P(bspec, tp, None)
+    else:
+        spec = P(bspec, None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs
+# ---------------------------------------------------------------------------
+
+# (path-regex, spec-builder(ndim -> trailing dims spec)) — matched against the
+# '/'-joined leaf path; first match wins. Trailing-dim specs are right-aligned
+# so scan-stacked leading axes stay unsharded.
+_PARAM_RULES = [
+    # MoE expert stacks: (E, d, f) / (E, f, d) — expert parallel over the
+    # model axis PLUS tensor-parallel d_ff over the data axis ("expert-TP"):
+    # a 235B-class MoE does not fit 16-way sharding on 16 GB chips, so the
+    # expert FFN dimension is co-sharded and all-gathered/reduced per use.
+    (r"moe/w_(gate|up)$", ("expert", None, "expert_inner")),
+    (r"moe/w_down$", ("expert", "expert_inner", None)),
+    (r"moe/router$", (None, None)),
+    (r"moe/shared/w_(gate|up)$", (None, "tp")),
+    (r"moe/shared/w_down$", ("tp", None)),
+    # Dense MLP: column/row parallel.
+    (r"mlp/w_(gate|up)$", (None, "tp")),
+    (r"mlp/w_down$", ("tp", None)),
+    # Attention projections.
+    (r"attn/w_(q|k|v)$", (None, "tp")),
+    (r"attn/w_o$", ("tp", None)),
+    (r"attn/x_(q|k|v)$", (None, "tp")),
+    (r"attn/x_o$", ("tp", None)),
+    # MLA: keep compressions replicated, decompressions TP.
+    (r"attn/w_(dq|dkv|kr)$", (None, None)),
+    (r"attn/w_(uq|uk|uv)$", (None, "tp")),
+    # RG-LRU / xLSTM inner projections.
+    (r"(rglru|lstm)/w_(in|gate|x|qkv|up)\w*$", (None, "tp")),
+    (r"(rglru|lstm)/w_(out|down|o)\w*$", ("tp", None)),
+    (r"(rglru|lstm)/(a_param|conv_w|conv_b|gates\w*)$", None),
+    # Embedding / unembedding: vocab parallel.
+    (r"embed/tok$", ("vocab", None)),
+    (r"embed/lm_head$", (None, "vocab")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_path(path_str: str, ndim: int, rules: dict) -> P:
+    for pat, trailing in _PARAM_RULES:
+        if re.search(pat, path_str):
+            if trailing is None:
+                return P()
+            tdims = [rules.get(r) for r in trailing]
+            n_trail = len(tdims)
+            if ndim < n_trail:
+                tdims = tdims[-ndim:]
+                n_trail = ndim
+            return P(*([None] * (ndim - n_trail) + tdims))
+    return P()  # replicated by default (norms, biases, scalars)
+
+
+def param_specs(params, mesh: Mesh, rules: Optional[dict] = None):
+    rules = rules or default_rules(mesh)
+
+    def leaf(path, x):
+        spec = spec_for_path(_path_str(path), getattr(x, "ndim", 0), rules)
+        shape = getattr(x, "shape", ())
+        # Divisibility guard: a dim whose global size does not divide its
+        # assigned axes replicates instead (e.g. whisper vocab 51865 or
+        # minicpm 122753 on a 16-way vocab-parallel axis).
+        fixed = [
+            s if (s is None or i >= len(shape)
+                  or shape[i] % _axes_size(mesh, s) == 0) else None
+            for i, s in enumerate(spec)
+        ]
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def param_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
+    specs = param_specs(params, mesh, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache partition specs (serving dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _axes_size(mesh: Mesh, roles) -> int:
+    if roles is None:
+        return 1
+    if isinstance(roles, str):
+        roles = (roles,)
+    n = 1
+    for r in roles:
+        if r in mesh.shape:
+            n *= mesh.shape[r]
+    return n
+
+
+def cache_specs(cache, mesh: Mesh, batch: int,
+                rules: Optional[dict] = None):
+    """PartitionSpecs for a segment-stacked cache pytree.
+
+    Leaf layouts (axis 0 is the segment-repeat stack, axis 1 the slot/batch):
+      k/v/xk/xv  (R, B, S, kvH, hd) — shard batch; shard kv heads over TP
+                 only when divisible (GQA with few kv heads replicates K/V,
+                 Megatron-style).
+      ckv/kr     (R, B, S, r)       — MLA compressed cache: batch only.
+      conv       (R, B, cw-1, W)    — recurrent conv tail: W over TP if divisible.
+      h          (R, B, W)          — LRU state: W over TP if divisible.
+      C/n/m/c    (R, B, ...)        — xLSTM states: batch only.
+    """
+    rules = rules or default_rules(mesh)
+    bspec = rules.get("batch")
+    if batch % max(_axes_size(mesh, bspec), 1) != 0:
+        bspec = None           # e.g. long_500k batch=1: replicate
+    tp = rules.get("tp")
+    tp_n = _axes_size(mesh, tp)
+
+    def leaf(path, x):
+        name = _path_str(path).rsplit("/", 1)[-1]
+        nd = x.ndim
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = bspec
+        if name in ("k", "v", "xk", "xv") and nd == 5:
+            if tp_n > 1 and x.shape[3] % tp_n == 0:
+                spec[3] = tp            # shard kv heads (MHA-ish archs)
+            elif tp_n > 1 and x.shape[2] % tp_n == 0:
+                spec[2] = tp            # GQA few-kv-heads: shard sequence
+        elif name in ("ckv", "kr") and nd == 4:
+            if tp_n > 1 and x.shape[2] % tp_n == 0:
+                spec[2] = tp            # MLA compressed cache: shard sequence
+        elif name == "conv" and nd == 4:
+            if tp_n > 1 and x.shape[3] % tp_n == 0:
+                spec[3] = tp
+        elif name == "h" and nd == 3:
+            if tp_n > 1 and x.shape[2] % tp_n == 0:
+                spec[2] = tp
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def cache_shardings(cache, mesh: Mesh, batch: int,
+                    rules: Optional[dict] = None):
+    specs = cache_specs(cache, mesh, batch, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state partition specs (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+
+def moment_specs(params, mesh: Mesh, rules: Optional[dict] = None):
+    """Adam moments: start from the parameter spec, then shard the largest
+    still-replicated dim over the data axis when divisible (ZeRO-1 — the
+    f32 moments of a 34B+ model do not fit replicated on 16 GB chips)."""
+    rules = rules or default_rules(mesh)
+    data_axes = rules.get("data")
+    data_n = _axes_size(mesh, data_axes)
+
+    def leaf(path, x):
+        base = spec_for_path(_path_str(path), getattr(x, "ndim", 0), rules)
+        shape = getattr(x, "shape", ())
+        base = P(*[s if (s is None or i >= len(shape)
+                         or shape[i] % _axes_size(mesh, s) == 0) else None
+                   for i, s in enumerate(base)])
+        if data_n <= 1 or getattr(x, "ndim", 0) == 0:
+            return base
+        spec = list(base) + [None] * (x.ndim - len(base))
+        used = set()
+        for s_ in spec:
+            for a in ((s_,) if isinstance(s_, str) else (s_ or ())):
+                used.add(a)
+        if any(a in used for a in (data_axes or ())):
+            return P(*spec)
+        # largest replicated dim divisible by the data axis
+        cand = [i for i in range(x.ndim)
+                if spec[i] is None and x.shape[i] % data_n == 0]
+        if cand:
+            i = max(cand, key=lambda j: x.shape[j])
+            spec[i] = data_axes
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def moment_shardings(params, mesh: Mesh, rules: Optional[dict] = None):
+    specs = moment_specs(params, mesh, rules)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                                  is_leaf=lambda s: isinstance(s, P))

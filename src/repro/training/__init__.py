@@ -1,0 +1,5 @@
+from repro.training.optimizer import adamw, cosine_schedule, wsd_schedule
+from repro.training.train import Trainer, make_train_step
+
+__all__ = ["adamw", "wsd_schedule", "cosine_schedule", "Trainer",
+           "make_train_step"]

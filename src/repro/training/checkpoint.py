@@ -1,0 +1,62 @@
+"""msgpack pytree checkpointing (params + optimizer state + step).
+
+Flat-key encoding: every leaf is stored under its '/'-joined tree path with
+dtype/shape preserved; restoration rebuilds into a template pytree so the
+format is stable across refactors that keep leaf paths."""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _encode_leaf(x) -> Dict[str, Any]:
+    a = np.asarray(x)
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def save(path: str, tree) -> None:
+    flat = {}
+    def visit(p, x):
+        flat[_path_str(p)] = _encode_leaf(x)
+        return x
+    jax.tree_util.tree_map_with_path(visit, tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(flat, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, template):
+    with open(path, "rb") as f:
+        flat = msgpack.unpackb(f.read(), raw=False)
+
+    def rebuild(p, x):
+        key = _path_str(p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        rec = flat[key]
+        a = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        a = a.reshape(rec["shape"])
+        assert tuple(a.shape) == tuple(np.shape(x)), (key, a.shape, np.shape(x))
+        return jnp.asarray(a)
+
+    return jax.tree_util.tree_map_with_path(rebuild, template)

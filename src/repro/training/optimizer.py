@@ -1,0 +1,106 @@
+"""Pure-JAX AdamW and LR schedules (no optax dependency).
+
+Includes the WSD (Warmup-Stable-Decay) schedule from MiniCPM
+(arXiv:2404.06395) — one of the assigned architectures' signature training
+features — alongside standard cosine decay.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object          # pytree like params
+    nu: object
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=z(), nu=z())
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * scale, grads)
+
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g),
+            state.nu, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr_fn(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def adamw(lr: float = 3e-4, schedule: str = "cosine", total_steps: int = 1000,
+          warmup: int = 100, **kw) -> AdamW:
+    if schedule == "wsd":
+        fn = wsd_schedule(lr, total_steps, warmup)
+    elif schedule == "cosine":
+        fn = cosine_schedule(lr, total_steps, warmup)
+    else:
+        fn = lambda step: jnp.asarray(lr, jnp.float32)
+    return AdamW(lr_fn=fn, **kw)
+
+
+def cosine_schedule(peak: float, total_steps: int, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = 0.1 * peak + 0.9 * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def wsd_schedule(peak: float, total_steps: int, warmup: int,
+                 decay_frac: float = 0.1, floor_frac: float = 0.01):
+    """MiniCPM Warmup-Stable-Decay: linear warmup, long stable plateau at
+    peak, exponential decay over the final ``decay_frac`` of training."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        stable = jnp.asarray(peak, jnp.float32)
+        prog = jnp.clip((s - decay_start) / max(total_steps - decay_start, 1),
+                        0, 1)
+        decay = peak * jnp.power(floor_frac, prog)
+        out = jnp.where(s < warmup, warm,
+                        jnp.where(s < decay_start, stable, decay))
+        return out
+    return fn

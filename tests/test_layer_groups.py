@@ -1,0 +1,69 @@
+"""Property tests for the paper's §4.4 layer-group rule G(L)."""
+
+import math
+
+from hypothesis import given, strategies as st
+
+from repro.core import layer_groups
+
+
+@given(st.integers(1, 200_000), st.integers(1, 128),
+       st.sampled_from([256, 512, 1024]))
+def test_num_groups_matches_paper_rule(prompt_len, n_blocks, quantum):
+    g = layer_groups.num_groups(prompt_len, n_blocks, quantum)
+    want = max(1, math.ceil(prompt_len / quantum))
+    assert g == min(want, n_blocks)
+    assert 1 <= g <= n_blocks
+
+
+def test_paper_examples():
+    # §4.4: 8192-token prompt -> G=16; 512-token prompt -> G=1.
+    assert layer_groups.num_groups(8192, 48, 512) == 16
+    assert layer_groups.num_groups(512, 48, 512) == 1
+    # capped by depth: whisper-base has 6 layers
+    assert layer_groups.num_groups(8192, 6, 512) == 6
+
+
+@given(st.integers(1, 128).flatmap(
+    lambda n: st.tuples(st.just(n), st.integers(1, n))))
+def test_partition_tiles_exactly_and_balanced(n_and_g):
+    n_blocks, g = n_and_g
+    groups = layer_groups.partition(n_blocks, g)
+    assert len(groups) == g
+    # contiguous, exact tiling of [0, n_blocks)
+    assert groups[0][0] == 0 and groups[-1][1] == n_blocks
+    for (a0, a1), (b0, b1) in zip(groups, groups[1:]):
+        assert a1 == b0
+    sizes = [b - a for a, b in groups]
+    assert all(s >= 1 for s in sizes)
+    # balanced to within one block (paper's future-work L % G case)
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=96).flatmap(
+    lambda cs: st.tuples(st.just(cs), st.integers(1, len(cs)))))
+def test_partition_weighted_valid_and_balanced(args):
+    costs, g = args
+    groups = layer_groups.partition_weighted(costs, g)
+    assert len(groups) == g
+    assert groups[0][0] == 0 and groups[-1][1] == len(costs)
+    for (a0, a1), (b0, b1) in zip(groups, groups[1:]):
+        assert a1 == b0
+    assert all(b > a for a, b in groups)
+
+
+def test_partition_weighted_balances_heterogeneous_stack():
+    # MoE-heavy back half: uniform split would put 4x the weight-bytes in
+    # the later groups; weighted split moves boundaries earlier.
+    costs = [1.0] * 8 + [4.0] * 8
+    w = layer_groups.partition_weighted(costs, 4)
+    u = layer_groups.partition(16, 4)
+    def spread(groups):
+        sums = [sum(costs[a:b]) for a, b in groups]
+        return max(sums) - min(sums)
+    assert spread(w) < spread(u)
+
+
+def test_partition_weighted_uniform_matches_count_split():
+    w = layer_groups.partition_weighted([1.0] * 12, 4)
+    assert w == layer_groups.partition(12, 4)

@@ -1,0 +1,51 @@
+"""Metrics: percentiles, TBT extraction, per-request SLO rule."""
+
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.plan import Request
+from repro.serving.metrics import SLOConfig, percentile, request_metrics
+
+
+def _req(arrival, first, gaps):
+    r = Request(req_id=0, prompt_len=10, max_new_tokens=len(gaps) + 1,
+                arrival_time=arrival)
+    r.first_token_time = first
+    t = first
+    for g in gaps:
+        t += g
+        r.token_times.append(t)
+    return r
+
+
+def test_ttft_and_tbts():
+    r = _req(1.0, 3.0, [0.1, 0.2, 0.05])
+    assert r.ttft() == pytest.approx(2.0)
+    assert r.tbts() == pytest.approx([0.1, 0.2, 0.05])
+
+
+def test_slo_per_request_rule():
+    slo = SLOConfig(ttft_slo=2.5, tbt_slo=0.15)
+    ok = _req(0.0, 2.0, [0.1, 0.1])
+    bad_ttft = _req(0.0, 3.0, [0.1])
+    bad_tail = _req(0.0, 1.0, [0.1, 0.2])   # one violating gap kills it
+    assert slo.attained(ok)
+    assert not slo.attained(bad_ttft)
+    assert not slo.attained(bad_tail)
+    m = request_metrics([ok, bad_ttft, bad_tail], slo)
+    assert m["slo_attainment"] == pytest.approx(1 / 3)
+    assert m["ttft_attainment"] == pytest.approx(2 / 3)
+    assert m["tbt_attainment"] == pytest.approx(2 / 3)
+
+
+@given(st.lists(st.floats(0, 1e3), min_size=1, max_size=200))
+def test_percentile_bounds(xs):
+    p0, p50, p99 = (percentile(xs, q) for q in (0, 50, 99))
+    assert min(xs) <= p0 <= p50 <= p99 <= max(xs)
+
+
+def test_percentile_empty_nan():
+    import math
+    assert math.isnan(percentile([], 99))

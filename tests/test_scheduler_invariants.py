@@ -1,0 +1,166 @@
+"""Property tests for the scheduling invariants (DESIGN.md / core/base.py):
+
+  I1 (stall-free): every plan decodes EVERY request in DECODE state.
+  I2 (coverage): a request's prefill slices tile [0, prompt_len) x
+      [0, n_blocks) exactly once.
+  I3 (order): slices are causally ordered (block-major within a token range;
+      token ranges in order).
+  Layered-specific: at most one layer group prefills per iteration and a
+      request's prefill spans exactly G iterations.
+"""
+
+from __future__ import annotations
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layer_groups
+from repro.core.base import SCHEDULERS, make_scheduler
+from repro.core.plan import Request, RequestState
+
+ALL = sorted(SCHEDULERS)
+
+
+def drive(sched, reqs, max_iters=100_000):
+    """Submit all requests at t=0 and run to drain; returns per-iteration
+    plans plus the decode-state snapshot taken BEFORE each plan."""
+    for r in reqs:
+        sched.submit(r)
+    plans, pre_decode = [], []
+    it = 0
+    while sched.has_work():
+        pre = {rid for rid, r in sched.requests.items()
+               if r.state == RequestState.DECODE}
+        plan = sched.next_plan(now=float(it))
+        plans.append(plan)
+        pre_decode.append(pre)
+        it += 1
+        assert it < max_iters, f"{sched.name} did not drain"
+    return plans, pre_decode
+
+
+reqs_strategy = st.lists(
+    st.tuples(st.integers(1, 3000), st.integers(1, 20)),
+    min_size=1, max_size=12)
+
+
+@pytest.mark.parametrize("name", ALL)
+@given(spec=reqs_strategy)
+@settings(max_examples=25, deadline=None)
+def test_invariants(name, spec):
+    n_blocks = 12
+    sched = make_scheduler(name, n_blocks, n_slots=8, token_budget=256,
+                           quantum=256)
+    reqs = [Request(req_id=i, prompt_len=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(spec)]
+    plans, pre_decode = drive(sched, reqs)
+
+    # I1 stall-free: every pre-iteration DECODE request is in decode_ids.
+    for plan, pre in zip(plans, pre_decode):
+        assert pre.issubset(set(plan.decode_ids)), sched.name
+
+    # I2 coverage: slices tile the (token x block) rectangle exactly once.
+    cover = {r.req_id: {} for r in reqs}
+    for plan in plans:
+        for sl in plan.prefill:
+            grid = cover[sl.req_id]
+            for tok in range(sl.token_start, sl.token_end):
+                for b in range(sl.block_start, sl.block_end):
+                    key = (tok, b)
+                    assert key not in grid, (sched.name, sl.req_id, key)
+                    grid[key] = True
+    for r in reqs:
+        assert len(cover[r.req_id]) == r.prompt_len * n_blocks, sched.name
+
+    # I3 order: per request, block ranges advance within a token range and
+    # token ranges advance monotonically.
+    seen = {r.req_id: (0, 0) for r in reqs}  # (tokens completed, next block)
+    for plan in plans:
+        for sl in plan.prefill:
+            tok_done, next_block = seen[sl.req_id]
+            assert sl.token_start == tok_done
+            assert sl.block_start == next_block
+            if sl.block_end == n_blocks:
+                seen[sl.req_id] = (sl.token_end, 0)
+            else:
+                seen[sl.req_id] = (tok_done, sl.block_end)
+
+    # every request decoded exactly max_new_tokens (first token from the
+    # final prefill slice, the rest from decode iterations)
+    n_decodes = {r.req_id: 0 for r in reqs}
+    for plan in plans:
+        for rid in plan.decode_ids:
+            n_decodes[rid] += 1
+    for r in reqs:
+        assert n_decodes[r.req_id] == r.max_new_tokens - 1
+
+
+@given(spec=st.tuples(st.integers(1, 20000), st.integers(1, 4)))
+@settings(max_examples=40, deadline=None)
+def test_layered_one_group_per_iteration(spec):
+    prompt_len, _ = spec
+    n_blocks = 24
+    sched = make_scheduler("layered", n_blocks, n_slots=4, quantum=512)
+    reqs = [Request(req_id=0, prompt_len=prompt_len, max_new_tokens=4)]
+    plans, _ = drive(sched, reqs)
+
+    g = layer_groups.num_groups(prompt_len, n_blocks, 512)
+    prefill_iters = [p for p in plans if p.prefill]
+    # prefill completes in exactly G iterations (§4.2)
+    assert len(prefill_iters) == g
+    for plan in prefill_iters:
+        blocks = {(s.block_start, s.block_end) for s in plan.prefill}
+        # one-group-per-iteration rule
+        assert len(blocks) == 1
+
+
+def test_layered_cohort_merging():
+    """§4.4: multiple small inputs arriving concurrently are merged into a
+    single batch (cohort) that advances through the groups together."""
+    sched = make_scheduler("layered", 8, n_slots=8, quantum=512)
+    reqs = [Request(req_id=i, prompt_len=300, max_new_tokens=2)
+            for i in range(3)]
+    plans, _ = drive(sched, reqs)
+    first = plans[0]
+    assert len(first.prefill) == 3          # all three in the same cohort
+    groups = {(s.block_start, s.block_end) for s in first.prefill}
+    assert len(groups) == 1
+
+
+def test_hybrid_degenerates_to_layered_and_chunked():
+    """§4.3: chunk_size >= prompt -> pure layered; G=1 -> pure chunked."""
+    n_blocks = 8
+    # huge chunk => slices all have full token range (layered shape)
+    h = make_scheduler("hybrid", n_blocks, n_slots=4, chunk_size=10_000,
+                       quantum=512)
+    reqs = [Request(req_id=0, prompt_len=2000, max_new_tokens=2)]
+    plans, _ = drive(h, reqs)
+    for p in plans:
+        for sl in p.prefill:
+            assert sl.token_start == 0 and sl.token_end == 2000
+    # tiny prompt => one group => chunked shape (all blocks per slice)
+    h2 = make_scheduler("hybrid", n_blocks, n_slots=4, chunk_size=512,
+                        quantum=512)
+    reqs2 = [Request(req_id=0, prompt_len=1500, max_new_tokens=2)]
+    plans2, _ = drive(h2, reqs2)
+    for p in plans2:
+        for sl in p.prefill:
+            assert (sl.block_start, sl.block_end) == (0, n_blocks)
+
+
+@given(spec=reqs_strategy)
+@settings(max_examples=15, deadline=None)
+def test_chunked_token_budget(spec):
+    budget = 256
+    sched = make_scheduler("chunked", 12, n_slots=8, token_budget=budget)
+    reqs = [Request(req_id=i, prompt_len=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(spec)]
+    plans, _ = drive(sched, reqs)
+    for plan in plans:
+        n_prefill = sum(s.n_tokens for s in plan.prefill)
+        # hybrid-batch budget: decode tokens + prefill tokens <= budget
+        # (unless decode alone exceeds it)
+        if n_prefill:
+            assert len(plan.decode_ids) + n_prefill <= budget

@@ -1,0 +1,130 @@
+"""Training substrate: optimizer + schedules, data pipeline, checkpointing,
+and an actual loss-goes-down integration run."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_moe
+from repro.models.model import DecoderModel
+from repro.training import checkpoint as ckpt
+from repro.training.data import PackedDataset, SyntheticCorpus
+from repro.training.optimizer import adamw, cosine_schedule, wsd_schedule
+from repro.training.train import Trainer
+
+
+def test_adamw_minimizes_quadratic():
+    opt = adamw(lr=0.1, schedule="const")
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_applies():
+    opt = adamw(lr=0.0, schedule="const", grad_clip=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, m = opt.update({"w": jnp.full((3,), 100.0)}, state, params)
+    assert float(m["grad_norm"]) > 1.0   # reported pre-clip
+
+
+def test_wsd_schedule_shape():
+    fn = wsd_schedule(1e-3, total_steps=1000, warmup=100)
+    s = lambda i: float(fn(jnp.asarray(i)))
+    assert s(0) == 0.0
+    assert s(50) == pytest.approx(5e-4)
+    assert s(100) == pytest.approx(1e-3)
+    assert s(500) == pytest.approx(1e-3)       # stable plateau
+    assert s(899) == pytest.approx(1e-3)
+    assert s(950) < 1e-3                       # decaying
+    assert s(1000) == pytest.approx(1e-5, rel=0.01)
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1e-3, total_steps=1000, warmup=100)
+    s = lambda i: float(fn(jnp.asarray(i)))
+    assert s(100) == pytest.approx(1e-3)
+    assert s(1000) == pytest.approx(1e-4, rel=0.01)   # 10% floor
+
+
+def test_packed_dataset_shapes_and_mask():
+    corpus = SyntheticCorpus(vocab_size=128, seed=0)
+    ds = PackedDataset(corpus, seq_len=64, batch_size=4, seed=1)
+    it = iter(ds)
+    tokens, targets, mask = next(it)
+    assert tokens.shape == targets.shape == mask.shape == (4, 64)
+    assert tokens.dtype == np.int32
+    # shifted-by-one relation within the packed stream
+    t2, _, _ = next(it)
+    assert not np.array_equal(tokens, t2)      # iterator advances
+    # mask zeroes predictions across document starts (BOS id 0 in targets)
+    assert (~mask[targets == 0]).all()
+
+
+def test_packed_dataset_deterministic():
+    c = SyntheticCorpus(vocab_size=128, seed=0)
+    a = next(iter(PackedDataset(c, 32, 2, seed=7)))
+    b = next(iter(PackedDataset(c, 32, 2, seed=7)))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = tiny_moe()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    ckpt.save(path, {"params": params, "step": jnp.asarray(7)})
+    restored = ckpt.restore(path, {"params": params, "step": jnp.asarray(0)})
+    assert int(restored["step"]) == 7
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        params, restored["params"])
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    path = os.path.join(tmp_path, "c.msgpack")
+    ckpt.save(path, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        ckpt.restore(path, {"a": jnp.zeros(2), "b": jnp.zeros(1)})
+
+
+def test_loss_decreases_on_synthetic_corpus():
+    """End-to-end: a tiny model's loss must visibly drop on the structured
+    synthetic corpus within 60 steps."""
+    cfg = tiny_dense(n_layers=2, d_model=128, vocab_size=128)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(lr=3e-3, schedule="cosine", total_steps=60, warmup=5)
+    trainer = Trainer(model=model, opt=opt, params=params)
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=0)
+    ds = PackedDataset(corpus, seq_len=64, batch_size=8, seed=0)
+    hist = trainer.fit(iter(ds), steps=60, log_every=5)
+    first, last = hist[0]["ce"], hist[-1]["ce"]
+    assert last < first - 0.5, (first, last)
+
+
+def test_trainer_checkpointing(tmp_path):
+    cfg = tiny_dense(d_model=32, n_layers=1, vocab_size=64)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(lr=1e-3, total_steps=20, warmup=2)
+    trainer = Trainer(model=model, opt=opt, params=params)
+    corpus = SyntheticCorpus(vocab_size=64, seed=0)
+    ds = PackedDataset(corpus, seq_len=32, batch_size=2, seed=0)
+    path = os.path.join(tmp_path, "t.msgpack")
+    trainer.fit(iter(ds), steps=10, checkpoint_path=path, checkpoint_every=5)
+    assert os.path.exists(path)
+    restored = ckpt.restore(path, {"params": trainer.params,
+                                   "opt": trainer.opt_state})
+    # restored state is the step-10 state
+    assert int(restored["opt"].step) == 10
