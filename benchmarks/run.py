@@ -9,13 +9,14 @@ import sys
 import time
 
 from benchmarks import (fig2_chunk_microbench, fig3_slo_attainment,
-                        fig5_tokens_over_time, roofline, table1_coverage,
-                        table2_chunk_tradeoff, table6_latency,
-                        table7_expert_loads, table8_energy)
+                        fig5_tokens_over_time, gmm_ragged_vs_dense, roofline,
+                        table1_coverage, table2_chunk_tradeoff,
+                        table6_latency, table7_expert_loads, table8_energy)
 
 BENCHES = [
     ("table1_coverage", table1_coverage.main, {}),
     ("fig2_chunk_microbench", fig2_chunk_microbench.main, {}),
+    ("gmm_ragged_vs_dense", gmm_ragged_vs_dense.main, {}),
     ("table2_chunk_tradeoff", table2_chunk_tradeoff.main, {}),
     ("fig3_slo_attainment", fig3_slo_attainment.main, {"fast_kw": "n_requests"}),
     ("table6_latency", table6_latency.main, {"fast_kw": "n_requests"}),

@@ -1,0 +1,105 @@
+"""Pallas TPU ragged grouped-matmul (fused SwiGLU) for dropless MoE.
+
+MegaBlocks-style layout: token assignments are sorted by expert id into one
+flat ``(rows, d)`` buffer whose per-expert groups are padded to row-tile
+boundaries, so every ``m_blk``-row tile is wholly owned by ONE expert (or by
+no expert — trailing alignment padding). The owner of each tile arrives as
+*scalar-prefetched* metadata (``pltpu.PrefetchScalarGridSpec``): the weight
+BlockSpec index maps read ``tile_expert[ti]`` before the kernel body runs,
+so the DMA engine streams exactly the touched experts' weight blocks
+HBM→VMEM and consecutive tiles of the same expert re-use the resident block
+(Pallas skips the copy when the index map output is unchanged).
+
+Compared to the dense ``(E, C, d)`` capacity-buffer kernel (moe_gmm.py) at
+dropless capacity ``C = T``, the grid walks ``sum_e ceil(count_e / m_blk)``
+row tiles instead of ``E * T / c_blk`` — compute and traffic scale with the
+routed work ``sum(counts)``, not ``E × T`` (≈ ``E / top_k`` × smaller; 16×
+for qwen3-30b-a3b), and experts with zero tokens cost nothing at all.
+
+Grid ``(n_tiles, F/f_blk)``; the f axis is a reduction for the down
+projection accumulated in the revisited output block, exactly as in the
+dense kernel. Sentinel tiles (``tile_expert[ti] == n_experts``) skip the
+MXU work and zero their output rows; their weight index map points at
+``fetch_expert[ti]`` — the last active expert — so no fresh DMA is issued
+for them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_ragged_kernel(n_experts: int, te_ref, fe_ref, x_ref, wg_ref, wu_ref,
+                       wd_ref, o_ref):
+    del fe_ref  # consumed by the weight index maps only
+    ti = pl.program_id(0)
+    fi = pl.program_id(1)
+    te = te_ref[ti]
+
+    @pl.when(te == n_experts)                 # alignment-padding tile
+    def _sentinel():
+        @pl.when(fi == 0)
+        def _zero():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(te < n_experts)
+    def _active():
+        x = x_ref[...].astype(jnp.float32)               # (m_blk, d)
+        wg = wg_ref[0].astype(jnp.float32)               # (d, f_blk)
+        wu = wu_ref[0].astype(jnp.float32)
+        wd = wd_ref[0].astype(jnp.float32)               # (f_blk, d)
+        h = jax.nn.silu(x @ wg) * (x @ wu)               # (m_blk, f_blk)
+        part = h @ wd                                    # (m_blk, d)
+
+        @pl.when(fi == 0)
+        def _init():
+            o_ref[...] = part.astype(o_ref.dtype)
+
+        @pl.when(fi > 0)
+        def _acc():
+            o_ref[...] = (o_ref[...].astype(jnp.float32)
+                          + part).astype(o_ref.dtype)
+
+
+def moe_gmm_ragged_pallas(rows: jax.Array, w_gate: jax.Array,
+                          w_up: jax.Array, w_down: jax.Array,
+                          tile_expert: jax.Array, fetch_expert: jax.Array, *,
+                          m_blk: int = 128, f_blk: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """rows: (n_rows, d) expert-sorted tile-aligned token buffer;
+    w_gate/w_up: (E, d, F); w_down: (E, F, d);
+    tile_expert: (n_rows / m_blk,) int32 in [0, E] (E = padding sentinel);
+    fetch_expert: same shape, sentinel replaced by a valid expert id (drives
+    the weight DMA for skipped tiles so they issue no fresh copy).
+    Returns (n_rows, d). n_rows % m_blk == 0 and F % f_blk == 0 (ops.py
+    pads)."""
+    n_rows, d = rows.shape
+    e, _, f = w_gate.shape
+    f_blk = min(f_blk, f)
+    assert n_rows % m_blk == 0 and f % f_blk == 0, (n_rows, f, m_blk, f_blk)
+    n_tiles = n_rows // m_blk
+    assert tile_expert.shape == (n_tiles,), (tile_expert.shape, n_tiles)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, f // f_blk),
+        in_specs=[
+            pl.BlockSpec((m_blk, d), lambda ti, fi, te, fe: (ti, 0)),
+            pl.BlockSpec((1, d, f_blk), lambda ti, fi, te, fe: (fe[ti], 0, fi)),
+            pl.BlockSpec((1, d, f_blk), lambda ti, fi, te, fe: (fe[ti], 0, fi)),
+            pl.BlockSpec((1, f_blk, d), lambda ti, fi, te, fe: (fe[ti], fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((m_blk, d), lambda ti, fi, te, fe: (ti, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gmm_ragged_kernel, e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, d), rows.dtype),
+        interpret=interpret,
+    )(tile_expert.astype(jnp.int32), fetch_expert.astype(jnp.int32),
+      rows, w_gate, w_up, w_down)

@@ -21,6 +21,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import moe_gmm_pallas
+from repro.kernels.moe_gmm_ragged import moe_gmm_ragged_pallas
 
 
 def _auto_interpret() -> bool:
@@ -85,8 +86,53 @@ def moe_gmm(x, w_gate, w_up, w_down, *, c_blk: int = 128, f_blk: int = 128,
     return out[:, :c0]
 
 
+def fetch_expert_ids(tile_expert: jax.Array, n_experts: int) -> jax.Array:
+    """Replace sentinel tile ids (== n_experts) with the last active expert
+    id (forward fill), so skipped tiles drive the weight DMA at an already-
+    resident block instead of fetching a fresh one. All-sentinel inputs
+    (fully masked batch) fall back to expert 0."""
+    n_tiles = tile_expert.shape[0]
+    idx = jnp.where(tile_expert < n_experts,
+                    jnp.arange(n_tiles, dtype=jnp.int32), -1)
+    last = jax.lax.cummax(idx)
+    return jnp.where(last >= 0, tile_expert[jnp.maximum(last, 0)],
+                     0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("m_blk", "f_blk", "interpret"))
+def moe_gmm_ragged(rows, w_gate, w_up, w_down, tile_expert, *,
+                   m_blk: int = 128, f_blk: int = 128,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Ragged grouped matmul: rows (n_rows, d) sorted by expert with
+    tile-aligned groups, tile_expert (n_rows/m_blk,) the per-tile owner
+    (n_experts = sentinel). Pads F to the tile multiple; rows must already
+    be m_blk-aligned (models.moe.ragged_dispatch pads them)."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    assert rows.shape[0] % m_blk == 0, (rows.shape, m_blk)
+    n_experts = w_gate.shape[0]
+    wg_p, f0 = _pad_to(w_gate, 2, min(f_blk, max(w_gate.shape[2], 1)))
+    wu_p, _ = _pad_to(w_up, 2, min(f_blk, max(w_up.shape[2], 1)))
+    wd_p, _ = _pad_to(w_down, 1, min(f_blk, max(w_down.shape[1], 1)))
+    fetch = fetch_expert_ids(tile_expert, n_experts)
+    return moe_gmm_ragged_pallas(rows, wg_p, wu_p, wd_p, tile_expert, fetch,
+                                 m_blk=m_blk, f_blk=f_blk,
+                                 interpret=interpret)
+
+
 def model_gmm_fn(cfg=None):
-    """Adapter matching models.moe.apply_moe's ``gmm_fn`` contract."""
+    """Adapter matching models.moe.apply_moe's dense ``gmm_fn`` contract."""
     def fn(cfg_, p, buf):
         return moe_gmm(buf, p["w_gate"], p["w_up"], p["w_down"])
+    fn.ragged = False
+    return fn
+
+
+def ragged_gmm_fn(cfg=None):
+    """Adapter matching models.moe.apply_moe's ragged ``gmm_fn`` contract
+    (moe_dispatch="ragged"): receives the expert-sorted row buffer plus the
+    per-tile expert metadata and runs the scalar-prefetch Pallas kernel."""
+    def fn(cfg_, p, rows, tile_expert, m_blk):
+        return moe_gmm_ragged(rows, p["w_gate"], p["w_up"], p["w_down"],
+                              tile_expert, m_blk=m_blk)
+    fn.ragged = True
     return fn

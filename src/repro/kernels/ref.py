@@ -66,3 +66,27 @@ def moe_gmm_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     h = jax.nn.silu(g) * u
     return jnp.einsum("ecf,efd->ecd", h,
                       w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_gmm_ragged_ref(rows: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                       w_down: jax.Array, tile_expert: jax.Array,
+                       m_blk: int) -> jax.Array:
+    """Oracle for the ragged grouped matmul: per row-tile, apply the fused
+    SwiGLU FFN of the tile's owning expert; sentinel tiles
+    (tile_expert == E) produce zero rows. rows: (n_rows, d) -> (n_rows, d).
+
+    The per-tile weight gather reads exactly one expert's weights per active
+    tile — the same traffic shape as the kernel's scalar-prefetched DMA."""
+    n_rows, d = rows.shape
+    e = w_gate.shape[0]
+    tiles = rows.reshape(-1, m_blk, d).astype(jnp.float32)
+    sel = jnp.minimum(tile_expert, e - 1)
+    wg = w_gate[sel].astype(jnp.float32)                 # (n_tiles, d, F)
+    wu = w_up[sel].astype(jnp.float32)
+    wd = w_down[sel].astype(jnp.float32)                 # (n_tiles, F, d)
+    g = jnp.einsum("tmd,tdf->tmf", tiles, wg)
+    u = jnp.einsum("tmd,tdf->tmf", tiles, wu)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tmf,tfd->tmd", h, wd)
+    y = jnp.where((tile_expert < e)[:, None, None], y, 0.0)
+    return y.reshape(n_rows, d).astype(rows.dtype)

@@ -39,7 +39,9 @@ from repro.configs.shapes import (SHAPES, applicable, cache_len_for,  # noqa: E4
 from repro.launch import analysis            # noqa: E402
 from repro.launch.mesh import make_production_mesh      # noqa: E402
 from repro.launch.steps import make_step_fn  # noqa: E402
+from repro.models.config import FFN_MOE, dtype_bytes    # noqa: E402
 from repro.models.model import DecoderModel  # noqa: E402
+from repro.serving.cost_model import TPU_V5E, CostModel  # noqa: E402
 from repro.sharding.partition import (cache_shardings, default_rules,  # noqa: E402
                                       moment_shardings, param_shardings,
                                       sharding_context)
@@ -106,6 +108,29 @@ def _layer_split(cfg):
     return p, k, r
 
 
+def _moe_dispatch_analysis(cfg, shape):
+    """Analytic ragged-vs-dense expert-GMM cost for this (arch, shape) —
+    the roofline-report twin of the engine's ragged dropless pipeline
+    (models/moe.py). Per MoE block at the shape's token count."""
+    if not cfg.moe.enabled:
+        return None
+    n_tok = (shape.global_batch if shape.kind == "decode"
+             else shape.global_batch * shape.seq_len)
+    cm = CostModel(cfg, TPU_V5E,
+                   bytes_per_param=dtype_bytes(cfg.param_dtype))
+    ragged = cm.moe_gmm_cost(n_tok, "ragged")
+    dense = cm.moe_gmm_cost(n_tok, "dense")
+    return {
+        "n_tokens": n_tok,
+        "n_moe_blocks": sum(1 for s in cfg.block_specs()
+                            if s.ffn == FFN_MOE),
+        "ragged": ragged, "dense": dense,
+        "flops_ratio": ragged["flops"] / max(dense["flops"], 1.0),
+        "weight_bytes_ratio": (ragged["weight_bytes"]
+                               / max(dense["weight_bytes"], 1.0)),
+    }
+
+
 def _measure(compiled) -> dict:
     cost = analysis.extract_cost(compiled)
     try:
@@ -139,6 +164,9 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "status": "ok", "compile_s": compile_s,
            "peak_memory_per_device": mem}
+    moe_rep = _moe_dispatch_analysis(cfg, shape)
+    if moe_rep is not None:
+        out["moe_dispatch"] = moe_rep
 
     if analyze:
         p, k, r = _layer_split(cfg)

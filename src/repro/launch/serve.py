@@ -37,7 +37,7 @@ def serve_real(args) -> None:
                            n_slots=args.slots, quantum=args.quantum,
                            token_budget=args.token_budget)
     eng = Engine(model, params, sched, n_slots=args.slots,
-                 max_len=args.max_len)
+                 max_len=args.max_len, moe_dispatch=args.moe_dispatch)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         n = int(rng.integers(16, args.max_len // 2))
@@ -62,7 +62,8 @@ def serve_sim(args) -> None:
     trace = poisson_trace(DATASETS[args.dataset], args.rate, args.requests,
                           seed=args.seed)
     sim = Simulator(cfg, args.scheduler, hw, n_slots=args.slots,
-                    quantum=args.quantum, token_budget=args.token_budget)
+                    quantum=args.quantum, token_budget=args.token_budget,
+                    moe_dispatch=args.moe_dispatch)
     res = sim.run(trace)
     m = request_metrics(res.requests, SLOConfig(args.ttft_slo, args.tbt_slo))
     print(f"[serve-sim] {cfg.name} x {args.scheduler} on {args.dataset} "
@@ -90,6 +91,11 @@ def main() -> None:
     ap.add_argument("--quantum", type=int, default=512)
     ap.add_argument("--token-budget", type=int, default=512)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--moe-dispatch", default="ragged",
+                    choices=["ragged", "dense"],
+                    help="dropless MoE data path: ragged (sorted "
+                         "tile-aligned buffer; traffic scales with routed "
+                         "work) or dense (worst-case capacity buffer)")
     ap.add_argument("--hw", default="h100x2", choices=["h100x2", "tpu_v5e"])
     ap.add_argument("--ttft-slo", type=float, default=10.0)
     ap.add_argument("--tbt-slo", type=float, default=0.125)

@@ -63,7 +63,8 @@ def apply_block(cfg: ModelConfig, spec: BlockSpec, p, x: Array, *,
                 cache: Optional[dict] = None, enc_out: Optional[Array] = None,
                 valid: Optional[Array] = None,
                 positions3: Optional[Array] = None,
-                gmm_fn=None, dropless: bool = False
+                gmm_fn=None, dropless: bool = False,
+                moe_dispatch: str = "dense"
                 ) -> Tuple[Array, Optional[dict], dict]:
     """x: (B,S,D) -> (x', new_cache, aux). aux has uniform pytree structure
     across block kinds so heterogeneous stacks scan cleanly."""
@@ -106,7 +107,8 @@ def apply_block(cfg: ModelConfig, spec: BlockSpec, p, x: Array, *,
         h2 = layers.apply_norm(cfg, p["ln2"], x)
         if spec.ffn == FFN_MOE:
             out2, aux = moe.apply_moe(cfg, p["moe"], h2, valid=valid,
-                                      gmm_fn=gmm_fn, dropless=dropless)
+                                      gmm_fn=gmm_fn, dropless=dropless,
+                                      moe_dispatch=moe_dispatch)
         else:
             out2 = layers.apply_mlp(cfg, p["mlp"], h2)
         x = x + out2

@@ -34,6 +34,29 @@ FFN_MOE = "moe"
 FFN_NONE = "none"            # xLSTM blocks integrate their own projections
 
 
+# Bytes per element by dtype name — the single source of truth for weight
+# traffic accounting (engine counter, cost model). Substring heuristics like
+# `2 if "16" in dtype else 4` misreport fp8/int8 as 4 B/elem.
+DTYPE_BYTES = {
+    "float64": 8, "int64": 8,
+    "float32": 4, "int32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "float8_e4m3fn": 1, "float8_e5m2": 1, "float8_e4m3": 1,
+    "fp8": 1, "int8": 1, "uint8": 1, "int4": 1,
+}
+
+
+def dtype_bytes(name: str) -> int:
+    """Bytes/element for a dtype name; falls back on bit-width parsing for
+    names not in DTYPE_BYTES (e.g. jnp dtype str spellings)."""
+    if name in DTYPE_BYTES:
+        return DTYPE_BYTES[name]
+    for bits, nbytes in (("64", 8), ("32", 4), ("16", 2), ("8", 1), ("4", 1)):
+        if bits in name:
+            return nbytes
+    return 4
+
+
 @dataclass(frozen=True)
 class BlockSpec:
     """What one decoder block is made of."""

@@ -172,7 +172,8 @@ class DecoderModel:
     def run_all(self, params, x: Array, *, positions: Array,
                 offset: Optional[Array] = None, cache: Optional[list] = None,
                 enc_out: Optional[Array] = None, valid: Optional[Array] = None,
-                gmm_fn=None, dropless: bool = False):
+                gmm_fn=None, dropless: bool = False,
+                moe_dispatch: str = "dense"):
         cfg = self.cfg
         new_cache: Optional[list] = [] if cache is not None else None
         aux_counts: List[Array] = []
@@ -191,7 +192,8 @@ class DecoderModel:
                         return blocks.apply_block(
                             cfg, sp, bp, h_, positions=positions,
                             offset=offset, cache=c_, enc_out=enc_out,
-                            valid=valid, gmm_fn=gmm_fn, dropless=dropless)
+                            valid=valid, gmm_fn=gmm_fn, dropless=dropless,
+                            moe_dispatch=moe_dispatch)
                     if self.remat and cs is None:
                         block_fn = jax.checkpoint(block_fn)
                     h, nc, aux = block_fn(ps[p_idx], h)
@@ -267,7 +269,8 @@ class DecoderModel:
                 enc_out: Optional[Array] = None,
                 extra_embeds: Optional[Array] = None,
                 valid: Optional[Array] = None,
-                gmm_fn=None, dropless: bool = False):
+                gmm_fn=None, dropless: bool = False,
+                moe_dispatch: str = "dense"):
         """tokens: (B,S) -> (logits (B,S,V), new_cache, aux)."""
         b, s = tokens.shape
         if offset is None and cache is not None:
@@ -283,7 +286,8 @@ class DecoderModel:
         x, new_cache, aux = self.run_all(params, x, positions=positions,
                                          offset=offset, cache=cache,
                                          enc_out=enc_out, valid=valid,
-                                         gmm_fn=gmm_fn, dropless=dropless)
+                                         gmm_fn=gmm_fn, dropless=dropless,
+                                         moe_dispatch=moe_dispatch)
         return self.logits(params, x), new_cache, aux
 
     __call__ = forward
@@ -300,7 +304,7 @@ class DecoderModel:
                    cache: Optional[list] = None,
                    enc_out: Optional[Array] = None,
                    valid: Optional[Array] = None, gmm_fn=None,
-                   dropless: bool = False):
+                   dropless: bool = False, moe_dispatch: str = "dense"):
         """Run blocks [start, start+n) over x (B,S,D). start/n are static.
         Returns (x', cache', aux-list-in-block-order)."""
         auxes = []
@@ -313,7 +317,7 @@ class DecoderModel:
             x, nc, aux = blocks.apply_block(
                 self.cfg, spec, bp, x, positions=positions, offset=offset,
                 cache=c, enc_out=enc_out, valid=valid, gmm_fn=gmm_fn,
-                dropless=dropless)
+                dropless=dropless, moe_dispatch=moe_dispatch)
             if cache is not None:
                 cache = [list(seg) for seg in cache]
                 cache[s][p_idx] = jax.tree_util.tree_map(

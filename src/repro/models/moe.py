@@ -1,11 +1,36 @@
-"""Mixture-of-Experts FFN: top-k router, sort-based capacity dispatch,
-shared experts, and — central to the paper — *expert-load accounting*.
+"""Mixture-of-Experts FFN: top-k router, two dispatch layouts, shared
+experts, and — central to the paper — *expert-load accounting*.
 
-The dispatch layout is the TPU-idiomatic one: token assignments are sorted
-by expert id and scattered into a dense (E, C, d) capacity buffer, so the
-per-expert GEMM is a batched matmul whose leading axis can be sharded over
-the ``model`` mesh axis (expert parallelism; XLA inserts the all-to-all).
-The same (E, C, d) layout is what the Pallas ``moe_gmm`` kernel consumes.
+Dispatch layouts (``moe_dispatch``):
+
+- ``"dense"`` — sort-based capacity dispatch into a dense (E, C, d) buffer;
+  the per-expert GEMM is a batched matmul whose leading axis can be sharded
+  over the ``model`` mesh axis. GShard-style capacity drops in training;
+  ``dropless=True`` sizes C = T (worst case), which computes/streams
+  ``E / top_k`` × more rows than were actually routed (16× for
+  qwen3-30b-a3b, E=128 top-8).
+
+- ``"ragged"`` — MegaBlocks-style dropless dispatch: assignments are sorted
+  by expert id into ONE flat (rows, d) buffer whose per-expert groups are
+  padded to row-tile boundaries, so compute and HBM traffic scale with
+  ``sum(expert_counts)`` (+ ≤ one tile of alignment padding per active
+  expert), never with ``E × T``, and empty experts cost nothing. The Pallas
+  ``moe_gmm_ragged`` kernel consumes this layout with scalar-prefetched
+  per-tile expert ids, so its weight traffic is ``active_experts ×
+  bytes_per_expert`` — the exact quantity the serving engine's
+  ``expert_load_bytes`` counter measures (§5.4, Table 7). Ragged dispatch
+  never drops an assignment (it is inherently dropless); the serving engine
+  uses it by default. Measured traffic/compute ratio vs the dense dropless
+  buffer (benchmarks/gmm_ragged_vs_dense.py): GMM rows shrink to
+  ``top_k/E`` once coverage saturates — 0.064× at T=32k for qwen3-30b-a3b
+  (E=128, top-8) — and the CPU jnp data path runs ~4–16× faster at
+  T=2048 (top_k 8 → 1, E=32).
+
+Both layouts run under ``shard_map`` expert parallelism: the ragged "a2a"
+path moves per-destination-shard ragged groups (static worst-case chunk
+size, per-source counts communicated alongside) through the same pair of
+all-to-alls as the dense path; "psum" keeps tokens replicated over the
+expert axis and combines with one psum.
 
 Every forward returns an ``aux`` dict containing, per MoE block:
   - ``expert_counts`` (E,) int32 — tokens routed to each expert,
@@ -133,6 +158,114 @@ def _dispatch_gmm_combine(cfg: ModelConfig, p, xf: Array, idx: Array,
     return out, counts, dropped
 
 
+def ragged_tile_rows(n_assign: int, n_experts: int,
+                     m_blk_max: int = 128) -> Tuple[int, int]:
+    """Static (row-tile size, padded row count) for the ragged buffer.
+
+    The tile size tracks the ceil-average expert load so tiny batches
+    (decode) don't pay E × (m_blk - 1) alignment rows; the row count is the
+    worst case ``sum_e ceil(count_e / m_blk) * m_blk`` — at most one tile of
+    padding per expert — rounded up to a whole tile."""
+    avg = max(1, -(-n_assign // max(n_experts, 1)))
+    m_blk = 8
+    while m_blk < min(avg, m_blk_max):
+        m_blk *= 2
+    rows = n_assign + n_experts * (m_blk - 1)
+    rows = -(-rows // m_blk) * m_blk
+    return m_blk, rows
+
+
+def _group_ranks(flat: Array, counts: Array, n_experts: int) -> Array:
+    """Rank of each flat assignment within its expert group (stable sort
+    order). Entries with id >= n_experts get garbage ranks — callers mask
+    them via ``keep``."""
+    a = flat.shape[0]
+    order = jnp.argsort(flat, stable=True)
+    sorted_expert = flat[order]
+    gstarts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_sorted = (jnp.arange(a, dtype=jnp.int32)
+                  - gstarts[jnp.minimum(sorted_expert, n_experts - 1)])
+    return jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+
+
+def _combine_topk(y_flat: Array, slot: Array, keep: Array, w: Array) -> Array:
+    """Weighted combine out[t] = sum_i w[t,i] * y_flat[slot[t,i]], masked
+    by keep (dropped/masked assignments contribute nothing)."""
+    t, top_k = w.shape
+    n_rows = y_flat.shape[0]
+    slot_k = slot.reshape(t, top_k)
+    keep_k = keep.reshape(t, top_k)
+    out = jnp.zeros((t, y_flat.shape[1]), y_flat.dtype)
+    for i in range(top_k):                             # static, <= 8
+        contrib = y_flat[jnp.minimum(slot_k[:, i], n_rows - 1)]
+        gate = jnp.where(keep_k[:, i], w[:, i], 0.0)
+        out = out + contrib * gate[:, None].astype(contrib.dtype)
+    return out
+
+
+def ragged_dispatch_indices(expert_idx: Array, n_experts: int, m_blk: int,
+                            n_rows: int):
+    """Ragged tile-aligned ranking: for each (token, k) assignment compute
+    its row in the expert-sorted flat buffer whose per-expert groups start
+    on ``m_blk`` boundaries. Assignments with expert id == n_experts
+    (masked padding) get the out-of-range row ``n_rows`` and keep=False;
+    nothing else is ever dropped.
+
+    Returns (slot (T*k,), keep (T*k,), counts (E,),
+    tile_expert (n_rows/m_blk,) — the expert owning each row tile, or the
+    sentinel ``n_experts`` for alignment-padding tiles)."""
+    flat = expert_idx.reshape(-1).astype(jnp.int32)    # (A,)
+    counts = jnp.bincount(flat, length=n_experts).astype(jnp.int32)
+    padded = (-(-counts // m_blk) * m_blk).astype(jnp.int32)
+    pcum = jnp.cumsum(padded).astype(jnp.int32)        # inclusive
+    starts = pcum - padded                             # tile-aligned starts
+    pos = _group_ranks(flat, counts, n_experts)
+    keep = flat < n_experts
+    slot = jnp.where(keep, starts[jnp.minimum(flat, n_experts - 1)] + pos,
+                     n_rows).astype(jnp.int32)
+    # per-tile owner: the expert whose padded group covers the tile's first
+    # row (groups are tile-aligned, so one owner per tile); rows beyond the
+    # last group -> sentinel n_experts
+    row0 = jnp.arange(n_rows // m_blk, dtype=jnp.int32) * m_blk
+    tile_expert = jnp.searchsorted(pcum, row0,
+                                   side="right").astype(jnp.int32)
+    return slot, keep, counts, tile_expert
+
+
+def ragged_ffn_ref(cfg: ModelConfig, p, rows: Array, tile_expert: Array,
+                   m_blk: int) -> Array:
+    """jnp fallback for the ragged grouped matmul (same contract as
+    kernels/ops.ragged_gmm_fn): per row tile, the owning expert's fused
+    SwiGLU FFN; sentinel tiles produce zeros. Thin adapter over the single
+    oracle in kernels/ref.py — its per-tile weight gather mirrors the
+    kernel's scalar-prefetched DMA (only touched experts' weights read)."""
+    from repro.kernels.ref import moe_gmm_ragged_ref
+    return moe_gmm_ragged_ref(rows, p["w_gate"], p["w_up"], p["w_down"],
+                              tile_expert, m_blk)
+
+
+def _dispatch_gmm_combine_ragged(cfg: ModelConfig, p, xf: Array, idx: Array,
+                                 w: Array, n_local: int, gmm_fn):
+    """Ragged counterpart of ``_dispatch_gmm_combine``: gather tokens into
+    the expert-sorted tile-aligned (rows, d) buffer, ragged grouped GEMM,
+    weighted combine. Inherently dropless — rows scale with the routed
+    assignments, not E × T. idx entries >= n_local are masked out."""
+    e = cfg.moe
+    t, d = xf.shape
+    m_blk, n_rows = ragged_tile_rows(t * e.top_k, n_local)
+    slot, keep, counts, tile_expert = ragged_dispatch_indices(
+        idx, n_local, m_blk, n_rows)
+    tok_ids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), e.top_k)
+    tok_of_row = jnp.zeros((n_rows,), jnp.int32).at[
+        jnp.where(keep, slot, n_rows)
+    ].set(tok_ids, mode="drop")
+    rows = xf[tok_of_row]                              # (n_rows, d)
+    y = (gmm_fn or ragged_ffn_ref)(cfg, p, rows, tile_expert, m_blk)
+    out = _combine_topk(y, slot, keep, w)
+    return out, counts, jnp.zeros((), jnp.int32)
+
+
 def _sharded_moe_plan(cfg: ModelConfig, b: int, s: int):
     """If a sharding context is active and the shapes divide, return the
     shard_map plan for the expert-parallel MoE path. mode "a2a" partitions
@@ -171,16 +304,23 @@ def _sharded_moe_plan(cfg: ModelConfig, b: int, s: int):
 
 def apply_moe(cfg: ModelConfig, p, x: Array, *,
               valid: Optional[Array] = None,
-              gmm_fn=None, dropless: bool = False) -> Tuple[Array, dict]:
+              gmm_fn=None, dropless: bool = False,
+              moe_dispatch: str = "dense") -> Tuple[Array, dict]:
     """x: (B, S, d) -> (out (B,S,d), aux). ``gmm_fn`` optionally overrides the
-    batched per-expert GEMM (the Pallas kernel plugs in here). ``valid``
-    (B, S) masks padding tokens out of routing, capacity and the expert-load
-    counters (they contribute nothing and load nothing).
+    per-expert GEMM (the Pallas kernels plug in here; a dense gmm_fn takes
+    the (E, C, d) capacity buffer, a ragged one — marked ``fn.ragged=True``
+    — takes the expert-sorted (rows, d) buffer + per-tile expert ids).
+    ``valid`` (B, S) masks padding tokens out of routing, capacity and the
+    expert-load counters (they contribute nothing and load nothing).
 
-    ``dropless=True`` sizes the capacity buffer to the worst case (every
-    token on one expert) so no assignment is ever dropped — the serving
-    engine uses this so outputs are schedule-invariant (vLLM-style serving
-    never drops); training keeps GShard capacity dispatch.
+    ``moe_dispatch`` picks the layout: "dense" (capacity buffer) or
+    "ragged" (tile-aligned sorted buffer; inherently dropless, compute and
+    traffic scale with the routed work — the serving engine's default).
+
+    ``dropless=True`` sizes the dense capacity buffer to the worst case
+    (every token on one expert) so no assignment is ever dropped — the
+    serving engine uses this so outputs are schedule-invariant (vLLM-style
+    serving never drops); training keeps GShard capacity dispatch.
 
     DISTRIBUTION (§Perf iteration 2): when a sharding context is active the
     routed-expert path runs under ``shard_map`` — tokens stay on their batch
@@ -191,6 +331,14 @@ def apply_moe(cfg: ModelConfig, p, x: Array, *,
     XLA-auto path that re-materialized the global (E, C, d) capacity buffer
     with per-layer all-gathers (13.3 TB/device on qwen3-moe prefill_32k)."""
     e = cfg.moe
+    if moe_dispatch not in ("dense", "ragged"):
+        raise ValueError(f"unknown moe_dispatch {moe_dispatch!r}")
+    if gmm_fn is not None and getattr(gmm_fn, "ragged", None) is not None \
+            and gmm_fn.ragged != (moe_dispatch == "ragged"):
+        raise ValueError(
+            f"gmm_fn implements the "
+            f"{'ragged' if gmm_fn.ragged else 'dense'} contract but "
+            f"moe_dispatch={moe_dispatch!r}")
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
@@ -199,15 +347,19 @@ def apply_moe(cfg: ModelConfig, p, x: Array, *,
     plan = _sharded_moe_plan(cfg, b, s)
     if plan is not None:
         out, counts, dropped, pbar = _apply_moe_shard_map(
-            cfg, p, xf, vflat, gmm_fn, dropless, plan)
+            cfg, p, xf, vflat, gmm_fn, dropless, plan, moe_dispatch)
     else:
         idx, w, probs = route(cfg, p, xf)
         if vflat is not None:
             # invalid tokens route out-of-bounds => dropped from dispatch
             idx = jnp.where(vflat[:, None], idx, e.n_experts)
-        cap = t if dropless else capacity(cfg, t)
-        out, counts, dropped = _dispatch_gmm_combine(
-            cfg, p, xf, idx, w, cap, e.n_experts, gmm_fn)
+        if moe_dispatch == "ragged":
+            out, counts, dropped = _dispatch_gmm_combine_ragged(
+                cfg, p, xf, idx, w, e.n_experts, gmm_fn)
+        else:
+            cap = t if dropless else capacity(cfg, t)
+            out, counts, dropped = _dispatch_gmm_combine(
+                cfg, p, xf, idx, w, cap, e.n_experts, gmm_fn)
         pbar = jnp.mean(probs, axis=0)
 
     if e.n_shared_experts:
@@ -231,7 +383,7 @@ def apply_moe(cfg: ModelConfig, p, x: Array, *,
 
 def _apply_moe_shard_map(cfg: ModelConfig, p, xf: Array,
                          vflat: Optional[Array], gmm_fn, dropless: bool,
-                         plan):
+                         plan, moe_dispatch: str = "dense"):
     """Expert-parallel MoE under shard_map (see apply_moe docstring).
 
     mode "a2a" (§Perf iteration 7): tokens arrive partitioned over
@@ -242,9 +394,21 @@ def _apply_moe_shard_map(cfg: ModelConfig, p, xf: Array,
     each token's expert outputs home; the combine is local. The only
     per-layer MoE collectives are the two all-to-alls.
 
+    Ragged a2a (moe_dispatch="ragged"): each device lays its assignments
+    out destination-shard-major — per shard j, a tile-aligned ragged buffer
+    of the tokens routed to shard j's experts, statically sized to the
+    worst case (all local assignments on one shard). One symmetric
+    all_to_all moves the (tp, S_pair, d) chunk stack; the per-source padded
+    group sizes travel through a second (tiny) all_to_all so the receiver
+    can rebuild the per-tile expert metadata; the ragged GEMM skips the
+    slack tiles, so compute still scales with the routed work even though
+    the wire format is worst-case sized. The reverse all_to_all brings each
+    source's rows home and the combine is local, exactly as in dense mode.
+
     mode "psum": tokens replicated over the expert axis; each shard
-    processes its local experts and one psum combines (used when the
-    sequence does not divide the TP degree, e.g. single-token decode)."""
+    processes its local experts (dense capacity or ragged dispatch) and one
+    psum combines (used when the sequence does not divide the TP degree,
+    e.g. single-token decode)."""
     mesh, batch_axes, expert_axes, b_n, tp_n, mode = plan
     e = cfg.moe
     e_loc = e.n_experts // tp_n
@@ -269,6 +433,79 @@ def _apply_moe_shard_map(cfg: ModelConfig, p, xf: Array,
         t_loc = t // (b_n * tp_n)
         tok_axes = batch_axes + expert_axes
         a2a_axis = expert_axes[0]
+
+        if moe_dispatch == "ragged":
+            a_loc = t_loc * e.top_k
+            m_blk, s_pair = ragged_tile_rows(a_loc, e_loc)
+            n_send = tp_n * s_pair
+
+            def body(router, wg, wu, wd, xr, vr):
+                d = xr.shape[1]
+                idx, w, probs = route_local(router, xr, vr)
+                flat = idx.reshape(-1).astype(jnp.int32)       # global ids
+                counts_l = jnp.bincount(
+                    flat, length=e.n_experts).astype(jnp.int32)
+                padded = (-(-counts_l // m_blk) * m_blk).astype(jnp.int32)
+                # destination-shard-major layout: shard j's groups live in
+                # chunk j of the send buffer, tile-aligned within the chunk
+                p2 = padded.reshape(tp_n, e_loc)
+                pcum_l = jnp.cumsum(p2, axis=1).astype(jnp.int32)
+                starts = ((pcum_l - p2)
+                          + jnp.arange(tp_n, dtype=jnp.int32)[:, None]
+                          * s_pair).reshape(-1)
+                pos = _group_ranks(flat, counts_l, e.n_experts)
+                keep = flat < e.n_experts
+                slot = jnp.where(
+                    keep,
+                    starts[jnp.minimum(flat, e.n_experts - 1)] + pos,
+                    n_send).astype(jnp.int32)
+                tok_ids = jnp.repeat(jnp.arange(t_loc, dtype=jnp.int32),
+                                     e.top_k)
+                tok_of_row = jnp.zeros((n_send,), jnp.int32).at[
+                    jnp.where(keep, slot, n_send)
+                ].set(tok_ids, mode="drop")
+                buf = xr[tok_of_row].reshape(tp_n, s_pair, d)
+                # dispatch a2a: chunk j -> device j; symmetric layout, the
+                # receiver holds one s_pair chunk per source shard
+                buf = jax.lax.all_to_all(buf, a2a_axis, split_axis=0,
+                                         concat_axis=0, tiled=True)
+                # per-source padded group sizes for MY local experts
+                sizes = jax.lax.all_to_all(p2, a2a_axis, split_axis=0,
+                                           concat_axis=0, tiled=True)
+                ccum = jnp.cumsum(sizes, axis=1).astype(jnp.int32)
+                r0 = jnp.arange(s_pair // m_blk, dtype=jnp.int32) * m_blk
+                tile_expert = jax.vmap(
+                    lambda c: jnp.searchsorted(c, r0, side="right"))(
+                        ccum).reshape(-1).astype(jnp.int32)
+                rows = buf.reshape(n_send, d)
+                pl_ = {"w_gate": wg, "w_up": wu, "w_down": wd}
+                y = (gmm_fn or ragged_ffn_ref)(cfg, pl_, rows, tile_expert,
+                                               m_blk)
+                # combine a2a: each source's rows come home in place
+                y = jax.lax.all_to_all(y.reshape(tp_n, s_pair, d), a2a_axis,
+                                       split_axis=0, concat_axis=0,
+                                       tiled=True)
+                out = _combine_topk(y.reshape(n_send, d), slot, keep, w)
+                counts, dropped, pbar = tele(counts_l,
+                                             jnp.zeros((), jnp.int32),
+                                             probs, tok_axes)
+                return out, counts, dropped, pbar
+
+            e_spec = P(expert_axes, None, None)
+            in_specs = (P(), e_spec, e_spec, e_spec, P(tok_axes, None),
+                        P(tok_axes) if vflat is not None else P())
+            out_specs = (P(tok_axes, None), P(), P(), P())
+            if vflat is None:
+                fn = shard_map(lambda r, g_, u_, d_, xr, _:
+                               body(r, g_, u_, d_, xr, None), mesh=mesh,
+                               in_specs=in_specs, out_specs=out_specs,
+                               check_rep=False)
+            else:
+                fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_rep=False)
+            v_arg = vflat if vflat is not None else jnp.ones((), bool)
+            return fn(p["router"], p["w_gate"], p["w_up"], p["w_down"], xf,
+                      v_arg)
 
         def body(router, wg, wu, wd, xr, vr):
             idx, w, probs = route_local(router, xr, vr)
@@ -328,10 +565,14 @@ def _apply_moe_shard_map(cfg: ModelConfig, p, xf: Array,
         # keep only this shard's experts; others become the drop sentinel
         local = (idx >= j * e_loc) & (idx < (j + 1) * e_loc)
         idx_l = jnp.where(local, idx - j * e_loc, e_loc)
-        cap = t_loc if dropless else capacity(cfg, t_loc)
         pl = {"w_gate": wg, "w_up": wu, "w_down": wd}
-        out, counts_l, dropped_l = _dispatch_gmm_combine(
-            cfg, pl, xr, idx_l, w, cap, e_loc, gmm_fn)
+        if moe_dispatch == "ragged":
+            out, counts_l, dropped_l = _dispatch_gmm_combine_ragged(
+                cfg, pl, xr, idx_l, w, e_loc, gmm_fn)
+        else:
+            cap = t_loc if dropless else capacity(cfg, t_loc)
+            out, counts_l, dropped_l = _dispatch_gmm_combine(
+                cfg, pl, xr, idx_l, w, cap, e_loc, gmm_fn)
         # combine expert contributions across the expert axis
         out = jax.lax.psum(out, expert_axes)
         # counts_l covers this shard's experts only; assemble the global

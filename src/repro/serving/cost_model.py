@@ -123,12 +123,27 @@ class BlockCost:
 
 
 class CostModel:
+    """``moe_dispatch`` mirrors the engine's MoE data path:
+
+    - "ragged" (default): expert GMM rows scale with the routed work
+      (top_k per token) and expert weight traffic with the coverage
+      expectation — the analytic twin of the ragged dropless pipeline
+      (models/moe.py + kernels/moe_gmm_ragged.py).
+    - "dense": the worst-case dropless capacity buffer — every expert
+      computes a full (T, d) slab, so GMM flops carry an E/top_k
+      amplification and ALL E experts' weights stream each pass.
+    """
+
     def __init__(self, cfg: ModelConfig, hw: HardwareSpec,
-                 bytes_per_param: int = 2, bytes_per_act: int = 2):
+                 bytes_per_param: int = 2, bytes_per_act: int = 2,
+                 moe_dispatch: str = "ragged"):
         self.cfg = cfg
         self.hw = hw
         self.bp = bytes_per_param
         self.ba = bytes_per_act
+        if moe_dispatch not in ("dense", "ragged"):
+            raise ValueError(f"unknown moe_dispatch {moe_dispatch!r}")
+        self.moe_dispatch = moe_dispatch
         self.specs = cfg.block_specs()
         # per-block static sizes
         self._attn_params = [cfg.attn_param_count(s) for s in self.specs]
@@ -154,11 +169,17 @@ class CostModel:
         self._np_attn_params = np.array(self._attn_params, float)
         self._np_dense_ffn_bytes = np.array(self._dense_ffn_bytes, float)
         self._np_is_moe = np.array([s.ffn == FFN_MOE for s in self.specs])
+        # experts computed per routed token: top_k for the ragged pipeline,
+        # ALL E for the dense dropless capacity buffer (empty slab rows are
+        # still GEMMed)
+        self._experts_per_tok = (e.top_k if moe_dispatch == "ragged"
+                                 else e.n_experts)
         lin = np.zeros(L)
         for b, s_ in enumerate(self.specs):
             lin[b] = 2.0 * self._attn_params[b]
             if s_.ffn == FFN_MOE:
-                lin[b] += 2.0 * (e.top_k * 3 * cfg.d_model * e.expert_d_ff
+                lin[b] += 2.0 * (self._experts_per_tok * 3 * cfg.d_model
+                                 * e.expert_d_ff
                                  + e.n_shared_experts * 3 * cfg.d_model
                                  * e.shared_d_ff + cfg.d_model * e.n_experts)
             else:
@@ -194,7 +215,7 @@ class CostModel:
         f = 2.0 * n_tokens * self._attn_params[b]
         if s.ffn == FFN_MOE:
             e = cfg.moe
-            active = (e.top_k * 3 * cfg.d_model * e.expert_d_ff
+            active = (self._experts_per_tok * 3 * cfg.d_model * e.expert_d_ff
                       + e.n_shared_experts * 3 * cfg.d_model * e.shared_d_ff
                       + cfg.d_model * e.n_experts)
             f += 2.0 * n_tokens * active
@@ -218,12 +239,52 @@ class CostModel:
         c.weight_bytes += self._attn_params[b] * self.bp
         if s.ffn == FFN_MOE:
             e = cfg.moe
-            cov = expected_coverage(e.n_experts, e.top_k, n_tokens)
+            cov = (expected_coverage(e.n_experts, e.top_k, n_tokens)
+                   if self.moe_dispatch == "ragged" else float(e.n_experts))
             c.expert_bytes = cov * self._expert_bytes
             c.weight_bytes += c.expert_bytes + self._dense_ffn_bytes[b]
         else:
             c.weight_bytes += self._dense_ffn_bytes[b]
         return c
+
+    def moe_gmm_cost(self, n_tokens: float, dispatch: Optional[str] = None,
+                     m_blk: Optional[int] = None) -> Dict[str, float]:
+        """Modeled cost of ONE MoE block's routed-expert GMM at n_tokens.
+
+        ragged: rows = routed assignments (top_k per token) plus expected
+        tile-alignment padding (~half an m_blk row tile per active expert),
+        with m_blk defaulting to the tile size the runtime dispatch would
+        pick (models.moe.ragged_tile_rows — small tiles at decode scale);
+        weight traffic = active_experts × bytes_per_expert — exactly the
+        engine's ``expert_load_bytes`` counter and what the scalar-prefetch
+        kernel streams. dense: the dropless worst-case capacity buffer —
+        E × n_tokens rows, all E experts' weights.
+
+        act_bytes covers the GMM row buffer (read + write) plus the
+        dispatch gather / weighted combine on the (T·k, d) assignments."""
+        dispatch = dispatch or self.moe_dispatch
+        cfg = self.cfg
+        e = cfg.moe
+        if not e.enabled or n_tokens <= 0:
+            return {"rows": 0.0, "flops": 0.0, "weight_bytes": 0.0,
+                    "act_bytes": 0.0, "active_experts": 0.0}
+        routed = n_tokens * e.top_k
+        if m_blk is None:
+            # lazy import: models.moe pulls jax, which the analytic model
+            # otherwise never needs
+            from repro.models.moe import ragged_tile_rows
+            m_blk, _ = ragged_tile_rows(int(routed), e.n_experts)
+        cov = expected_coverage(e.n_experts, e.top_k, n_tokens)
+        if dispatch == "ragged":
+            rows = routed + cov * (m_blk - 1) / 2.0
+            weight_bytes = cov * self._expert_bytes
+        else:
+            rows = float(e.n_experts) * n_tokens
+            weight_bytes = float(e.n_experts) * self._expert_bytes
+        flops = 2.0 * rows * 3.0 * cfg.d_model * e.expert_d_ff
+        act_bytes = (2.0 * rows + 2.0 * routed) * cfg.d_model * self.ba
+        return {"rows": rows, "flops": flops, "weight_bytes": weight_bytes,
+                "act_bytes": act_bytes, "active_experts": cov}
 
     Q_TILE = 256  # flash-attention query tile: K/V streams once per tile
 
@@ -296,11 +357,17 @@ class CostModel:
              * touched).sum())
         e = cfg.moe
         if e.enabled:
-            n_eff = np.where(self._np_is_moe & touched,
-                             np.maximum(tokens_per_block, 1e-9), 0.0) \
-                ** COVERAGE_CORRELATION_ALPHA
-            cov = e.n_experts * (1.0 - (1.0 - e.top_k / e.n_experts) ** n_eff)
-            cov = np.where(self._np_is_moe & touched, cov, 0.0)
+            if self.moe_dispatch == "ragged":
+                n_eff = np.where(self._np_is_moe & touched,
+                                 np.maximum(tokens_per_block, 1e-9), 0.0) \
+                    ** COVERAGE_CORRELATION_ALPHA
+                cov = e.n_experts * (1.0
+                                     - (1.0 - e.top_k / e.n_experts) ** n_eff)
+                cov = np.where(self._np_is_moe & touched, cov, 0.0)
+            else:
+                # dense dropless buffer GEMMs (and streams) every expert
+                cov = np.where(self._np_is_moe & touched,
+                               float(e.n_experts), 0.0)
             expert_bytes = float(cov.sum()) * self._expert_bytes
         else:
             expert_bytes = 0.0

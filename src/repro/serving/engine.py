@@ -28,6 +28,7 @@ batch would issue — and accumulates ``bytes = nnz(union) * bytes_per_expert``.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -36,16 +37,26 @@ import numpy as np
 
 from repro.core.base import Scheduler, make_scheduler
 from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+from repro.models.config import dtype_bytes
 from repro.models.model import DecoderModel
 from repro.serving.kvcache import SlotAllocator
 
 Array = jax.Array
 
+# Upper bound on live prefill executables: one per (block_start, n_blocks,
+# emit) triple. Long mixed-shape traces would otherwise retain (and on
+# shape-thrash, recompile) executables without bound.
+PREFILL_CACHE_SIZE = 32
 
-def _bucket(n: int, minimum: int = 16) -> int:
+
+def _bucket(n: int, minimum: int = 16, cap: Optional[int] = None) -> int:
+    """Next power-of-two padding bucket >= n, clamped to ``cap`` (padding
+    past the engine's max_len would trace shapes no request can fill)."""
     b = minimum
     while b < n:
         b *= 2
+    if cap is not None:
+        b = min(b, max(cap, n))
     return b
 
 
@@ -64,10 +75,18 @@ def _scatter_cache(full, row, slot):
 class Engine:
     def __init__(self, model: DecoderModel, params, scheduler, *,
                  n_slots: int = 8, max_len: int = 512,
-                 eos_token: Optional[int] = None, gmm_fn=None):
+                 eos_token: Optional[int] = None, gmm_fn=None,
+                 moe_dispatch: str = "ragged"):
+        """``moe_dispatch`` selects the dropless MoE data path: "ragged"
+        (default — expert-sorted tile-aligned buffer, compute/traffic scale
+        with the routed work) or "dense" (worst-case (E, T, d) capacity
+        buffer). Outputs are identical either way; see models/moe.py."""
         self.model = model
         self.cfg = model.cfg
         self.params = params
+        if moe_dispatch not in ("dense", "ragged"):
+            raise ValueError(f"unknown moe_dispatch {moe_dispatch!r}")
+        self.moe_dispatch = moe_dispatch
         if isinstance(scheduler, str):
             scheduler = make_scheduler(scheduler, model.n_blocks,
                                        n_slots=n_slots)
@@ -95,12 +114,11 @@ class Engine:
         self.iteration = 0
         self.expert_load_bytes = 0
         self.iter_log: List[dict] = []
-        e = self.cfg.moe
-        bytes_per_el = 2 if "16" in self.cfg.param_dtype else 4
+        bytes_per_el = dtype_bytes(self.cfg.param_dtype)
         self._expert_bytes = self.cfg.expert_bytes(bytes_per_el)
 
         self._jit_embed = {}
-        self._jit_prefill = {}
+        self._jit_prefill: OrderedDict = OrderedDict()   # LRU, bounded
         self._jit_decode = jax.jit(self._decode_step_impl)
         self._jit_encode = jax.jit(self._encode_impl)
 
@@ -145,7 +163,8 @@ class Engine:
         valid = valid_rows[:, None]
         logits, cache, aux = self.model.forward(
             params, tokens, positions=positions, offset=offsets, cache=cache,
-            valid=valid, gmm_fn=self.gmm_fn, dropless=True)
+            valid=valid, gmm_fn=self.gmm_fn, dropless=True,
+            moe_dispatch=self.moe_dispatch)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok, cache, aux["expert_counts"]
 
@@ -158,7 +177,8 @@ class Engine:
         x, row, auxes = self.model.run_blocks(
             params, hidden, start, n,
             positions=positions, offset=offset, cache=row, valid=valid,
-            gmm_fn=self.gmm_fn, dropless=True)
+            gmm_fn=self.gmm_fn, dropless=True,
+            moe_dispatch=self.moe_dispatch)
         cache = _scatter_cache(cache, row, slot)
         counts = jnp.stack([a["expert_counts"] for a in auxes])  # (n, E)
         token = jnp.int32(-1)
@@ -171,9 +191,13 @@ class Engine:
 
     def _get_prefill_fn(self, start: int, n: int, emit: bool):
         key = (start, n, emit)
-        if key not in self._jit_prefill:
+        if key in self._jit_prefill:
+            self._jit_prefill.move_to_end(key)
+        else:
             self._jit_prefill[key] = jax.jit(
                 functools.partial(self._prefill_impl, start, n, emit))
+            while len(self._jit_prefill) > PREFILL_CACHE_SIZE:
+                self._jit_prefill.popitem(last=False)
         return self._jit_prefill[key]
 
     def _get_embed_fn(self):
@@ -246,7 +270,7 @@ class Engine:
             # fresh rectangle row: embed the token range
             prompt = self.prompts[rid]
             toks = prompt[sl.token_start:sl.token_end]
-            p = _bucket(n_tok)
+            p = _bucket(n_tok, cap=self.max_len)
             padded = np.zeros((1, p), np.int32)
             padded[0, :n_tok] = toks
             positions = sl.token_start + jnp.arange(p, dtype=jnp.int32)[None]

@@ -52,12 +52,12 @@ class SimResult:
 
 class Simulator:
     def __init__(self, cfg: ModelConfig, scheduler, hw: HardwareSpec,
-                 **sched_kw):
+                 moe_dispatch: str = "ragged", **sched_kw):
         self.cfg = cfg
         if isinstance(scheduler, str):
             scheduler = make_scheduler(scheduler, cfg.n_layers, **sched_kw)
         self.scheduler: Scheduler = scheduler
-        self.cost = CostModel(cfg, hw)
+        self.cost = CostModel(cfg, hw, moe_dispatch=moe_dispatch)
 
     def run(self, trace: List[TraceRequest],
             max_iterations: int = 2_000_000) -> SimResult:

@@ -1,0 +1,100 @@
+"""Deterministic stand-in for ``hypothesis`` so property tests degrade to a
+seeded parametrized sweep instead of killing the whole tier-1 run at
+collection on machines without the dependency (see requirements-dev.txt).
+
+Only the surface actually used by this test suite is implemented:
+``given`` (positional and keyword strategies), ``settings(max_examples=...)``
+and the strategies ``integers / floats / sampled_from / just / tuples /
+lists`` plus ``.map`` / ``.flatmap``. Draws come from a ``random.Random``
+seeded from the test's qualified name, so a failing example is reproducible
+by rerunning the same test — no shrinking, but stable.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def flatmap(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)).example(rng))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (imported ``as st``)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def tuples(*ss):
+        return _Strategy(lambda rng: tuple(s.example(rng) for s in ss))
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=10):
+        return _Strategy(
+            lambda rng: [elem.example(rng)
+                         for _ in range(rng.randint(min_size, max_size))])
+
+
+def settings(**kw):
+    def deco(fn):
+        fn._fallback_max_examples = kw.get("max_examples", DEFAULT_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*gargs, **gkw):
+    """Positional strategies fill the test's trailing parameters (matching
+    hypothesis semantics); keyword strategies fill by name. Remaining
+    parameters are hidden from the wrapper signature so pytest still
+    resolves fixtures/parametrize args against them."""
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        pos_names = names[len(names) - len(gargs):] if gargs else []
+        supplied = set(pos_names) | set(gkw)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                DEFAULT_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {nm: s.example(rng) for nm, s in zip(pos_names, gargs)}
+                drawn.update({k: s.example(rng) for k, s in gkw.items()})
+                fn(*args, **kwargs, **drawn)
+
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values() if p.name not in supplied])
+        return wrapper
+    return deco

@@ -19,12 +19,14 @@ from repro.serving.engine import Engine
 SCHEDS = ["continuous", "chunked", "layered", "hybrid", "static"]
 
 
-def generate(cfg, sched_name, prompts, max_new=6, **sched_kw):
+def generate(cfg, sched_name, prompts, max_new=6, moe_dispatch="ragged",
+             **sched_kw):
     model = DecoderModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
     sched = make_scheduler(sched_name, model.n_blocks, n_slots=4,
                            quantum=8, token_budget=16, **sched_kw)
-    eng = Engine(model, params, sched, n_slots=4, max_len=128)
+    eng = Engine(model, params, sched, n_slots=4, max_len=128,
+                 moe_dispatch=moe_dispatch)
     for p in prompts:
         eng.submit(p, max_new)
     eng.run()
@@ -61,6 +63,17 @@ def test_all_schedulers_agree(make_cfg):
     for name in SCHEDS[1:]:
         got = generate(cfg, name, PROMPTS)
         assert got == base, f"{name} diverged from continuous on {cfg.name}"
+
+
+@pytest.mark.parametrize("sched", ["layered", "chunked"])
+def test_moe_engine_dense_vs_ragged_dispatch(sched):
+    """Acceptance: the dropless engine must produce IDENTICAL tokens with
+    the dense capacity buffer and the ragged tile-aligned pipeline, under
+    both the layered and chunked schedulers."""
+    cfg = tiny_moe()
+    dense = generate(cfg, sched, PROMPTS, moe_dispatch="dense")
+    ragged = generate(cfg, sched, PROMPTS, moe_dispatch="ragged")
+    assert ragged == dense, f"{sched}: ragged dispatch changed outputs"
 
 
 def test_engine_matches_naive_reference():
@@ -124,6 +137,33 @@ def test_engine_eos_early_exit():
     eng.run()
     assert eng.outputs[rid] == [ref]       # stopped at EOS, not 50 tokens
     assert eng.requests[rid].finish_time is not None
+
+
+def test_bucket_capped_at_max_len():
+    from repro.serving.engine import _bucket
+    assert _bucket(5) == 16
+    assert _bucket(17) == 32
+    assert _bucket(100, cap=112) == 112     # clamped below the pow2 bucket
+    assert _bucket(100, cap=64) == 100      # never below n itself
+    assert _bucket(60, cap=96) == 64        # cap above the bucket: no-op
+    assert _bucket(100) == 128
+
+
+def test_prefill_jit_cache_is_lru_bounded():
+    from repro.serving.engine import PREFILL_CACHE_SIZE
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, "layered", n_slots=2, max_len=64)
+    for start in range(PREFILL_CACHE_SIZE + 8):
+        eng._get_prefill_fn(start % (PREFILL_CACHE_SIZE + 4), 1, False)
+    assert len(eng._jit_prefill) <= PREFILL_CACHE_SIZE
+    # hits refresh recency: oldest surviving key evicts first, hit key stays
+    keys = list(eng._jit_prefill)
+    eng._get_prefill_fn(*keys[0])                 # touch the LRU entry
+    eng._get_prefill_fn(999, 1, False)            # force one eviction
+    assert keys[0] in eng._jit_prefill
+    assert keys[1] not in eng._jit_prefill
 
 
 def test_engine_slot_reuse_many_requests():

@@ -138,6 +138,90 @@ def test_moe_gmm(e, c, d, f, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+# ------------------------------------------------------------ ragged gmm
+
+RAGGED_SWEEP = [
+    # (E, d, f, m_blk, counts) — skewed loads, empty experts, sentinel tail
+    (4, 64, 128, 8, [16, 0, 3, 1]),          # empty expert + tiny groups
+    (8, 64, 256, 16, [64, 0, 0, 0, 0, 0, 0, 1]),   # heavy skew
+    (2, 64, 100, 128, [128, 128]),           # exact tiles, ragged f
+    (4, 32, 64, 8, [0, 0, 0, 0]),            # fully masked batch
+]
+
+
+def _ragged_layout(e, m_blk, counts):
+    """Tile-aligned group layout + metadata from per-expert counts."""
+    padded = [-(-c // m_blk) * m_blk for c in counts]
+    used = sum(padded)
+    n_rows = used + m_blk            # leave a sentinel tail tile
+    tile_expert = []
+    for ex, p_ in enumerate(padded):
+        tile_expert += [ex] * (p_ // m_blk)
+    tile_expert += [e] * ((n_rows - used) // m_blk)
+    return n_rows, jnp.asarray(tile_expert, jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,d,f,m_blk,counts", RAGGED_SWEEP)
+def test_moe_gmm_ragged(e, d, f, m_blk, counts, dtype):
+    n_rows, tile_expert = _ragged_layout(e, m_blk, counts)
+    ks = jax.random.split(jax.random.PRNGKey(e * d + m_blk), 4)
+    rows = _rand(ks[0], (n_rows, d), dtype)
+    wg = _rand(ks[1], (e, d, f), dtype) / np.sqrt(d)
+    wu = _rand(ks[2], (e, d, f), dtype) / np.sqrt(d)
+    wd = _rand(ks[3], (e, f, d), dtype) / np.sqrt(f)
+    got = ops.moe_gmm_ragged(rows, wg, wu, wd, tile_expert, m_blk=m_blk,
+                             interpret=True)
+    want = ref.moe_gmm_ragged_ref(rows, wg, wu, wd, tile_expert, m_blk)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    # sentinel tiles must come out exactly zero
+    sent = np.repeat(np.asarray(tile_expert) == e, m_blk)
+    assert not np.asarray(got, np.float32)[sent].any()
+
+
+def test_fetch_expert_ids_forward_fill():
+    te = jnp.asarray([1, 1, 3, 4, 4], jnp.int32)
+    got = ops.fetch_expert_ids(te, 4)       # id 4 == sentinel
+    np.testing.assert_array_equal(np.asarray(got), [1, 1, 3, 3, 3])
+    all_sent = ops.fetch_expert_ids(jnp.asarray([4, 4], jnp.int32), 4)
+    np.testing.assert_array_equal(np.asarray(all_sent), [0, 0])
+
+
+def test_ragged_dispatch_matches_expert_ffn_ref():
+    """Acceptance: the ragged pipeline (dispatch + Pallas kernel + combine)
+    must match the dense path over expert_ffn_ref on skewed routings with
+    empty experts and masked padding tokens."""
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from conftest import tiny_moe
+    from repro.models import moe
+
+    cfg = tiny_moe()          # E=4, top_k=2
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    t = 24
+    xf = jax.random.normal(jax.random.PRNGKey(1), (t, cfg.d_model))
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (t, 2)), -1)
+    # skew: most tokens on expert 0, expert 1 empty, tail tokens masked
+    idx = np.zeros((t, 2), np.int32)
+    idx[:, 1] = 2
+    idx[5:8, 1] = 3
+    idx[-4:] = cfg.moe.n_experts            # masked (padding) tokens
+    idx = jnp.asarray(idx)
+
+    dense, counts_d, _ = moe._dispatch_gmm_combine(
+        cfg, p, xf, idx, w, t, cfg.moe.n_experts, moe.expert_ffn_ref)
+    ragged, counts_r, _ = moe._dispatch_gmm_combine_ragged(
+        cfg, p, xf, idx, w, cfg.moe.n_experts,
+        lambda c, p_, rows, te, mb: ops.moe_gmm_ragged(
+            rows, p_["w_gate"], p_["w_up"], p_["w_down"], te, m_blk=mb,
+            interpret=True))
+    np.testing.assert_array_equal(np.asarray(counts_d), np.asarray(counts_r))
+    assert int(counts_r[1]) == 0            # expert 1 really is empty
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ------------------------------------------- kernel <-> model integration
 
 def test_model_forward_with_pallas_gmm_matches_ref():
@@ -157,3 +241,42 @@ def test_model_forward_with_pallas_gmm_matches_ref():
                                      gmm_fn=ops.model_gmm_fn(cfg))
     np.testing.assert_allclose(np.asarray(got_logits), np.asarray(ref_logits),
                                atol=1e-4, rtol=1e-4)
+
+
+def test_model_forward_with_ragged_pallas_gmm_matches_ref():
+    """The ragged Pallas pipeline plugged into the real model (dropless
+    serving path) must match the dense jnp expert FFN."""
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from conftest import tiny_moe
+    from repro.models.model import DecoderModel
+
+    cfg = tiny_moe()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jnp.arange(1, 33, dtype=jnp.int32).reshape(2, 16)
+    ref_logits, _, ref_aux = model.forward(params, tokens, dropless=True)
+    got_logits, _, got_aux = model.forward(params, tokens,
+                                           gmm_fn=ops.ragged_gmm_fn(cfg),
+                                           moe_dispatch="ragged")
+    np.testing.assert_allclose(np.asarray(got_logits), np.asarray(ref_logits),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ref_aux["expert_counts"]),
+                                  np.asarray(got_aux["expert_counts"]))
+
+
+def test_gmm_fn_dispatch_contract_mismatch_raises():
+    import sys, os
+    sys.path.insert(0, os.path.dirname(__file__))
+    from conftest import tiny_moe
+    from repro.models import moe
+
+    cfg = tiny_moe()
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+    x = jnp.zeros((1, 4, cfg.d_model))
+    with pytest.raises(ValueError):
+        moe.apply_moe(cfg, p, x, gmm_fn=ops.ragged_gmm_fn(cfg),
+                      moe_dispatch="dense")
+    with pytest.raises(ValueError):
+        moe.apply_moe(cfg, p, x, gmm_fn=ops.model_gmm_fn(cfg),
+                      moe_dispatch="ragged")

@@ -2,7 +2,10 @@
 
 import math
 
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:          # degrade to a deterministic seeded sweep
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.core import layer_groups
 

@@ -3,7 +3,10 @@
 from __future__ import annotations
 
 import pytest
-from hypothesis import given, strategies as st
+try:
+    from hypothesis import given, strategies as st
+except ImportError:          # degrade to a deterministic seeded sweep
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.core.plan import Request
 from repro.serving.metrics import SLOConfig, percentile, request_metrics

@@ -14,7 +14,10 @@ from __future__ import annotations
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to a deterministic seeded sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import layer_groups
 from repro.core.base import SCHEDULERS, make_scheduler

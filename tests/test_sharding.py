@@ -80,6 +80,58 @@ def test_dryrun_subprocess_multipod():
     assert "all requested combinations compiled" in out.stdout
 
 
+_MOE_SHARD_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+jax.config.update("jax_default_matmul_precision", "highest")
+from jax.sharding import Mesh
+import sys, os
+sys.path.insert(0, os.path.join(os.getcwd(), "tests"))
+from conftest import tiny_moe
+from repro.models import moe
+from repro.sharding.partition import sharding_context
+
+cfg = tiny_moe()                      # E=4, top_k=2
+p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+rules = {"batch": ("data",), "tp": ("model",)}
+
+# a2a mode: b=4, s=16 -> 64 tokens, tokens*k >= 16*E
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+ref, aux0 = moe.apply_moe(cfg, p, x, dropless=True)
+with sharding_context(mesh, rules):
+    assert moe._sharded_moe_plan(cfg, 4, 16)[-1] == "a2a"
+    rr, ar = moe.apply_moe(cfg, p, x, moe_dispatch="ragged")
+assert float(jnp.abs(rr - ref).max()) < 1e-5, "a2a ragged diverged"
+np.testing.assert_array_equal(np.asarray(aux0["expert_counts"]),
+                              np.asarray(ar["expert_counts"]))
+
+# psum mode: decode-like s=1
+x2 = jax.random.normal(jax.random.PRNGKey(2), (64, 1, cfg.d_model))
+ref2, _ = moe.apply_moe(cfg, p, x2, dropless=True)
+with sharding_context(mesh, rules):
+    assert moe._sharded_moe_plan(cfg, 64, 1)[-1] == "psum"
+    rr2, _ = moe.apply_moe(cfg, p, x2, moe_dispatch="ragged")
+assert float(jnp.abs(rr2 - ref2).max()) < 1e-5, "psum ragged diverged"
+print("SHARDED-RAGGED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_moe_ragged_shard_map_matches_unsharded():
+    """The ragged expert-parallel paths (a2a with per-shard ragged chunks,
+    psum with local ragged dispatch) must reproduce the unsharded oracle.
+    Runs in a subprocess with 4 forced host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run(
+        [sys.executable, "-c", _MOE_SHARD_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED-RAGGED-OK" in out.stdout
+
+
 def test_device_count_is_one_here():
     """The 512-device forcing must NOT leak outside launch/dryrun (the
     brief's requirement: smoke tests and benches see 1 device)."""
