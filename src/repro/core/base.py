@@ -1,4 +1,5 @@
-"""Scheduler base: request table, admission, decode bookkeeping.
+"""Scheduler base: request table, memory-pressure-aware admission, decode
+bookkeeping, and preemption.
 
 Schedulers are *pure control logic* — no jax, no timing. The same scheduler
 instance drives either the real-execution engine (serving/engine.py) or the
@@ -7,21 +8,39 @@ code is what makes the functional-equivalence tests meaningful.
 
 Invariants enforced here and asserted by tests/test_scheduler_invariants.py:
   I1 (stall-free): every iteration's plan decodes EVERY request in DECODE
-      state — decode work is never preempted by prefill.
-  I2 (coverage): over a request's lifetime its prefill slices tile the
-      rectangle [0, prompt_len) x [0, n_blocks) exactly once — each layer
-      sees each prompt token exactly once (the paper's anti-amplification
-      property is I2 plus the per-iteration shape of the slices).
+      state — decode work is never preempted by prefill.  (A memory-pressure
+      eviction moves its victim OUT of DECODE before the plan is built, so
+      I1 is stated over the post-eviction decode set.)
+  I2 (coverage): over a prefill *epoch* (admission → completion or
+      preemption) a request's slices tile the rectangle
+      [0, prompt_len) x [0, n_blocks) at most once, and the final epoch
+      tiles it exactly once — each layer sees each prompt token exactly
+      once per epoch (the paper's anti-amplification property is I2 plus
+      the per-iteration shape of the slices).
   I3 (order): slices of a request are emitted in block-major/token-major
-      order consistent with causal dependencies.
+      order consistent with causal dependencies (restarting at (0, 0) on a
+      new epoch).
+
+Memory model (DESIGN.md §Paged KV memory): when a ``PagedKVAllocator`` is
+attached, admission reserves ``prompt_len + decode_reserve`` tokens of KV
+plus the scheduler's worst-case boundary-activation stash up front, so
+prefill never runs out of pages mid-flight; decode growth past the
+reservation is charged page-by-page at the top of ``next_plan`` and, when
+the pool is dry, evicts victims latest-arrival-first (restore-by-recompute:
+generated tokens fold into the recompute prompt and the request re-enters
+the queue ahead of never-admitted arrivals).  Without an allocator the
+schedulers behave exactly as before (slot-bound admission only).
 """
 
 from __future__ import annotations
 
 from collections import deque
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+
+if TYPE_CHECKING:  # avoid core <-> serving import cycle at runtime
+    from repro.serving.kvcache import PagedKVAllocator
 
 
 class Scheduler:
@@ -36,6 +55,33 @@ class Scheduler:
         self.requests: Dict[int, Request] = {}
         self.waiting: deque = deque()
         self.iteration = 0
+        # paged KV memory (optional — None means unbounded memory)
+        self.kv: Optional["PagedKVAllocator"] = None
+        self.decode_reserve = 0
+        self.preemption_enabled = True
+        self.n_preemptions = 0
+
+    # -- memory subsystem ------------------------------------------------------
+
+    def attach_kv(self, kv: "PagedKVAllocator", *,
+                  decode_reserve: Optional[int] = None,
+                  preemption: bool = True) -> None:
+        """Share a paged allocator with this scheduler. ``decode_reserve``
+        is the per-request decode KV reservation in tokens (default: one
+        page); growth beyond it triggers the preemption path."""
+        self.kv = kv
+        self.decode_reserve = kv.page_size if decode_reserve is None \
+            else decode_reserve
+        self.preemption_enabled = preemption
+
+    def max_stash_tokens(self, req: Request,
+                         prompt_len: Optional[int] = None) -> int:
+        """Worst-case boundary-activation stash (in prompt tokens) this
+        scheduler will hold live for ``req`` — charged against the page
+        pool at admission. Token-axis schedulers carry no stash.
+        ``prompt_len`` overrides the request's current value (used to
+        evaluate eligibility at the POST-fold recompute length)."""
+        return 0
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -48,6 +94,8 @@ class Scheduler:
     def finish(self, req_id: int) -> None:
         """Executor signals EOS / client cancel before max_new_tokens."""
         self.requests[req_id].state = RequestState.DONE
+        if self.kv is not None and self.kv.owns(req_id):
+            self.kv.free(req_id)
 
     @property
     def active(self) -> List[Request]:
@@ -67,39 +115,174 @@ class Scheduler:
 
     # -- admission ------------------------------------------------------------
 
+    def _kv_admissible(self, r: Request) -> bool:
+        if self.kv is None:
+            return True
+        need = r.prompt_len + self.decode_reserve
+        stash = self.max_stash_tokens(r)
+        # a request that cannot fit even an EMPTY pool would wait forever —
+        # surface it instead of deadlocking the queue (queued requests have
+        # n_generated == n_folded, so prompt_len + remaining generation is
+        # the true final sequence length)
+        worst = r.prompt_len + (r.max_new_tokens - r.n_folded)
+        if not self.kv.fits_pool(worst, stash):
+            raise RuntimeError(
+                f"request {r.req_id} needs {worst} KV tokens "
+                f"(+{stash} stash) but the pool holds only "
+                f"{self.kv.n_pages * self.kv.page_size} tokens; "
+                f"enlarge --pages or shard the request")
+        return self.kv.can_admit(need, stash)
+
     def admit(self, now: float, limit: Optional[int] = None) -> List[int]:
+        """FCFS admission, gated on BOTH a free slot and the page pool
+        holding the request's prompt KV + decode reservation + stash.
+        Head-of-line blocking is deliberate: bypassing a big request with
+        later small ones would starve it under sustained load."""
         admitted = []
         while self.waiting and self.n_active < self.n_slots:
             if limit is not None and len(admitted) >= limit:
                 break
-            rid = self.waiting.popleft()
+            rid = self.waiting[0]
             r = self.requests[rid]
+            if not self._kv_admissible(r):
+                break
+            self.waiting.popleft()
+            if self.kv is not None:
+                self.kv.reserve(rid, r.prompt_len + self.decode_reserve,
+                                self.max_stash_tokens(r))
             r.state = RequestState.PREFILL
-            r.admit_time = now
+            if r.admit_time is None:        # queueing delay = FIRST admission
+                r.admit_time = now
             admitted.append(rid)
         return admitted
+
+    # -- preemption ------------------------------------------------------------
+
+    def _evictable(self, r: Request) -> bool:
+        """True iff ``r`` would still fit an EMPTY pool after the
+        restore-by-recompute fold (prompt + generated-so-far, with the
+        stash re-evaluated at the folded length)."""
+        folded = r.prompt_len + (r.n_generated - r.n_folded)
+        worst = folded + (r.max_new_tokens - r.n_generated)
+        return self.kv.fits_pool(worst,
+                                 self.max_stash_tokens(r, prompt_len=folded))
+
+    def _on_preempt(self, req_id: int) -> None:
+        """Scheduler-specific cleanup (drop the victim from in-flight cohort
+        / chunk-run state). Base schedulers keep no such state."""
+
+    def preempt(self, req_id: int) -> None:
+        """Evict ``req_id`` (restore-by-recompute): free its pages, fold the
+        tokens it already generated into the recompute prompt, and requeue
+        it ahead of never-admitted arrivals (earliest-arrival first)."""
+        r = self.requests[req_id]
+        assert r.state in (RequestState.PREFILL, RequestState.DECODE), r.state
+        self._on_preempt(req_id)
+        if self.kv is not None and self.kv.owns(req_id):
+            self.kv.free(req_id)
+        if r.orig_prompt_len is None:
+            r.orig_prompt_len = r.prompt_len
+        # recompute prefill covers prompt + everything generated so far; its
+        # final slice then emits generation token n_generated + 1 (greedy
+        # decode of token g+1 given the g-token prefix is the same function
+        # whether reached by a decode step or by prefill over the prefix).
+        # Only the NOT-yet-folded tail is appended — a second preemption
+        # must not re-fold tokens folded by the first.
+        r.prompt_len += r.n_generated - r.n_folded
+        r.n_folded = r.n_generated
+        r.tokens_done = 0
+        r.blocks_done = 0
+        r.n_preemptions += 1
+        r.state = RequestState.PREEMPTED
+        self.waiting.appendleft(req_id)
+        self.n_preemptions += 1
+
+    def _reserve_decode_growth(self, now: float) -> List[int]:
+        """Pre-charge this iteration's decode KV growth (one token per
+        DECODE request), evicting victims latest-arrival-first while the
+        pool cannot cover the deficit. Runs BEFORE the plan is built so I1
+        is stated over the surviving decode set."""
+        if self.kv is None:
+            return []
+        preempted: List[int] = []
+        while True:
+            decodes = [r for r in self.requests.values()
+                       if r.state == RequestState.DECODE]
+            # KV after this iteration's write: recompute prompt plus the
+            # tokens generated SINCE the last fold (folded ones are already
+            # inside prompt_len)
+            deficit = sum(
+                self.kv.growth_deficit(
+                    r.req_id,
+                    r.prompt_len + r.n_generated - r.n_folded)
+                for r in decodes)
+            if deficit <= self.kv.n_free_pages:
+                break
+            if not self.preemption_enabled:
+                # let grow_to below surface PagedPoolExhausted — the
+                # operator chose queueing-only (--preemption off)
+                break
+            # eligible victims: evicting must leave the request re-
+            # admittable — folding generated tokens into the recompute
+            # prompt grows the worst-case stash charge, so a request can
+            # be resident yet too big to ever come back.  The earliest-
+            # arrival resident is never evicted: admission guarantees a
+            # lone request always fits, so keeping it guarantees forward
+            # progress.
+            earliest = min(self.active,
+                           key=lambda r: (r.arrival_time, r.req_id))
+            victims = [r for r in self.active
+                       if r is not earliest and self._evictable(r)]
+            if not victims:
+                raise RuntimeError(
+                    "paged KV pool cannot cover decode growth and no "
+                    "evictable resident remains — enlarge the pool")
+            victim = max(victims,
+                         key=lambda r: (r.arrival_time, r.req_id))
+            self.preempt(victim.req_id)
+            preempted.append(victim.req_id)
+        for r in decodes:
+            self.kv.grow_to(r.req_id,
+                            r.prompt_len + r.n_generated - r.n_folded)
+        return preempted
 
     # -- per-iteration hooks ----------------------------------------------------
 
     def next_plan(self, now: float = 0.0) -> IterationPlan:
+        """Template method: resolve memory pressure (possibly preempting),
+        then delegate iteration planning to the scheduler's ``_plan``."""
+        preempted = self._reserve_decode_growth(now)
+        plan = self._plan(now)
+        plan.preempted_ids = preempted
+        return plan
+
+    def _plan(self, now: float) -> IterationPlan:
         raise NotImplementedError
 
     def _finish_decode_bookkeeping(self, plan: IterationPlan) -> None:
         """Advance decode counters; retire requests that hit max_new_tokens.
-        The first token of a request is produced by its final prefill slice,
-        so a request entering DECODE already has n_generated == 1."""
+        The first token of a prefill epoch is produced by its final prefill
+        slice, so a fresh request entering DECODE has n_generated == 1 (a
+        recompute-restored one continues from its pre-eviction count)."""
         for rid in plan.decode_ids:
             r = self.requests[rid]
             r.n_generated += 1
             if r.n_generated >= r.max_new_tokens:
                 r.state = RequestState.DONE
+                if self.kv is not None and self.kv.owns(rid):
+                    self.kv.free(rid)
         for sl in plan.prefill:
             if sl.emits_first_token:
                 r = self.requests[sl.req_id]
+                if self.kv is not None and self.kv.owns(sl.req_id):
+                    self.kv.set_length(sl.req_id, r.prompt_len)
+                    self.kv.release_stash(sl.req_id)
                 r.state = RequestState.DECODE
-                r.n_generated = 1
-                if r.max_new_tokens <= 1:
+                r.n_generated += 1
+                if r.n_generated >= r.max_new_tokens:
                     r.state = RequestState.DONE
+                    if self.kv is not None and self.kv.owns(sl.req_id):
+                        self.kv.free(sl.req_id)
         self.iteration += 1
 
 

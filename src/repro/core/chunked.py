@@ -17,7 +17,7 @@ from repro.core.plan import IterationPlan, PrefillSlice, RequestState
 class ChunkedPrefillScheduler(Scheduler):
     name = "chunked"
 
-    def next_plan(self, now: float = 0.0) -> IterationPlan:
+    def _plan(self, now: float = 0.0) -> IterationPlan:
         plan = IterationPlan()
         plan.decode_ids = self.decode_ids()
 

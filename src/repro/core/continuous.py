@@ -16,7 +16,7 @@ from repro.core.plan import IterationPlan, PrefillSlice
 class ContinuousBatchingScheduler(Scheduler):
     name = "continuous"
 
-    def next_plan(self, now: float = 0.0) -> IterationPlan:
+    def _plan(self, now: float = 0.0) -> IterationPlan:
         plan = IterationPlan()
         plan.decode_ids = self.decode_ids()
         plan.admitted_ids = self.admit(now)

@@ -34,6 +34,15 @@ class HybridPrefillScheduler(Scheduler):
         self._run: Optional[Tuple[int, List[Tuple[int, int]], int,
                                   List[Tuple[int, int]], int]] = None
 
+    def max_stash_tokens(self, req, prompt_len=None) -> int:
+        # hybrid stashes one chunk's boundary activations at a time
+        return min(self.chunk_size,
+                   req.prompt_len if prompt_len is None else prompt_len)
+
+    def _on_preempt(self, req_id: int) -> None:
+        if self._run is not None and self._run[0] == req_id:
+            self._run = None
+
     def _chunks(self, prompt_len: int) -> List[Tuple[int, int]]:
         n = max(1, math.ceil(prompt_len / self.chunk_size))
         out, start = [], 0
@@ -55,7 +64,7 @@ class HybridPrefillScheduler(Scheduler):
         groups = layer_groups.partition(self.n_blocks, g)
         self._run = (rid, chunks, 0, groups, 0)
 
-    def next_plan(self, now: float = 0.0) -> IterationPlan:
+    def _plan(self, now: float = 0.0) -> IterationPlan:
         plan = IterationPlan()
         plan.decode_ids = self.decode_ids()
 

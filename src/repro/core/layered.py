@@ -39,6 +39,22 @@ class LayeredPrefillScheduler(Scheduler):
         # active cohort: (request ids, group boundaries, next group index)
         self._cohort: Optional[Tuple[List[int], List[Tuple[int, int]], int]] = None
 
+    def max_stash_tokens(self, req, prompt_len=None) -> int:
+        # layered prefill stashes the FULL prompt's boundary activations
+        # between layer groups
+        return req.prompt_len if prompt_len is None else prompt_len
+
+    def _on_preempt(self, req_id: int) -> None:
+        """Drop an evicted request from the in-flight cohort; the survivors
+        keep advancing through the remaining groups."""
+        if self._cohort is None:
+            return
+        rids, groups, gi = self._cohort
+        if req_id not in rids:
+            return
+        rids = [r for r in rids if r != req_id]
+        self._cohort = (rids, groups, gi) if rids else None
+
     def _start_cohort(self, now: float) -> None:
         limit = None if self.merge_cohort else 1
         admitted = self.admit(now, limit=limit)
@@ -52,7 +68,7 @@ class LayeredPrefillScheduler(Scheduler):
             groups = layer_groups.partition(self.n_blocks, g)
         self._cohort = (admitted, groups, 0)
 
-    def next_plan(self, now: float = 0.0) -> IterationPlan:
+    def _plan(self, now: float = 0.0) -> IterationPlan:
         plan = IterationPlan()
         plan.decode_ids = self.decode_ids()
 

@@ -27,6 +27,10 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"
     DECODE = "decode"
+    # victim of a memory-pressure eviction, queued for restore-by-recompute:
+    # its pages are freed, its generated tokens are folded into the
+    # recompute prompt, and it re-enters PREFILL at the head of the queue
+    PREEMPTED = "preempted"
     DONE = "done"
 
 
@@ -39,10 +43,15 @@ class Request:
     # engine-only: actual token ids (None in the simulator)
     prompt_tokens: Optional[object] = None
     state: RequestState = RequestState.WAITING
-    # prefill progress
+    # prefill progress. After a preemption, prompt_len is the RECOMPUTE
+    # length (original prompt + tokens generated before eviction) and these
+    # counters restart from zero for the new prefill epoch.
     tokens_done: int = 0            # prompt tokens fully processed (all blocks)
     blocks_done: int = 0            # blocks processed for the current chunk
     n_generated: int = 0
+    n_preemptions: int = 0
+    n_folded: int = 0               # generated tokens folded into prompt_len
+    orig_prompt_len: Optional[int] = None   # set on first preemption
     # metrics (filled by engine/simulator)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -57,6 +66,13 @@ class Request:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.arrival_time
+
+    def queue_delay(self) -> Optional[float]:
+        """Time spent queued before FIRST admission (memory-gated admission
+        makes this a first-class serving metric)."""
+        if self.admit_time is None:
+            return None
+        return self.admit_time - self.arrival_time
 
     def tbts(self) -> List[float]:
         ts = [self.first_token_time] + self.token_times \
@@ -87,6 +103,9 @@ class IterationPlan:
     decode_ids: List[int] = field(default_factory=list)
     prefill: List[PrefillSlice] = field(default_factory=list)
     admitted_ids: List[int] = field(default_factory=list)
+    # memory-pressure victims evicted THIS iteration (latest-arrival-first);
+    # the executor frees their slot/stash state before running the plan
+    preempted_ids: List[int] = field(default_factory=list)
 
     @property
     def empty(self) -> bool:

@@ -19,7 +19,7 @@ class StaticBatchScheduler(Scheduler):
         super().__init__(n_blocks, **kw)
         self.batch_size = min(batch_size, self.n_slots)
 
-    def next_plan(self, now: float = 0.0) -> IterationPlan:
+    def _plan(self, now: float = 0.0) -> IterationPlan:
         plan = IterationPlan()
         if self.n_active == 0 and self.waiting:
             plan.admitted_ids = self.admit(now, limit=self.batch_size)

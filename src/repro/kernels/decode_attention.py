@@ -1,10 +1,24 @@
-"""Pallas TPU decode-attention kernel.
+"""Pallas TPU decode-attention kernels: contiguous and paged.
 
-One new query token per sequence attending over a padded slot KV cache with
-per-row valid lengths — the memory-bound stage whose stall-freeness the
-schedulers protect. Grid is (batch, kv_heads): each step streams that kv
-head's cache once from HBM through VMEM while computing all ``group`` query
-heads that share it (GQA reuse), with online softmax over KV tiles.
+One new query token per sequence attending over the KV cache with per-row
+valid lengths — the memory-bound stage whose stall-freeness the schedulers
+protect.
+
+``decode_attention_pallas`` assumes the slot layout: each sequence owns a
+contiguous ``max_len`` cache row.  Grid is (batch, kv_heads): each step
+streams that kv head's cache once from HBM through VMEM while computing all
+``group`` query heads that share it (GQA reuse), with online softmax over
+KV tiles.
+
+``paged_decode_attention_pallas`` is the page-table-aware variant backing
+the PagedKVAllocator's scattered physical layout: K/V live in a global
+``(n_pages, page_size, Hkv, hd)`` pool and each sequence's *block table*
+(scalar-prefetched, so the index maps can read it before the body runs)
+names the physical pages holding its KV in logical order.  Grid is (batch,
+kv_heads, max_pages): the DMA engine streams exactly the pages the block
+table names — one page per grid step — while online-softmax state persists
+in VMEM scratch across the page axis, exactly the structure of the slot
+kernel with the contiguous row replaced by a block-table walk.
 """
 
 from __future__ import annotations
@@ -16,6 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -94,4 +109,106 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
         interpret=interpret,
     )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.transpose(0, 2, 1, 3).reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Page-table-aware variant (PagedKVAllocator physical layout)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, page_size: int,
+                         scale: float, max_pages: int,
+                         window: Optional[int]):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+    length = len_ref[bi]
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    n_seq_pages = (length + page_size - 1) // page_size
+
+    @pl.when(pi < n_seq_pages)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (g, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = q @ k.T                                        # (g, page)
+        kv_pos = pi * page_size + jax.lax.iota(jnp.int32, page_size)
+        mask = kv_pos[None, :] < length
+        if window is not None:
+            mask &= kv_pos[None, :] >= length - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+
+    @pl.when(pi == max_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array, *,
+                                  window: Optional[int] = None,
+                                  scale: Optional[float] = None,
+                                  interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k_pages/v_pages: (n_pages, page_size, Hkv, hd) —
+    the global page pool; block_tables: (B, max_pages) int32 physical page
+    ids in logical order (entries past a sequence's page count are ignored
+    but must be valid indices — pad with 0); lengths: (B,) int32 valid KV
+    tokens INCLUDING the new token's K/V already written.
+    Returns (B, H, hd)."""
+    b, h, hd = q.shape
+    n_pages, page_size, hkv, _ = k_pages.shape
+    g = h // hkv
+    max_pages = block_tables.shape[1]
+    assert block_tables.shape == (b, max_pages), block_tables.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(b, g, hkv, hd).transpose(0, 2, 1, 3)   # (B, Hkv, g, hd)
+    bt_flat = block_tables.reshape(-1).astype(jnp.int32)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=page_size,
+                               scale=scale, max_pages=max_pages,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # lengths, flat block tables
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda bi, hi, pi, lens, bt: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, hi, pi, lens, bt:
+                         (bt[bi * max_pages + pi], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, hi, pi, lens, bt:
+                         (bt[bi * max_pages + pi], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, hi, pi, lens, bt: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),   # acc
+            pltpu.VMEM((g, 1), jnp.float32),    # running max
+            pltpu.VMEM((g, 1), jnp.float32),    # running denom
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), bt_flat, qg, k_pages, v_pages)
     return out.transpose(0, 2, 1, 3).reshape(b, h, hd)

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.decode_attention import (decode_attention_pallas,
+                                            paged_decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import moe_gmm_pallas
 from repro.kernels.moe_gmm_ragged import moe_gmm_ragged_pallas
@@ -71,6 +72,22 @@ def decode_attention(q, k_cache, v_cache, lengths, *,
     v_p, _ = _pad_to(v_cache, 1, kv_blk)
     return decode_attention_pallas(q, k_p, v_p, lengths, window=window,
                                    kv_blk=kv_blk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Decode attention over the PagedKVAllocator's scattered physical
+    layout: ``block_tables`` (B, max_pages) holds each sequence's physical
+    page ids (``PagedKVAllocator.block_table``, padded with 0 — any valid
+    page id works, padded entries are masked by ``lengths``). Page count
+    and size come from the pool shape; no padding is needed because pages
+    are fixed-size by construction."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    return paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
+                                         lengths, window=window,
+                                         interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("c_blk", "f_blk", "interpret"))

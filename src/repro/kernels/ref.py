@@ -57,6 +57,24 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array, *,
+                               window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the page-table-aware decode kernel: gather each
+    sequence's pages into a contiguous cache row (the logical view the
+    block table encodes), then defer to the contiguous-cache oracle.
+    q: (B,H,hd); pages: (n_pages, page_size, Hkv, hd);
+    block_tables: (B, max_pages) int32; lengths: (B,) -> (B,H,hd)."""
+    b = q.shape[0]
+    n_pages, page_size, hkv, hd = k_pages.shape
+    max_pages = block_tables.shape[1]
+    k = k_pages[block_tables].reshape(b, max_pages * page_size, hkv, hd)
+    v = v_pages[block_tables].reshape(b, max_pages * page_size, hkv, hd)
+    return decode_attention_ref(q, k, v, lengths, window=window, scale=scale)
+
+
 def moe_gmm_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                 w_down: jax.Array) -> jax.Array:
     """x: (E,C,d) -> (E,C,d), fused SwiGLU per expert."""

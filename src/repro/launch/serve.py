@@ -37,7 +37,10 @@ def serve_real(args) -> None:
                            n_slots=args.slots, quantum=args.quantum,
                            token_budget=args.token_budget)
     eng = Engine(model, params, sched, n_slots=args.slots,
-                 max_len=args.max_len, moe_dispatch=args.moe_dispatch)
+                 max_len=args.max_len, moe_dispatch=args.moe_dispatch,
+                 pages=args.pages, page_size=args.page_size,
+                 preemption=args.preemption == "on",
+                 decode_reserve=args.decode_reserve)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         n = int(rng.integers(16, args.max_len // 2))
@@ -52,8 +55,12 @@ def serve_real(args) -> None:
           f"{args.requests} requests in {eng.iteration} iterations")
     print(f"[serve] ttft(iters) mean={m['ttft_mean']:.1f} "
           f"p99={m['ttft_p99']:.1f}; expert-load "
-          f"{eng.expert_load_bytes / 1e6:.1f} MB; "
-          f"kv pages high-water {eng.alloc.pages_high_water}")
+          f"{eng.expert_load_bytes / 1e6:.1f} MB")
+    print(f"[serve] kv pages high-water {eng.alloc.pages_high_water}"
+          f"/{eng.alloc.n_pages}; queue delay mean "
+          f"{m['queue_delay_mean']:.1f} iters; "
+          f"preemptions {eng.n_preempted} "
+          f"(rate {m['preemption_rate']:.2f}/req)")
 
 
 def serve_sim(args) -> None:
@@ -63,18 +70,27 @@ def serve_sim(args) -> None:
                           seed=args.seed)
     sim = Simulator(cfg, args.scheduler, hw, n_slots=args.slots,
                     quantum=args.quantum, token_budget=args.token_budget,
-                    moe_dispatch=args.moe_dispatch)
+                    moe_dispatch=args.moe_dispatch, n_pages=args.pages,
+                    page_size=args.page_size,
+                    preemption=args.preemption == "on",
+                    decode_reserve=args.decode_reserve)
     res = sim.run(trace)
     m = request_metrics(res.requests, SLOConfig(args.ttft_slo, args.tbt_slo))
     print(f"[serve-sim] {cfg.name} x {args.scheduler} on {args.dataset} "
-          f"@{args.rate} req/s ({hw.name})")
+          f"@{args.rate} req/s ({hw.name}; "
+          f"{sim.kv.n_pages} x {sim.kv.page_size}-token pages)")
     for k in ("ttft_mean", "ttft_p99", "tbt_mean", "tbt_p99",
-              "slo_attainment", "e2e_mean"):
+              "slo_attainment", "e2e_mean", "queue_delay_mean",
+              "queue_delay_p99", "preemption_rate"):
         print(f"[serve-sim]   {k:<16} {m[k]:.3f}")
     print(f"[serve-sim]   energy/token     "
           f"{res.energy_per_token * 1e3:.1f} mJ")
     print(f"[serve-sim]   expert traffic   "
           f"{res.total_expert_bytes / 1e12:.2f} TB")
+    print(f"[serve-sim]   kv pages         "
+          f"high-water {res.pages_high_water}/{res.n_pool_pages}; "
+          f"{res.n_preemptions} preemptions, "
+          f"{res.recompute_tokens} recomputed tokens")
 
 
 def main() -> None:
@@ -91,6 +107,19 @@ def main() -> None:
     ap.add_argument("--quantum", type=int, default=512)
     ap.add_argument("--token-budget", type=int, default=512)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="paged KV pool size in pages (default: engine "
+                         "fills every slot row; simulator sizes from the "
+                         "hardware's HBM capacity minus weights)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV tokens per page")
+    ap.add_argument("--preemption", default="on", choices=["on", "off"],
+                    help="memory-pressure eviction with restore-by-"
+                         "recompute (off = queueing-only admission)")
+    ap.add_argument("--decode-reserve", type=int, default=None,
+                    help="per-request decode KV reservation in tokens "
+                         "(default: one page; 0 = admit on prompt KV only "
+                         "and rely on preemption for decode growth)")
     ap.add_argument("--moe-dispatch", default="ragged",
                     choices=["ragged", "dense"],
                     help="dropless MoE data path: ragged (sorted "

@@ -338,6 +338,14 @@ class ModelConfig:
                 total += 2 * self.n_kv_heads * self.head_dim_ * bytes_per_el
         return total
 
+    def stash_token_factor(self) -> float:
+        """KV-token-equivalents charged per layered-prefill boundary-
+        activation token (one d_model vector) — PagedKVAllocator's
+        ``stash_factor``. Element size cancels, so this is dtype-free;
+        pure-recurrent stacks (no KV growth) fall back to 1.0."""
+        kv_els = self.kv_bytes_per_token(1)
+        return self.d_model / kv_els if kv_els > 0 else 1.0
+
     def validate(self) -> "ModelConfig":
         assert self.n_heads % max(self.n_kv_heads, 1) == 0, self.name
         if self.moe.enabled:

@@ -88,6 +88,25 @@ TPU_V5E = HardwareSpec(
 )
 
 
+def kv_pool_pages(cfg: ModelConfig, hw: HardwareSpec, page_size: int = 16,
+                  bytes_per_param: int = 2, bytes_per_act: int = 2,
+                  util: float = 0.9) -> int:
+    """Pages the hardware's HBM can dedicate to the paged KV pool: total
+    capacity × ``util`` minus model weights, divided by the per-page KV
+    footprint.  This is how the simulator (and a TPU deployment) sizes
+    ``PagedKVAllocator`` so the paper-scale sweeps run under the SAME
+    memory bound the engine would face."""
+    cap = hw.n_chips * hw.hbm_capacity_per_chip * util
+    weights = cfg.param_count() * bytes_per_param
+    kv_per_page = max(cfg.kv_bytes_per_token(bytes_per_act), 1) * page_size
+    pages = int((cap - weights) // kv_per_page)
+    # models bigger than the modeled chip count would be sharded wider in
+    # reality — keep the analytic pool at a 5%-of-capacity floor instead
+    # of refusing to simulate
+    floor = max(1, int(cap * 0.05 // kv_per_page))
+    return max(pages, floor)
+
+
 # Real routing is CORRELATED (tokens in a batch favour similar experts), so
 # the uniform model overestimates mid-range coverage. We model this with an
 # effective-token exponent n_eff = n^alpha; alpha = 0.785 is the minimax fit
@@ -319,7 +338,10 @@ class CostModel:
         if n_dec:
             tokens_per_block += n_dec
             flops += n_dec * self._np_lin_cum[L]
+            # true KV length: the recompute prompt already contains the
+            # n_folded generated tokens of any earlier preemption
             ctxs = np.array([requests[r].prompt_len + requests[r].n_generated
+                             - requests[r].n_folded
                              for r in plan.decode_ids], float)
             for w, prefix in self._attn_groups:
                 cnt = prefix[L]

@@ -39,7 +39,7 @@ from repro.core.base import Scheduler, make_scheduler
 from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
 from repro.models.config import dtype_bytes
 from repro.models.model import DecoderModel
-from repro.serving.kvcache import SlotAllocator
+from repro.serving.kvcache import PagedKVAllocator
 
 Array = jax.Array
 
@@ -75,12 +75,22 @@ def _scatter_cache(full, row, slot):
 class Engine:
     def __init__(self, model: DecoderModel, params, scheduler, *,
                  n_slots: int = 8, max_len: int = 512,
+                 pages: Optional[int] = None, page_size: int = 16,
+                 preemption: bool = True,
+                 decode_reserve: Optional[int] = None,
                  eos_token: Optional[int] = None, gmm_fn=None,
                  moe_dispatch: str = "ragged"):
         """``moe_dispatch`` selects the dropless MoE data path: "ragged"
         (default — expert-sorted tile-aligned buffer, compute/traffic scale
         with the routed work) or "dense" (worst-case (E, T, d) capacity
-        buffer). Outputs are identical either way; see models/moe.py."""
+        buffer). Outputs are identical either way; see models/moe.py.
+
+        ``pages``/``page_size`` size the paged KV pool shared with the
+        scheduler (default: enough pages to fill every slot row — no
+        pressure beyond the slot bound).  ``preemption`` enables memory-
+        pressure eviction with restore-by-recompute; with it off, admission
+        still queues on pressure but decode growth past ``decode_reserve``
+        can raise PagedPoolExhausted."""
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -92,11 +102,27 @@ class Engine:
                                        n_slots=n_slots)
         assert scheduler.n_slots <= n_slots, "scheduler must fit slot pool"
         self.scheduler: Scheduler = scheduler
-        self.alloc = SlotAllocator(n_slots, max_len)
+        stash_factor = self.cfg.stash_token_factor()
+        if pages is None:
+            # default pool: every slot can hold a max_len request plus its
+            # decode-reservation rounding and worst-case stash — admission
+            # then never blocks while a slot is free (pre-paging behaviour)
+            reserve = page_size if decode_reserve is None else decode_reserve
+            per_slot = (-(-(max_len + reserve) // page_size)
+                        + -(-int(max_len * stash_factor + 1) // page_size))
+            pages = n_slots * per_slot
+        self.alloc = PagedKVAllocator(pages, page_size,
+                                      stash_factor=stash_factor)
+        self.scheduler.attach_kv(self.alloc, decode_reserve=decode_reserve,
+                                 preemption=preemption)
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_token = eos_token
         self.gmm_fn = gmm_fn
+        # physical slot rows (the contiguous per-request realization of the
+        # logical block tables; see DESIGN.md §Hardware adaptation)
+        self._free_slots = list(range(n_slots))[::-1]
+        self._slot_of: Dict[int, int] = {}
 
         self.cache = model.init_cache(n_slots, max_len)
         self.offsets = np.zeros(n_slots, np.int32)       # true filled length
@@ -112,6 +138,7 @@ class Engine:
 
         # metrics
         self.iteration = 0
+        self.n_preempted = 0
         self.expert_load_bytes = 0
         self.iter_log: List[dict] = []
         bytes_per_el = dtype_bytes(self.cfg.param_dtype)
@@ -129,6 +156,12 @@ class Engine:
         rid = self._next_id
         self._next_id += 1
         prompt = np.asarray(prompt_tokens, np.int32)
+        if len(prompt) + max_new_tokens > self.max_len:
+            # the bound also caps the recompute prompt after a preemption
+            # (prompt + generated-so-far never exceeds prompt + max_new)
+            raise ValueError(
+                f"request {rid}: prompt {len(prompt)} + max_new "
+                f"{max_new_tokens} exceeds max_len {self.max_len}")
         req = Request(req_id=rid, prompt_len=len(prompt),
                       max_new_tokens=max_new_tokens,
                       arrival_time=float(self.iteration),
@@ -143,9 +176,9 @@ class Engine:
 
     def run(self, max_iterations: int = 10_000) -> None:
         while self.scheduler.has_work():
-            self.step()
-            if self.iteration > max_iterations:
+            if self.iteration >= max_iterations:
                 raise RuntimeError("engine did not drain; scheduler stuck?")
+            self.step()
 
     # -------------------------------------------------------------- jit fns
 
@@ -212,6 +245,11 @@ class Engine:
         block_expert_union = np.zeros(
             (self.model.n_blocks, max(self.cfg.moe.n_experts, 1)), bool)
 
+        # memory-pressure victims first: their slot rows and stash must be
+        # released before this iteration's admissions can reuse them
+        for rid in plan.preempted_ids:
+            self._preempt(rid)
+
         for rid in plan.admitted_ids:
             self._admit(rid)
 
@@ -235,14 +273,36 @@ class Engine:
             "expert_load_bytes": (int(block_expert_union.sum())
                                   * self._expert_bytes),
             "pages_in_use": self.alloc.pages_in_use(),
+            "n_preempted": len(plan.preempted_ids),
         })
         self.iteration += 1
         return plan
 
     # -------------------------------------------------------------- helpers
 
+    def _preempt(self, rid: int) -> None:
+        """Execute a scheduler eviction: release the physical slot row and
+        the boundary-activation stash, and fold the tokens generated so far
+        into the recompute prompt (matching the scheduler's prompt_len
+        fold in ``Scheduler.preempt``)."""
+        slot = self._slot_of.pop(rid)
+        self._free_slots.append(slot)
+        self.decoding[slot] = False
+        self.stash.pop(rid, None)
+        # append only the tokens generated since the last fold — a request
+        # preempted twice must not duplicate the already-folded prefix
+        tail = self.requests[rid].prompt_len - len(self.prompts[rid])
+        if tail:
+            self.prompts[rid] = np.concatenate(
+                [self.prompts[rid],
+                 np.asarray(self.outputs[rid][-tail:], np.int32)])
+        assert len(self.prompts[rid]) == self.requests[rid].prompt_len, \
+            (rid, len(self.prompts[rid]), self.requests[rid].prompt_len)
+        self.n_preempted += 1
+
     def _admit(self, rid: int) -> None:
-        slot = self.alloc.alloc(rid)
+        slot = self._free_slots.pop()
+        self._slot_of[rid] = slot
         self.offsets[slot] = 0
         self.decoding[slot] = False
         if rid in self.enc_frames:
@@ -263,7 +323,7 @@ class Engine:
     def _exec_prefill_slice(self, sl: PrefillSlice) -> np.ndarray:
         """Returns per-block expert counts (n_blocks_of_slice, E)."""
         rid = sl.req_id
-        slot = self.alloc.slot_of(rid)
+        slot = self._slot_of[rid]
         n_tok = sl.n_tokens
 
         if sl.block_start == 0:
@@ -298,7 +358,6 @@ class Engine:
         req = self.requests[rid]
         if sl.block_end == self.model.n_blocks:
             # tokens fully processed through the stack
-            self.alloc.set_length(rid, sl.token_end)
             self.offsets[slot] = sl.token_end
         if sl.emits_first_token:
             tok = int(token)
@@ -317,7 +376,7 @@ class Engine:
         valid = np.zeros(self.n_slots, bool)
         slot_req = {}
         for rid in decode_ids:
-            slot = self.alloc.slot_of(rid)
+            slot = self._slot_of[rid]
             tokens[slot, 0] = self.last_tok[slot]
             valid[slot] = True
             slot_req[slot] = rid
@@ -330,7 +389,6 @@ class Engine:
             self.offsets[slot] += 1
             self.last_tok[slot] = tok
             self._record_token(rid, tok, first=False)
-            self.alloc.set_length(rid, int(self.offsets[slot]))
             self._maybe_finish(rid, tok)
         return np.asarray(counts)
 
@@ -338,9 +396,11 @@ class Engine:
         req = self.requests[rid]
         now = float(self.iteration + 1)   # token visible at iteration end
         self.outputs[rid].append(tok)
-        if first:
+        if first and req.first_token_time is None:
             req.first_token_time = now
         else:
+            # the "first token" of a recompute epoch is a CONTINUATION
+            # token — TTFT is pinned to the original first emission
             req.token_times.append(now)
 
     def _maybe_finish(self, rid: int, tok: int,
@@ -351,7 +411,9 @@ class Engine:
             self.scheduler.finish(rid)
         if req.state == RequestState.DONE:
             req.finish_time = float(self.iteration + 1)
-            slot = self.alloc.slot_of(rid)
+            slot = self._slot_of.pop(rid)
+            self._free_slots.append(slot)
             self.decoding[slot] = False
-            self.alloc.free(rid)
+            if self.alloc.owns(rid):        # EOS path frees via scheduler
+                self.alloc.free(rid)
             self.stash.pop(rid, None)

@@ -1,63 +1,166 @@
-"""KV-cache slot management.
+"""Paged KV-cache memory subsystem.
 
-The engine uses a fixed pool of per-request *slots* (contiguous per-slot
-layout — friendlier to TPU DMA than vLLM's scattered pages; see DESIGN.md
-§Hardware adaptation). Page-granular *accounting* is kept alongside so
-memory-pressure metrics match a paged allocator's: a slot logically
-occupies ceil(len / page_size) pages and the high-water page mark is
-reported in the engine metrics.
+A single global pool of fixed-size *pages* (``page_size`` KV tokens each)
+backs every resident request.  Each request owns a *block table* — the
+ordered list of physical page ids holding its KV — which grows
+page-granularly as decode appends tokens.  The same allocator instance is
+shared by the scheduler (admission / preemption decisions), the execution
+engine (physical placement + the paged Pallas decode kernel's block
+tables) and the discrete-event simulator (page occupancy, preemption and
+recompute accounting in the paper-scale sweeps).  See DESIGN.md
+§Hardware adaptation for how the logical page pool maps onto TPU-friendly
+physical layouts.
+
+Memory charged against the pool:
+
+  * KV reservations — admission reserves ``prompt_len + decode_reserve``
+    tokens up front (the scheduler admits only when this fits), so prefill
+    never fails mid-flight; decode growth past the reservation allocates
+    pages on demand and is what creates *pressure*.
+  * Layered-prefill stash — boundary activations carried between layer
+    groups are charged as ``stash_factor`` KV-token-equivalents per
+    stashed token (``stash_factor ≈ d_model·bytes_act /
+    kv_bytes_per_token``) and released when the request's prefill
+    completes.
+
+The allocator never decides WHO to evict — victim selection
+(latest-arrival-first) lives in ``core.base.Scheduler``; the allocator
+only enforces that nobody allocates pages it does not have.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List
+
+
+class PagedPoolExhausted(RuntimeError):
+    """Raised when an allocation is attempted against an empty pool.
+
+    Under pressure-aware admission + preemption this never surfaces: the
+    scheduler checks ``can_admit``/``growth_deficit`` (and preempts) before
+    any page is claimed.  It CAN surface when preemption is disabled and
+    decode growth outruns the reservation."""
 
 
 @dataclass
-class SlotAllocator:
-    n_slots: int
-    max_len: int
+class PagedKVAllocator:
+    n_pages: int
     page_size: int = 16
+    # KV-token-equivalents charged per stashed boundary-activation token
+    # (layered prefill's carry state); callers derive it from the model's
+    # d_model / kv_bytes_per_token ratio.
+    stash_factor: float = 1.0
     _free: List[int] = field(default_factory=list)
-    _owner: Dict[int, int] = field(default_factory=dict)   # slot -> req
-    _slot_of: Dict[int, int] = field(default_factory=dict)  # req -> slot
-    _lengths: Dict[int, int] = field(default_factory=dict)  # slot -> tokens
+    _tables: Dict[int, List[int]] = field(default_factory=dict)  # req -> pages
+    _lengths: Dict[int, int] = field(default_factory=dict)       # req -> toks
+    _stash: Dict[int, List[int]] = field(default_factory=dict)   # req -> pages
     pages_high_water: int = 0
+    n_grow_allocs: int = 0
 
     def __post_init__(self):
-        self._free = list(range(self.n_slots))[::-1]
+        assert self.n_pages > 0 and self.page_size > 0
+        self._free = list(range(self.n_pages))[::-1]
+
+    # -- sizing --------------------------------------------------------------
+
+    def pages_for(self, n_tokens: int) -> int:
+        return math.ceil(max(n_tokens, 0) / self.page_size)
+
+    def stash_pages_for(self, n_tokens: int) -> int:
+        return self.pages_for(math.ceil(n_tokens * self.stash_factor))
 
     @property
-    def n_free(self) -> int:
+    def n_free_pages(self) -> int:
         return len(self._free)
 
-    def slot_of(self, req_id: int) -> int:
-        return self._slot_of[req_id]
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    # -- admission queries ---------------------------------------------------
+
+    def can_admit(self, n_tokens: int, stash_tokens: int = 0) -> bool:
+        """True iff a reservation for ``n_tokens`` of KV plus the stash
+        charge fits the pool RIGHT NOW."""
+        need = self.pages_for(n_tokens) + self.stash_pages_for(stash_tokens)
+        return need <= len(self._free)
+
+    def fits_pool(self, n_tokens: int, stash_tokens: int = 0) -> bool:
+        """True iff the request could EVER fit (empty pool)."""
+        need = self.pages_for(n_tokens) + self.stash_pages_for(stash_tokens)
+        return need <= self.n_pages
+
+    # -- request lifecycle ---------------------------------------------------
 
     def owns(self, req_id: int) -> bool:
-        return req_id in self._slot_of
+        return req_id in self._tables
 
-    def alloc(self, req_id: int) -> int:
-        if not self._free:
-            raise RuntimeError("KV slot pool exhausted")
-        slot = self._free.pop()
-        self._owner[slot] = req_id
-        self._slot_of[req_id] = slot
-        self._lengths[slot] = 0
-        return slot
-
-    def free(self, req_id: int) -> None:
-        slot = self._slot_of.pop(req_id)
-        del self._owner[slot]
-        del self._lengths[slot]
-        self._free.append(slot)
+    def reserve(self, req_id: int, n_tokens: int,
+                stash_tokens: int = 0) -> None:
+        """Admission-time reservation: claims pages for ``n_tokens`` of KV
+        (prompt + decode reservation) and the stash charge."""
+        assert req_id not in self._tables, req_id
+        need_kv = self.pages_for(n_tokens)
+        need_stash = self.stash_pages_for(stash_tokens)
+        if need_kv + need_stash > len(self._free):
+            raise PagedPoolExhausted(
+                f"reserve({req_id}): need {need_kv + need_stash} pages, "
+                f"{len(self._free)} free of {self.n_pages}")
+        self._tables[req_id] = [self._free.pop() for _ in range(need_kv)]
+        self._stash[req_id] = [self._free.pop() for _ in range(need_stash)]
+        self._lengths[req_id] = 0
+        self._bump_high_water()
 
     def set_length(self, req_id: int, n_tokens: int) -> None:
-        assert n_tokens <= self.max_len, (n_tokens, self.max_len)
-        self._lengths[self._slot_of[req_id]] = n_tokens
-        self.pages_high_water = max(self.pages_high_water, self.pages_in_use())
+        """Record the filled KV length (monotone); never allocates."""
+        assert n_tokens <= len(self._tables[req_id]) * self.page_size, \
+            (req_id, n_tokens)
+        self._lengths[req_id] = max(self._lengths[req_id], n_tokens)
 
-    def pages_in_use(self) -> int:
-        return sum(math.ceil(n / self.page_size) for n in self._lengths.values())
+    def growth_deficit(self, req_id: int, n_tokens: int) -> int:
+        """Pages that must be newly allocated for the block table to cover
+        ``n_tokens`` (0 when the reservation already covers it)."""
+        return max(0, self.pages_for(n_tokens) - len(self._tables[req_id]))
+
+    def grow_to(self, req_id: int, n_tokens: int) -> None:
+        """Page-granular grow-on-write: extend the block table to cover
+        ``n_tokens``.  Raises PagedPoolExhausted when the pool is dry — the
+        scheduler's pressure pass preempts before letting that happen."""
+        deficit = self.growth_deficit(req_id, n_tokens)
+        if deficit > len(self._free):
+            raise PagedPoolExhausted(
+                f"grow_to({req_id}, {n_tokens}): need {deficit} pages, "
+                f"{len(self._free)} free of {self.n_pages}")
+        for _ in range(deficit):
+            self._tables[req_id].append(self._free.pop())
+            self.n_grow_allocs += 1
+        self._lengths[req_id] = max(self._lengths[req_id], n_tokens)
+        if deficit:
+            self._bump_high_water()
+
+    def release_stash(self, req_id: int) -> None:
+        self._free.extend(reversed(self._stash.pop(req_id, [])))
+        self._stash[req_id] = []
+
+    def free(self, req_id: int) -> None:
+        """Return every page (KV + stash) of ``req_id`` to the pool."""
+        self._free.extend(reversed(self._tables.pop(req_id)))
+        self._free.extend(reversed(self._stash.pop(req_id, [])))
+        self._lengths.pop(req_id, None)
+
+    # -- physical mapping ----------------------------------------------------
+
+    def block_table(self, req_id: int) -> List[int]:
+        """Physical page ids backing ``req_id``'s KV, in logical order —
+        what the paged decode-attention kernel walks."""
+        return list(self._tables[req_id])
+
+    def length(self, req_id: int) -> int:
+        return self._lengths[req_id]
+
+    # -- internals -----------------------------------------------------------
+
+    def _bump_high_water(self) -> None:
+        self.pages_high_water = max(self.pages_high_water,
+                                    self.pages_in_use())

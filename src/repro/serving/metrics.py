@@ -1,6 +1,8 @@
 """Serving metrics: TTFT / TBT statistics, per-request SLO attainment
 (paper §5.1: a request attains the SLO iff its TTFT meets the TTFT SLO AND
-every TBT meets the TBT SLO), and energy-per-token accounting."""
+every TBT meets the TBT SLO), energy-per-token accounting, and the paged-KV
+memory-subsystem signals (queueing delay under memory-gated admission,
+preemption rate, page high-water)."""
 
 from __future__ import annotations
 
@@ -47,6 +49,14 @@ def request_metrics(requests: Iterable[Request],
     e2e = [r.finish_time - r.arrival_time for r in reqs
            if r.finish_time is not None]
     out["e2e_mean"] = sum(e2e) / len(e2e) if e2e else float("nan")
+    # memory-gated admission: time queued before FIRST admission
+    delays = [d for d in (r.queue_delay() for r in reqs) if d is not None]
+    out["queue_delay_mean"] = sum(delays) / len(delays) if delays \
+        else float("nan")
+    out["queue_delay_p99"] = percentile(delays, 99)
+    n_pre = sum(r.n_preemptions for r in reqs)
+    out["n_preemptions"] = float(n_pre)
+    out["preemption_rate"] = n_pre / len(reqs) if reqs else float("nan")
     if slo is not None:
         att = [slo.attained(r) for r in reqs]
         out["slo_attainment"] = sum(att) / len(att) if att else float("nan")

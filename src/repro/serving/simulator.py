@@ -19,7 +19,8 @@ from typing import Dict, List, Optional
 from repro.core.base import Scheduler, make_scheduler
 from repro.core.plan import Request, RequestState
 from repro.models.config import ModelConfig
-from repro.serving.cost_model import CostModel, HardwareSpec
+from repro.serving.cost_model import CostModel, HardwareSpec, kv_pool_pages
+from repro.serving.kvcache import PagedKVAllocator
 from repro.serving.traffic import TraceRequest
 
 
@@ -33,11 +34,19 @@ class SimResult:
     n_iterations: int = 0
     sim_time: float = 0.0
     decode_batch_sizes: List[int] = field(default_factory=list)
+    # paged-KV memory subsystem accounting
+    n_preemptions: int = 0
+    recompute_tokens: int = 0      # prefill tokens re-run due to preemption
+    pages_high_water: int = 0
+    n_pool_pages: int = 0
 
     @property
     def total_tokens(self) -> int:
-        """prompt + generated tokens (paper's energy/token denominator)."""
-        return sum(r.prompt_len + r.n_generated for r in self.requests)
+        """prompt + generated tokens (paper's energy/token denominator).
+        Folded recompute tokens are already inside prompt_len — subtract
+        them so preempted requests are not counted twice."""
+        return sum(r.prompt_len - r.n_folded + r.n_generated
+                   for r in self.requests)
 
     @property
     def energy_per_token(self) -> float:
@@ -52,12 +61,25 @@ class SimResult:
 
 class Simulator:
     def __init__(self, cfg: ModelConfig, scheduler, hw: HardwareSpec,
-                 moe_dispatch: str = "ragged", **sched_kw):
+                 moe_dispatch: str = "ragged", n_pages: Optional[int] = None,
+                 page_size: int = 16, preemption: bool = True,
+                 decode_reserve: Optional[int] = None, **sched_kw):
+        """The simulator shares the scheduler's ``PagedKVAllocator`` so page
+        occupancy, queueing delay, preemption counts and recompute cost are
+        first-class outputs of the paper-scale sweeps. ``n_pages`` defaults
+        to the page count the hardware's HBM can actually hold after model
+        weights (see cost_model.kv_pool_pages)."""
         self.cfg = cfg
         if isinstance(scheduler, str):
             scheduler = make_scheduler(scheduler, cfg.n_layers, **sched_kw)
         self.scheduler: Scheduler = scheduler
         self.cost = CostModel(cfg, hw, moe_dispatch=moe_dispatch)
+        if n_pages is None:
+            n_pages = kv_pool_pages(cfg, hw, page_size)
+        self.kv = PagedKVAllocator(n_pages, page_size,
+                                   stash_factor=cfg.stash_token_factor())
+        self.scheduler.attach_kv(self.kv, decode_reserve=decode_reserve,
+                                 preemption=preemption)
 
     def run(self, trace: List[TraceRequest],
             max_iterations: int = 2_000_000) -> SimResult:
@@ -87,10 +109,21 @@ class Simulator:
                 t = pending[i_arr].arrival_time
                 admit_arrivals(t)
             plan = sched.next_plan(now=t)
+            res.n_preemptions += len(plan.preempted_ids)
+            res.recompute_tokens += sum(
+                sched.requests[rid].prompt_len for rid in plan.preempted_ids)
             if plan.empty:
-                # nothing runnable (shouldn't happen when has_work)
-                t = pending[i_arr].arrival_time if i_arr < len(pending) else t
-                continue
+                if i_arr < len(pending):
+                    # nothing runnable yet — fast-forward to the arrival
+                    # that will create work (t never moves backwards)
+                    t = max(t, pending[i_arr].arrival_time)
+                    continue
+                # no runnable work, no future arrivals: advancing neither t
+                # nor the iteration count would spin forever
+                raise RuntimeError(
+                    f"scheduler {sched.name!r} made no progress: "
+                    f"{len(sched.waiting)} waiting, {sched.n_active} active, "
+                    "no pending arrivals")
             cost = self.cost.iteration_cost(plan, sched.requests)
             t += cost["duration"]
             res.total_energy += cost["energy"]
@@ -104,7 +137,12 @@ class Simulator:
             for sl in plan.prefill:
                 if sl.emits_first_token:
                     r = sched.requests[sl.req_id]
-                    r.first_token_time = t
+                    if r.first_token_time is None:
+                        r.first_token_time = t
+                    else:
+                        # recompute epoch: the emitting slice produces a
+                        # continuation token, not a second "first token"
+                        r.token_times.append(t)
                     if r.state == RequestState.DONE:
                         r.finish_time = t
             for rid in plan.decode_ids:
@@ -117,4 +155,6 @@ class Simulator:
                 raise RuntimeError("simulation iteration cap hit")
 
         res.sim_time = t
+        res.pages_high_water = self.kv.pages_high_water
+        res.n_pool_pages = self.kv.n_pages
         return res

@@ -13,6 +13,7 @@ import pytest
 
 from conftest import tiny_dense, tiny_hybrid, tiny_mla, tiny_moe, tiny_xlstm
 from repro.core.base import make_scheduler
+from repro.core.plan import RequestState
 from repro.models.model import DecoderModel
 from repro.serving.engine import Engine
 
@@ -164,6 +165,109 @@ def test_prefill_jit_cache_is_lru_bounded():
     eng._get_prefill_fn(999, 1, False)            # force one eviction
     assert keys[0] in eng._jit_prefill
     assert keys[1] not in eng._jit_prefill
+
+
+def _run_engine(cfg, sched_name, jobs, **eng_kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler(sched_name, model.n_blocks, n_slots=4, quantum=8,
+                           token_budget=16)
+    eng = Engine(model, params, sched, n_slots=4, max_len=64, **eng_kw)
+    for prompt, max_new in jobs:
+        eng.submit(prompt, max_new)
+    eng.run(max_iterations=100_000)
+    return eng
+
+
+@pytest.mark.parametrize("sched", ["layered", "chunked"])
+def test_oversubscribed_pool_preempts_and_matches_unconstrained(sched):
+    """Acceptance: requests >> pool capacity must COMPLETE via queueing +
+    preemption (never 'pool exhausted'), and every request — including the
+    recompute-restored victims — must emit exactly the tokens of an
+    unconstrained run."""
+    cfg = tiny_dense()
+    rng = np.random.default_rng(0)
+    jobs = [(list(rng.integers(1, 200, int(rng.integers(4, 10)))), 12)
+            for _ in range(32)]
+    # pool sized for ~3 resident requests (16 pages) against 32 submitted;
+    # decode_reserve=1 forces growth pressure once decodes lengthen
+    tight = _run_engine(cfg, sched, jobs, pages=16, page_size=4,
+                        decode_reserve=1)
+    assert tight.n_preempted > 0, "scenario must actually preempt"
+    assert tight.alloc.pages_high_water <= tight.alloc.n_pages
+    assert tight.alloc.pages_in_use() == 0
+
+    free = _run_engine(cfg, sched, jobs)        # unconstrained pool
+    assert free.n_preempted == 0
+    assert tight.outputs == free.outputs, \
+        "preemption/recompute changed generated tokens"
+    # recompute-restored requests specifically were exercised and agree
+    restored = [rid for rid, r in tight.requests.items()
+                if r.n_preemptions > 0]
+    assert restored
+    for rid in restored:
+        assert tight.outputs[rid] == free.outputs[rid]
+        assert len(tight.outputs[rid]) == 12
+
+
+def test_double_preemption_tokens_identical():
+    """Force the SAME request through two evictions (fold-on-fold): the
+    recompute prompt must extend by only the unfolded tail each time and
+    the generated tokens must match an undisturbed run."""
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=2, quantum=8)
+    eng = Engine(model, params, sched, n_slots=2, max_len=64)
+    rid = eng.submit(list(range(1, 9)), 12)
+    forced = []
+    while eng.scheduler.has_work():
+        r = eng.requests[rid]
+        if r.state == RequestState.DECODE and r.n_generated in (3, 7) \
+                and r.n_generated not in forced:
+            sched.preempt(rid)            # what the pressure pass would do
+            eng._preempt(rid)             # what step() would execute
+            forced.append(r.n_generated)
+        eng.step()
+    assert forced == [3, 7]
+    assert eng.requests[rid].n_preemptions == 2
+    assert len(eng.prompts[rid]) == 8 + 7   # orig + folded, not 8+3+7+...
+    clean = _run_engine(cfg, "layered", [(list(range(1, 9)), 12)])
+    assert eng.outputs[rid] == clean.outputs[0]
+    assert len(eng.outputs[rid]) == 12
+
+
+def test_preemption_off_queues_but_can_exhaust():
+    """--preemption off: admission still queues on pressure (no crash on
+    submit), but unreservable decode growth surfaces PagedPoolExhausted."""
+    from repro.serving.kvcache import PagedPoolExhausted
+    cfg = tiny_dense()
+    # each request alone fits the pool (passes the admission guard), but
+    # two residents' CONCURRENT decode growth overcommits it
+    jobs = [([1, 2, 3, 4], 14) for _ in range(2)]
+    with pytest.raises(PagedPoolExhausted):
+        _run_engine(cfg, "chunked", jobs, pages=8, page_size=4,
+                    decode_reserve=0, preemption=False)
+
+
+def test_engine_run_iteration_cap_checked_before_step():
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, "layered", n_slots=2, max_len=64)
+    eng.submit(list(range(1, 9)), 20)
+    with pytest.raises(RuntimeError, match="did not drain"):
+        eng.run(max_iterations=3)
+    assert eng.iteration == 3              # cap enforced AT the cap
+
+
+def test_submit_rejects_prompt_plus_max_new_over_max_len():
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, "layered", n_slots=2, max_len=32)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(list(range(1, 30)), 8)
 
 
 def test_engine_slot_reuse_many_requests():

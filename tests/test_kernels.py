@@ -113,6 +113,99 @@ def test_decode_attention_windowed():
                                atol=2e-5, rtol=2e-5)
 
 
+# ------------------------------------------------------- paged decode attn
+
+PAGED_SWEEP = [
+    # (B, H, Hkv, hd, page_size, n_pages, max_pages)
+    (3, 4, 2, 64, 16, 24, 6),
+    (2, 8, 1, 32, 8, 40, 10),      # MQA, small pages
+    (1, 4, 4, 128, 32, 8, 4),      # MHA, MXU-width head
+    (4, 4, 2, 64, 16, 20, 4),      # tight pool, short sequences
+]
+
+
+def _ragged_block_tables(rng, b, page_size, n_pages, max_pages):
+    """Ragged lengths + SHUFFLED physical page assignment: logical order
+    must come entirely from the block table, not from page locality."""
+    lengths = rng.integers(1, max_pages * page_size + 1, size=b)
+    bt = np.zeros((b, max_pages), np.int32)
+    perm = rng.permutation(n_pages)
+    k = 0
+    for i in range(b):
+        n = -(-int(lengths[i]) // page_size)
+        bt[i, :n] = perm[k:k + n]
+        k += n
+    assert k <= n_pages, "sweep entry overcommits the page pool"
+    return jnp.asarray(lengths, jnp.int32), jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,hkv,hd,page,npages,maxp", PAGED_SWEEP)
+def test_paged_decode_attention(b, h, hkv, hd, page, npages, maxp, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * hd + page), 3)
+    q = _rand(ks[0], (b, h, hd), dtype)
+    kp = _rand(ks[1], (npages, page, hkv, hd), dtype)
+    vp = _rand(ks[2], (npages, page, hkv, hd), dtype)
+    lengths, bt = _ragged_block_tables(
+        np.random.default_rng(b * page), b, page, npages, maxp)
+    got = ops.paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_decode_attention_windowed():
+    b, h, hkv, hd, page, npages, maxp = 2, 4, 2, 64, 16, 16, 5
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = _rand(ks[0], (b, h, hd), jnp.float32)
+    kp = _rand(ks[1], (npages, page, hkv, hd), jnp.float32)
+    vp = _rand(ks[2], (npages, page, hkv, hd), jnp.float32)
+    lengths, bt = _ragged_block_tables(
+        np.random.default_rng(5), b, page, npages, maxp)
+    got = ops.paged_decode_attention(q, kp, vp, bt, lengths, window=24,
+                                     interpret=True)
+    want = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths, window=24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_matches_contiguous_decode_via_allocator_tables():
+    """End-to-end mapping check: scatter a contiguous slot cache into the
+    page pool with PagedKVAllocator block tables, then the paged kernel
+    over the pool must equal the contiguous kernel over the slot rows."""
+    from repro.serving.kvcache import PagedKVAllocator
+    b, h, hkv, hd, page = 3, 4, 2, 32, 8
+    s_max = 64
+    kv = PagedKVAllocator(n_pages=b * s_max // page, page_size=page)
+    lengths = np.array([50, 17, 8], np.int32)
+    for rid, n in enumerate(lengths):
+        kv.reserve(rid, int(n))
+    max_pages = s_max // page
+    bt = np.zeros((b, max_pages), np.int32)
+    for rid in range(b):
+        t = kv.block_table(rid)
+        bt[rid, :len(t)] = t
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (b, h, hd), jnp.float32)
+    k_slot = _rand(ks[1], (b, s_max, hkv, hd), jnp.float32)
+    v_slot = _rand(ks[2], (b, s_max, hkv, hd), jnp.float32)
+    # physical placement: page j of request rid holds slot row tokens
+    # [j*page, (j+1)*page) — exactly what the engine's scatter would do
+    kp = np.zeros((kv.n_pages, page, hkv, hd), np.float32)
+    vp = np.zeros_like(kp)
+    for rid in range(b):
+        for j, pid in enumerate(kv.block_table(rid)):
+            kp[pid] = np.asarray(k_slot[rid, j * page:(j + 1) * page])
+            vp[pid] = np.asarray(v_slot[rid, j * page:(j + 1) * page])
+    got = ops.paged_decode_attention(q, jnp.asarray(kp), jnp.asarray(vp),
+                                     jnp.asarray(bt),
+                                     jnp.asarray(lengths), interpret=True)
+    want = ops.decode_attention(q, k_slot, v_slot, jnp.asarray(lengths),
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ----------------------------------------------------------------- moe gmm
 
 GMM_SWEEP = [

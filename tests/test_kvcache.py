@@ -1,0 +1,88 @@
+"""PagedKVAllocator: page accounting, block tables, grow-on-write, stash
+charges, and exhaustion behaviour — the memory substrate the scheduler's
+admission/preemption decisions rely on."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.serving.kvcache import PagedKVAllocator, PagedPoolExhausted
+
+
+def test_reserve_grow_free_roundtrip():
+    kv = PagedKVAllocator(n_pages=10, page_size=4)
+    kv.reserve(1, 9)                       # ceil(9/4) = 3 pages
+    assert kv.pages_in_use() == 3
+    assert len(kv.block_table(1)) == 3
+    kv.grow_to(1, 12)                      # still covered: no new page
+    assert kv.pages_in_use() == 3
+    kv.grow_to(1, 13)                      # crosses the boundary
+    assert kv.pages_in_use() == 4
+    assert kv.length(1) == 13
+    assert kv.n_grow_allocs == 1
+    kv.free(1)
+    assert kv.pages_in_use() == 0
+    assert kv.n_free_pages == 10
+    assert kv.pages_high_water == 4
+
+
+def test_block_tables_are_disjoint_and_stable():
+    kv = PagedKVAllocator(n_pages=8, page_size=2)
+    kv.reserve(1, 4)
+    kv.reserve(2, 4)
+    t1, t2 = kv.block_table(1), kv.block_table(2)
+    assert not set(t1) & set(t2)
+    kv.grow_to(1, 6)
+    assert kv.block_table(1)[:2] == t1     # logical order preserved
+    kv.free(2)
+    kv.reserve(3, 4)
+    assert not set(kv.block_table(3)) & set(kv.block_table(1))
+
+
+def test_admission_queries_and_exhaustion():
+    kv = PagedKVAllocator(n_pages=4, page_size=4)
+    assert kv.can_admit(16)
+    assert not kv.can_admit(17)
+    assert kv.fits_pool(16) and not kv.fits_pool(17)
+    kv.reserve(1, 12)
+    assert kv.can_admit(4) and not kv.can_admit(5)
+    with pytest.raises(PagedPoolExhausted):
+        kv.reserve(2, 8)
+    with pytest.raises(PagedPoolExhausted):
+        kv.grow_to(1, 21)
+    # failed calls must not leak pages
+    assert kv.pages_in_use() == 3
+    assert kv.growth_deficit(1, 16) == 1
+    kv.grow_to(1, 16)
+    assert kv.n_free_pages == 0
+
+
+def test_stash_charge_and_release():
+    kv = PagedKVAllocator(n_pages=8, page_size=4, stash_factor=0.5)
+    # 12 KV tokens -> 3 pages; stash 16 tokens * 0.5 -> 8 -> 2 pages
+    assert kv.stash_pages_for(16) == 2
+    kv.reserve(1, 12, stash_tokens=16)
+    assert kv.pages_in_use() == 5
+    kv.release_stash(1)
+    assert kv.pages_in_use() == 3
+    kv.free(1)
+    assert kv.n_free_pages == 8
+
+
+def test_free_returns_stash_too():
+    kv = PagedKVAllocator(n_pages=6, page_size=4, stash_factor=1.0)
+    kv.reserve(1, 8, stash_tokens=8)
+    assert kv.pages_in_use() == 4
+    kv.free(1)                              # without explicit release_stash
+    assert kv.n_free_pages == 6
+    assert not kv.owns(1)
+
+
+def test_high_water_tracks_peak_not_current():
+    kv = PagedKVAllocator(n_pages=10, page_size=1)
+    kv.reserve(1, 6)
+    kv.reserve(2, 3)
+    kv.free(1)
+    kv.reserve(3, 2)
+    assert kv.pages_in_use() == 5
+    assert kv.pages_high_water == 9

@@ -1,0 +1,58 @@
+"""Workload generation (serving/traffic.py): lognormal length models fitted
+to the paper's Table 4 (mean, std), clip bounds, and Poisson arrivals."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving.traffic import (ARXIV, DATASETS, SHAREGPT, LengthModel,
+                                   poisson_trace)
+
+
+@pytest.mark.parametrize("mean,std", [(2340, 2088), (9194, 5754),
+                                      (438, 265), (231, 104)])
+def test_lognormal_moment_roundtrip(mean, std):
+    """The (mu, sigma) fit must reproduce the requested (mean, std) —
+    sampled WITHOUT clipping distortion (wide bounds)."""
+    m = LengthModel(mean=mean, std=std, lo=1, hi=10_000_000)
+    xs = m.sample(np.random.default_rng(0), 400_000).astype(float)
+    assert xs.mean() == pytest.approx(mean, rel=0.03)
+    assert xs.std() == pytest.approx(std, rel=0.05)
+
+
+def test_clip_bounds_respected():
+    m = LengthModel(mean=100, std=400, lo=16, hi=512)
+    xs = m.sample(np.random.default_rng(1), 100_000)
+    assert xs.min() >= 16 and xs.max() <= 512
+    assert ((xs == 16).any() and (xs == 512).any())   # clipping really bites
+
+
+def test_dataset_p90_sanity():
+    """Table 4 p90s: arXiv input 17152, output 386; ShareGPT's long tail
+    puts p90 well above the mean."""
+    rng = np.random.default_rng(2)
+    arxiv_in = ARXIV.input_len.sample(rng, 100_000)
+    arxiv_out = ARXIV.output_len.sample(rng, 100_000)
+    assert np.percentile(arxiv_in, 90) == pytest.approx(17152, rel=0.35)
+    assert np.percentile(arxiv_out, 90) == pytest.approx(386, rel=0.35)
+    sg_in = SHAREGPT.input_len.sample(rng, 100_000)
+    assert np.percentile(sg_in, 90) > SHAREGPT.input_len.mean
+
+
+def test_poisson_trace_shape_and_rate():
+    trace = poisson_trace(DATASETS["sharegpt"], rate=4.0, n_requests=20_000,
+                          seed=3)
+    assert len(trace) == 20_000
+    arr = np.array([t.arrival_time for t in trace])
+    assert (np.diff(arr) > 0).all()              # strictly increasing
+    assert np.diff(arr).mean() == pytest.approx(0.25, rel=0.05)
+    assert all(t.prompt_len >= 16 and t.output_len >= 16 for t in trace)
+
+
+def test_trace_is_deterministic_per_seed():
+    a = poisson_trace(ARXIV, 1.0, 50, seed=7)
+    b = poisson_trace(ARXIV, 1.0, 50, seed=7)
+    c = poisson_trace(ARXIV, 1.0, 50, seed=8)
+    assert a == b
+    assert a != c
