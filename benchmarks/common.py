@@ -4,12 +4,13 @@ standard simulator configuration used across the paper reproductions."""
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs import get_config
-from repro.serving.cost_model import H100X2, CostModel
+from repro.serving.cost_model import H100X2
 from repro.serving.metrics import SLOConfig, request_metrics
 from repro.serving.simulator import Simulator
 from repro.serving.traffic import DATASETS, poisson_trace
@@ -27,6 +28,27 @@ SLOS = {
 
 N_SLOTS = 128
 
+# Oversubscribed operating point: the page pool holds ~this many
+# average-size residents — far below N_SLOTS, so admission queues and the
+# pressure pass really evicts (the regime PR 2's machinery targets).
+OVERSUBSCRIBED_RESIDENTS = 3
+
+
+def oversubscribed_pages(model: str, trace, page_size: int = 16,
+                         residents: int = OVERSUBSCRIBED_RESIDENTS) -> int:
+    """Pool size (pages) holding ~``residents`` average requests of this
+    trace, floored so the single biggest request still fits an empty pool
+    (admission would otherwise reject it outright).  Per-request need =
+    full-sequence KV + the layered stash charge at the prompt length."""
+    cfg = get_config(model)
+    sf = cfg.stash_token_factor()
+    need = [math.ceil((t.prompt_len + t.output_len) / page_size)
+            + math.ceil(math.ceil(t.prompt_len * sf) / page_size)
+            for t in trace]
+    mean_pool = int(residents * sum(need) / len(need))
+    # +2 pages of slack: decode-reserve rounding on top of the worst request
+    return max(mean_pool, max(need) + 2)
+
 
 def run_sim(model: str, dataset: str, scheduler: str, rate: float,
             n_requests: int = 100, seed: int = 0, **sched_kw):
@@ -34,6 +56,10 @@ def run_sim(model: str, dataset: str, scheduler: str, rate: float,
     trace = poisson_trace(DATASETS[dataset], rate, n_requests, seed=seed)
     defaults = dict(token_budget=512, quantum=512)
     defaults.update(sched_kw)
+    if defaults.pop("oversubscribed", False):
+        defaults.setdefault(
+            "n_pages", oversubscribed_pages(
+                model, trace, defaults.get("page_size", 16)))
     sim = Simulator(cfg, scheduler, H100X2, n_slots=N_SLOTS, **defaults)
     res = sim.run(trace)
     slo = SLOS.get((model, dataset))
@@ -45,6 +71,11 @@ def run_sim(model: str, dataset: str, scheduler: str, rate: float,
         "expert_bytes_total": res.total_expert_bytes,
         "mean_decode_batch": res.mean_decode_batch,
         "n_iterations": res.n_iterations,
+        # memory-subsystem signals (nonzero only under a bounded pool)
+        "recompute_tokens": res.recompute_tokens,
+        "swap_bytes": res.swap_bytes,
+        "swap_stall_time": res.swap_stall_time,
+        "pages_high_water": res.pages_high_water,
     })
     return m, res
 

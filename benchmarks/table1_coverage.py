@@ -10,7 +10,6 @@ Two measurements:
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import save, table

@@ -9,7 +9,7 @@ Every entry cites its source in the config's ``source`` field. Access via
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.models.config import ModelConfig, reduced
 

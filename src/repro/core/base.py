@@ -26,18 +26,33 @@ attached, admission reserves ``prompt_len + decode_reserve`` tokens of KV
 plus the scheduler's worst-case boundary-activation stash up front, so
 prefill never runs out of pages mid-flight; decode growth past the
 reservation is charged page-by-page at the top of ``next_plan`` and, when
-the pool is dry, evicts victims latest-arrival-first (restore-by-recompute:
-generated tokens fold into the recompute prompt and the request re-enters
-the queue ahead of never-admitted arrivals).  Without an allocator the
-schedulers behave exactly as before (slot-bound admission only).
+the pool is dry, evicts victims latest-arrival-first.  Without an
+allocator the schedulers behave exactly as before (slot-bound admission
+only).
+
+Eviction is mode-aware (DESIGN.md §Swap-to-host preemption):
+
+  * "recompute" — free the victim's pages and fold its generated tokens
+    into the recompute prompt; the request re-enters PREFILL at the head
+    of the queue (the PR-2 behaviour, always available as a fallback).
+  * "swap" — move the victim's KV pages to the allocator's host pool
+    intact (``RequestState.SWAPPED``).  Re-admission is a DMA-back gated
+    on free HBM pages AND the per-iteration swap-in token budget
+    (``swap_in_budget``); the request then resumes DECODE directly.
+    Only complete-KV victims (DECODE state, no live stash) are swappable;
+    mid-prefill victims and host-pool overflow fall back to recompute.
+  * "auto" — per victim, swap iff ``swap_cost_fn`` (wired by the executor
+    from the hardware cost model) says the DMA round-trip is cheaper than
+    re-running the recompute prefill; without a cost hook, auto prefers
+    swap whenever the victim is swappable.
 """
 
 from __future__ import annotations
 
 from collections import deque
-from typing import TYPE_CHECKING, Dict, List, Optional
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
 
-from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+from repro.core.plan import IterationPlan, Request, RequestState
 
 if TYPE_CHECKING:  # avoid core <-> serving import cycle at runtime
     from repro.serving.kvcache import PagedKVAllocator
@@ -59,20 +74,39 @@ class Scheduler:
         self.kv: Optional["PagedKVAllocator"] = None
         self.decode_reserve = 0
         self.preemption_enabled = True
+        self.preemption_mode = "recompute"
+        self.swap_in_budget: Optional[int] = None
+        self.swap_cost_fn: Optional[Callable[[Request], bool]] = None
         self.n_preemptions = 0
+        self.n_swap_outs = 0
 
     # -- memory subsystem ------------------------------------------------------
 
     def attach_kv(self, kv: "PagedKVAllocator", *,
                   decode_reserve: Optional[int] = None,
-                  preemption: bool = True) -> None:
+                  preemption: bool = True, mode: str = "recompute",
+                  swap_in_budget: Optional[int] = None,
+                  swap_cost_fn=None) -> None:
         """Share a paged allocator with this scheduler. ``decode_reserve``
         is the per-request decode KV reservation in tokens (default: one
-        page); growth beyond it triggers the preemption path."""
+        page); growth beyond it triggers the preemption path.  ``mode``
+        selects the eviction flavour ("recompute" | "swap" | "auto");
+        ``swap_in_budget`` caps the KV tokens DMA'd back from host per
+        iteration (None = unlimited); ``swap_cost_fn(req) -> bool`` prices
+        swap vs recompute per victim for "auto" (True = swap is cheaper)."""
+        if mode not in ("recompute", "swap", "auto"):
+            raise ValueError(f"unknown preemption mode {mode!r}")
+        if mode != "recompute" and kv.n_host_pages <= 0:
+            raise ValueError(
+                f"preemption mode {mode!r} needs a host pool; construct "
+                "PagedKVAllocator with n_host_pages > 0")
         self.kv = kv
         self.decode_reserve = kv.page_size if decode_reserve is None \
             else decode_reserve
         self.preemption_enabled = preemption
+        self.preemption_mode = mode
+        self.swap_in_budget = swap_in_budget
+        self.swap_cost_fn = swap_cost_fn
 
     def max_stash_tokens(self, req: Request,
                          prompt_len: Optional[int] = None) -> int:
@@ -144,6 +178,11 @@ class Scheduler:
                 break
             rid = self.waiting[0]
             r = self.requests[rid]
+            if r.state == RequestState.SWAPPED:
+                # swapped requests re-enter ONLY via the swap-in pass at the
+                # top of next_plan (HBM pages + bandwidth budget gates);
+                # bypassing this head-of-line victim would starve it
+                break
             if not self._kv_admissible(r):
                 break
             self.waiting.popleft()
@@ -171,6 +210,21 @@ class Scheduler:
         """Scheduler-specific cleanup (drop the victim from in-flight cohort
         / chunk-run state). Base schedulers keep no such state."""
 
+    def swap_out(self, req_id: int, now: float = 0.0) -> None:
+        """Evict ``req_id`` by swapping its KV pages to the host pool
+        (``SWAPPED`` state): no pages are lost, no tokens are folded, and
+        re-admission resumes DECODE directly after the DMA-back.  Requeued
+        at the head like a recompute victim."""
+        r = self.requests[req_id]
+        assert r.state == RequestState.DECODE, r.state
+        self._on_preempt(req_id)
+        self.kv.swap_out(req_id)
+        r.state = RequestState.SWAPPED
+        r.n_swaps += 1
+        r.swap_out_times.append(now)
+        self.waiting.appendleft(req_id)
+        self.n_swap_outs += 1
+
     def preempt(self, req_id: int) -> None:
         """Evict ``req_id`` (restore-by-recompute): free its pages, fold the
         tokens it already generated into the recompute prompt, and requeue
@@ -197,14 +251,36 @@ class Scheduler:
         self.waiting.appendleft(req_id)
         self.n_preemptions += 1
 
-    def _reserve_decode_growth(self, now: float) -> List[int]:
+    def _evict_route(self, r: Request) -> Optional[str]:
+        """Eviction flavour available for victim ``r``: "swap" (KV pages to
+        host, no work lost), "recompute" (fold + re-prefill), or None when
+        neither leaves the request restorable.  Swap requires a complete KV
+        (DECODE state — mid-prefill boundary stashes are execution state,
+        not KV) and host-pool room; "auto" additionally asks the executor's
+        cost hook whether the DMA round-trip beats the recompute prefill."""
+        swappable = (self.preemption_mode != "recompute"
+                     and r.state == RequestState.DECODE
+                     and self.kv.can_swap_out(r.req_id))
+        recomputable = self._evictable(r)
+        if swappable:
+            if self.preemption_mode == "swap":
+                return "swap"
+            if (self.swap_cost_fn is None or self.swap_cost_fn(r)
+                    or not recomputable):
+                return "swap"
+        return "recompute" if recomputable else None
+
+    def _reserve_decode_growth(self, now: float):
         """Pre-charge this iteration's decode KV growth (one token per
         DECODE request), evicting victims latest-arrival-first while the
         pool cannot cover the deficit. Runs BEFORE the plan is built so I1
-        is stated over the surviving decode set."""
+        is stated over the surviving decode set.  Returns the recompute
+        and swap victim id lists."""
         if self.kv is None:
-            return []
+            return [], []
         preempted: List[int] = []
+        swapped: List[int] = []
+        decodes: List[Request] = []
         while True:
             decodes = [r for r in self.requests.values()
                        if r.state == RequestState.DECODE]
@@ -222,38 +298,89 @@ class Scheduler:
                 # let grow_to below surface PagedPoolExhausted — the
                 # operator chose queueing-only (--preemption off)
                 break
-            # eligible victims: evicting must leave the request re-
-            # admittable — folding generated tokens into the recompute
-            # prompt grows the worst-case stash charge, so a request can
-            # be resident yet too big to ever come back.  The earliest-
-            # arrival resident is never evicted: admission guarantees a
-            # lone request always fits, so keeping it guarantees forward
-            # progress.
+            # eligible victims: eviction must leave the request restorable
+            # (swap: host-pool room; recompute: the post-fold footprint
+            # still fits an empty pool).  The earliest-arrival resident is
+            # never evicted: admission guarantees a lone request always
+            # fits, so keeping it guarantees forward progress.
             earliest = min(self.active,
                            key=lambda r: (r.arrival_time, r.req_id))
-            victims = [r for r in self.active
-                       if r is not earliest and self._evictable(r)]
-            if not victims:
+            # walk candidates latest-arrival-first and take the FIRST with
+            # an eviction route — identical victim to scoring them all,
+            # but the route (and the auto-mode cost hook behind it) is
+            # evaluated only until a victim is found, not per resident
+            victim = route = None
+            for r in sorted((r for r in self.active if r is not earliest),
+                            key=lambda r: (r.arrival_time, r.req_id),
+                            reverse=True):
+                route = self._evict_route(r)
+                if route:
+                    victim = r
+                    break
+            if victim is None:
                 raise RuntimeError(
                     "paged KV pool cannot cover decode growth and no "
                     "evictable resident remains — enlarge the pool")
-            victim = max(victims,
-                         key=lambda r: (r.arrival_time, r.req_id))
-            self.preempt(victim.req_id)
-            preempted.append(victim.req_id)
+            if route == "swap":
+                self.swap_out(victim.req_id, now)
+                swapped.append(victim.req_id)
+            else:
+                self.preempt(victim.req_id)
+                preempted.append(victim.req_id)
         for r in decodes:
             self.kv.grow_to(r.req_id,
                             r.prompt_len + r.n_generated - r.n_folded)
-        return preempted
+        return preempted, swapped
+
+    def _readmit_swapped(self, now: float,
+                         exclude: List[int] = ()) -> List[int]:
+        """DMA-back pass: restore SWAPPED requests from the head of the
+        queue while (a) a slot is free, (b) the HBM pool holds their pages,
+        and (c) the per-iteration swap-in token budget allows.  At least
+        one restore is always allowed once pages fit — a budget smaller
+        than the smallest request must throttle, not deadlock.  Restored
+        requests resume DECODE directly (their KV is intact).  ``exclude``
+        holds THIS iteration's swap victims: restoring one of them would
+        be a zero-progress DMA round trip (it would retake the very pages
+        it just vacated and be evicted again next iteration), so the pass
+        stops at them until at least one iteration has elapsed."""
+        if self.kv is None:
+            return []
+        budget = self.swap_in_budget
+        swapped_in: List[int] = []
+        while self.waiting and self.n_active < self.n_slots:
+            rid = self.waiting[0]
+            r = self.requests[rid]
+            if r.state != RequestState.SWAPPED or rid in exclude:
+                break
+            if not self.kv.can_swap_in(rid):
+                break
+            need = self.kv.length(rid)
+            if budget is not None and need > budget and swapped_in:
+                break
+            self.waiting.popleft()
+            r.swap_in_times.append(now)
+            self.kv.swap_in(rid)
+            r.state = RequestState.DECODE
+            swapped_in.append(rid)
+            if budget is not None:
+                budget -= need
+                if budget <= 0:
+                    break
+        return swapped_in
 
     # -- per-iteration hooks ----------------------------------------------------
 
     def next_plan(self, now: float = 0.0) -> IterationPlan:
-        """Template method: resolve memory pressure (possibly preempting),
-        then delegate iteration planning to the scheduler's ``_plan``."""
-        preempted = self._reserve_decode_growth(now)
+        """Template method: resolve memory pressure (possibly evicting via
+        recompute-fold or swap-to-host), restore swapped requests within
+        the DMA budget, then delegate iteration planning to ``_plan``."""
+        preempted, swapped_out = self._reserve_decode_growth(now)
+        swapped_in = self._readmit_swapped(now, exclude=swapped_out)
         plan = self._plan(now)
         plan.preempted_ids = preempted
+        plan.swapped_out_ids = swapped_out
+        plan.swapped_in_ids = swapped_in
         return plan
 
     def _plan(self, now: float) -> IterationPlan:

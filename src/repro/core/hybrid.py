@@ -19,7 +19,7 @@ from typing import List, Optional, Tuple
 
 from repro.core import layer_groups
 from repro.core.base import Scheduler, register
-from repro.core.plan import IterationPlan, PrefillSlice, RequestState
+from repro.core.plan import IterationPlan, PrefillSlice
 
 
 @register

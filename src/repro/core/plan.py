@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 
 class RequestState(enum.Enum):
@@ -31,6 +31,11 @@ class RequestState(enum.Enum):
     # its pages are freed, its generated tokens are folded into the
     # recompute prompt, and it re-enters PREFILL at the head of the queue
     PREEMPTED = "preempted"
+    # victim of a memory-pressure eviction under swap mode: its KV pages
+    # moved to the host pool intact; re-admission DMAs them back (gated on
+    # free HBM pages AND the per-iteration swap-in bandwidth budget) and the
+    # request resumes DECODE directly — no recompute epoch
+    SWAPPED = "swapped"
     DONE = "done"
 
 
@@ -52,6 +57,11 @@ class Request:
     n_preemptions: int = 0
     n_folded: int = 0               # generated tokens folded into prompt_len
     orig_prompt_len: Optional[int] = None   # set on first preemption
+    # swap-to-host eviction bookkeeping (paired out/in timestamps; a request
+    # still swapped out has one more out than in)
+    n_swaps: int = 0
+    swap_out_times: List[float] = field(default_factory=list)
+    swap_in_times: List[float] = field(default_factory=list)
     # metrics (filled by engine/simulator)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -79,6 +89,12 @@ class Request:
             if self.first_token_time is not None else self.token_times
         return [b - a for a, b in zip(ts, ts[1:])]
 
+    def restore_latencies(self) -> List[float]:
+        """Per completed swap cycle: time spent swapped out on host (swap-out
+        to swap-in).  An in-flight swap (out without in yet) is excluded."""
+        return [b - a for a, b in zip(self.swap_out_times,
+                                      self.swap_in_times)]
+
 
 @dataclass(frozen=True)
 class PrefillSlice:
@@ -104,8 +120,15 @@ class IterationPlan:
     prefill: List[PrefillSlice] = field(default_factory=list)
     admitted_ids: List[int] = field(default_factory=list)
     # memory-pressure victims evicted THIS iteration (latest-arrival-first);
-    # the executor frees their slot/stash state before running the plan
+    # the executor frees their slot/stash state before running the plan.
+    # preempted_ids = fold-to-recompute victims; swapped_out_ids = victims
+    # whose KV moved to the host pool intact (SWAPPED state)
     preempted_ids: List[int] = field(default_factory=list)
+    swapped_out_ids: List[int] = field(default_factory=list)
+    # swapped requests restored THIS iteration (DMA-back); they are already
+    # in DECODE state and appear in decode_ids — the executor must copy
+    # their host KV back into device cache before the decode step
+    swapped_in_ids: List[int] = field(default_factory=list)
 
     @property
     def empty(self) -> bool:

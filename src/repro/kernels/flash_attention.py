@@ -85,7 +85,6 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     S must be a multiple of the tile sizes (ops.py pads)."""
     b, s, h, hd = q.shape
     hkv = k.shape[2]
-    g = h // hkv
     assert s % q_blk == 0 and s % kv_blk == 0, (s, q_blk, kv_blk)
     scale = scale if scale is not None else 1.0 / math.sqrt(hd)
 

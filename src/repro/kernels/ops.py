@@ -17,7 +17,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
 from repro.kernels.decode_attention import (decode_attention_pallas,
                                             paged_decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas

@@ -31,7 +31,6 @@ import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
-import jax.numpy as jnp                      # noqa: E402
 
 from repro.configs import ASSIGNED, get_config          # noqa: E402
 from repro.configs.shapes import (SHAPES, applicable, cache_len_for,  # noqa: E402

@@ -15,6 +15,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import jax
 import numpy as np
@@ -29,6 +30,16 @@ from repro.serving.simulator import Simulator
 from repro.serving.traffic import DATASETS, poisson_trace
 
 
+def preemption_opts(args):
+    """Map --preemption {on,off,recompute,swap,auto} onto the scheduler's
+    (enabled, mode) pair: "on" is a legacy alias for "recompute"; "off"
+    disables eviction entirely (queueing-only admission)."""
+    enabled = args.preemption != "off"
+    mode = args.preemption if args.preemption in ("swap", "auto") \
+        else "recompute"
+    return enabled, mode
+
+
 def serve_real(args) -> None:
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = DecoderModel(cfg)
@@ -36,10 +47,13 @@ def serve_real(args) -> None:
     sched = make_scheduler(args.scheduler, model.n_blocks,
                            n_slots=args.slots, quantum=args.quantum,
                            token_budget=args.token_budget)
+    enabled, mode = preemption_opts(args)
     eng = Engine(model, params, sched, n_slots=args.slots,
                  max_len=args.max_len, moe_dispatch=args.moe_dispatch,
                  pages=args.pages, page_size=args.page_size,
-                 preemption=args.preemption == "on",
+                 preemption=enabled, preemption_mode=mode,
+                 host_pages=args.host_pages,
+                 swap_in_budget=args.swap_in_budget,
                  decode_reserve=args.decode_reserve)
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -61,18 +75,28 @@ def serve_real(args) -> None:
           f"{m['queue_delay_mean']:.1f} iters; "
           f"preemptions {eng.n_preempted} "
           f"(rate {m['preemption_rate']:.2f}/req)")
+    if eng.alloc.n_host_pages:
+        print(f"[serve] swap: {eng.n_swapped_out} out / "
+              f"{eng.n_swapped_in} in; host pages high-water "
+              f"{eng.alloc.host_pages_high_water}/{eng.alloc.n_host_pages}; "
+              f"restore latency mean {m['restore_latency_mean']:.1f} iters")
 
 
 def serve_sim(args) -> None:
     cfg = get_config(args.arch)
     hw = H100X2 if args.hw == "h100x2" else TPU_V5E
+    if args.host_bw is not None:
+        hw = dataclasses.replace(hw, host_bw=args.host_bw * 1e9)
     trace = poisson_trace(DATASETS[args.dataset], args.rate, args.requests,
                           seed=args.seed)
+    enabled, mode = preemption_opts(args)
     sim = Simulator(cfg, args.scheduler, hw, n_slots=args.slots,
                     quantum=args.quantum, token_budget=args.token_budget,
                     moe_dispatch=args.moe_dispatch, n_pages=args.pages,
                     page_size=args.page_size,
-                    preemption=args.preemption == "on",
+                    preemption=enabled, preemption_mode=mode,
+                    host_pages=args.host_pages,
+                    swap_in_budget=args.swap_in_budget,
                     decode_reserve=args.decode_reserve)
     res = sim.run(trace)
     m = request_metrics(res.requests, SLOConfig(args.ttft_slo, args.tbt_slo))
@@ -91,6 +115,13 @@ def serve_sim(args) -> None:
           f"high-water {res.pages_high_water}/{res.n_pool_pages}; "
           f"{res.n_preemptions} preemptions, "
           f"{res.recompute_tokens} recomputed tokens")
+    if res.n_host_pages:
+        print(f"[serve-sim]   swap             "
+              f"{res.n_swap_outs} out / {res.n_swap_ins} in; "
+              f"{res.swap_bytes / 1e9:.2f} GB over host link, "
+              f"{res.swap_stall_time:.3f} s stall; host pages "
+              f"high-water {res.host_pages_high_water}/{res.n_host_pages}; "
+              f"restore latency mean {m['restore_latency_mean']:.3f} s")
 
 
 def main() -> None:
@@ -113,9 +144,22 @@ def main() -> None:
                          "hardware's HBM capacity minus weights)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="KV tokens per page")
-    ap.add_argument("--preemption", default="on", choices=["on", "off"],
-                    help="memory-pressure eviction with restore-by-"
-                         "recompute (off = queueing-only admission)")
+    ap.add_argument("--preemption", default="on",
+                    choices=["on", "off", "recompute", "swap", "auto"],
+                    help="memory-pressure eviction mode: recompute (= on; "
+                         "fold + re-prefill victims), swap (KV pages to the "
+                         "host pool, DMA-back restore), auto (per-victim "
+                         "cost crossover), off (queueing-only admission)")
+    ap.add_argument("--host-pages", type=int, default=None,
+                    help="host-side swap pool size in pages (default: 4x "
+                         "the device pool when swap/auto is selected)")
+    ap.add_argument("--host-bw", type=float, default=None,
+                    help="host<->HBM DMA bandwidth in GB/s (simulator "
+                         "only; overrides the hardware spec's PCIe term)")
+    ap.add_argument("--swap-in-budget", type=int, default=None,
+                    help="max KV tokens DMA'd back from host per iteration "
+                         "(default: unlimited; at least one restore per "
+                         "iteration is always allowed)")
     ap.add_argument("--decode-reserve", type=int, default=None,
                     help="per-request decode KV reservation in tokens "
                          "(default: one page; 0 = admit on prompt KV only "

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config, list_configs
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.model import DecoderModel
-from repro.sharding.partition import (default_rules, moment_shardings,
-                                      param_shardings, sharding_context)
+from repro.sharding.partition import (default_rules, param_shardings,
+                                      sharding_context)
 from repro.training.data import PackedDataset, SyntheticCorpus
 from repro.training.optimizer import adamw
 from repro.training.train import make_train_step
@@ -63,8 +63,6 @@ def main() -> None:
                 jax.eval_shape(model.init, jax.random.PRNGKey(0)),
                 mesh, rules))(jax.random.PRNGKey(0))
         opt_state = opt.init(params)
-        m_shard = moment_shardings(
-            jax.eval_shape(lambda: params), mesh, rules)
         step_fn = jax.jit(make_train_step(model, opt, cfg.encoder.enabled))
 
         n = sum(x.size for x in jax.tree_util.tree_leaves(params))

@@ -11,11 +11,9 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import attention, layers, moe, rglru, xlstm
-from repro.models.config import (FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_GQA,
-                                 MIXER_LOCAL, MIXER_MLA, MIXER_MLSTM,
+from repro.models.config import (FFN_MOE, FFN_NONE, MIXER_MLSTM,
                                  MIXER_RGLRU, MIXER_SLSTM, BlockSpec,
                                  ModelConfig)
 

@@ -12,9 +12,8 @@ source of truth for what "layer i" means.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block-level specification

@@ -20,8 +20,7 @@ over that segment's repeats, so both scan (slice per repeat) and engine
 
 from __future__ import annotations
 
-import functools
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -51,9 +51,9 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 from repro.models.layers import _dense
 from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.sharding.partition import active_context, shard_hint
+from repro.sharding.partition import active_context
 
 Array = jax.Array
 

@@ -137,7 +137,6 @@ def _mlstm_chunkwise(q, k, v, log_i, log_f, state, valid_sb=None):
         F = jnp.cumsum(lf, axis=1)            # (B,W,H)
         g = li - F
         M = jnp.maximum(jax.lax.cummax(g, axis=1), m0[:, None])  # (B,W,H)
-        m_i = F + M
 
         # intra-chunk: scores_ij = (q_i . k_j) exp(g_j - M_i), j <= i
         qh = q_i.transpose(0, 2, 1, 3)        # (B,H,W,dk)

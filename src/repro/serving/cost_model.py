@@ -19,12 +19,10 @@ router in the engine).
 
 from __future__ import annotations
 
-import math
-
 import numpy as np
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 from repro.core.plan import IterationPlan, PrefillSlice, Request
 from repro.models.config import FFN_MOE, ModelConfig
@@ -47,6 +45,17 @@ class HardwareSpec:
     # fixed per-block cost (kernel sequence / MoE dispatch machinery);
     # dominates small-batch decode iterations on the paper's GPU testbed.
     block_overhead_s: float = 30e-6
+    # host <-> HBM DMA path (PCIe / DMA engines), aggregate across the
+    # chips that share the host link — what swap-to-host preemption pays
+    # per direction.  e_host covers the end-to-end byte move (PCIe PHY +
+    # host DRAM touch), an order of magnitude above the on-package HBM
+    # path.  host_dma_latency_s is the fixed per-transfer setup cost
+    # (descriptor build, driver submission, completion interrupt) paid
+    # once per direction regardless of size — the term that makes tiny
+    # swaps more expensive than their byte count suggests.
+    host_bw: float = 50e9          # bytes/s
+    e_host_pj_per_byte: float = 60.0
+    host_dma_latency_s: float = 50e-6
 
     @property
     def flops(self) -> float:
@@ -77,6 +86,8 @@ H100X2 = HardwareSpec(
     e_hbm_pj_per_byte=100.0, e_flop_pj=0.4,
     compute_eff=0.55, mem_eff=0.50, iter_overhead_s=300e-6,
     block_overhead_s=300e-6,
+    # 2 x PCIe gen5 x16 (~55 GB/s usable each) to host DRAM
+    host_bw=110e9, e_host_pj_per_byte=60.0, host_dma_latency_s=50e-6,
 )
 
 # This repo's target: TPU v5e (constants mandated by the brief).
@@ -85,6 +96,9 @@ TPU_V5E = HardwareSpec(
     flops_per_chip=197e12, hbm_bw_per_chip=819e9, link_bw=50e9,
     hbm_capacity_per_chip=16e9, static_power_w=90.0,
     e_hbm_pj_per_byte=6.0, e_flop_pj=0.45,
+    # PCIe gen3-class host attach on v5e boards; runtime-mediated DMA
+    # submission carries a higher fixed latency than the GPU driver path
+    host_bw=16e9, e_host_pj_per_byte=80.0, host_dma_latency_s=100e-6,
 )
 
 
@@ -182,6 +196,7 @@ class CostModel:
         self._kv_per_tok_block = (cfg.kv_bytes_per_token(bytes_per_act)
                                   / max(cfg.n_layers, 1))
         self._embed_bytes = cfg.vocab_size * cfg.d_model * bytes_per_param
+        self._swap_cmp_cache: Dict[int, bool] = {}
 
         # -- vectorized per-block tables (iteration_cost hot path) ----------
         L = len(self.specs)
@@ -317,6 +332,56 @@ class CostModel:
         eff = min(ctx_len, s.window) if s.window else ctx_len
         passes = max(1.0, n_new / self.Q_TILE)
         return passes * eff * self._kv_per_tok_block
+
+    # -- swap-vs-recompute pricing ---------------------------------------------
+
+    def kv_swap_bytes(self, n_tokens: float) -> float:
+        """Bytes moved over the host link to swap ``n_tokens`` of KV one
+        direction (the block-table metadata is noise at page granularity)."""
+        return n_tokens * self.cfg.kv_bytes_per_token(self.ba)
+
+    def swap_transfer(self, n_tokens: float) -> Dict[str, float]:
+        """Time/energy to move ``n_tokens`` of KV across the host link in
+        ONE direction (swap-out and swap-in each pay this once): a fixed
+        DMA setup latency plus the byte stream."""
+        b = self.kv_swap_bytes(n_tokens)
+        return {"bytes": b,
+                "duration": self.hw.host_dma_latency_s + b / self.hw.host_bw,
+                "energy": b * self.hw.e_host_pj_per_byte * 1e-12}
+
+    def recompute_cost(self, n_tokens: int) -> Dict[str, float]:
+        """Cost of re-running a full-stack prefill over ``n_tokens`` — what
+        a recompute-restored victim pays instead of the DMA-back.  Priced
+        as a dedicated iteration (fixed overheads + full weight stream):
+        the worst case, but the one the oversubscribed regime approaches
+        as recompute epochs stop overlapping with other work."""
+        plan = IterationPlan(prefill=[PrefillSlice(
+            req_id=-1, token_start=0, token_end=int(n_tokens),
+            block_start=0, block_end=len(self.specs),
+            emits_first_token=True)])
+        return self.iteration_cost(plan, {})
+
+    def swap_beats_recompute(self, n_tokens: int) -> bool:
+        """True iff the swap round-trip (DMA out + back, each paying the
+        fixed setup latency) is cheaper in time than recomputing the
+        victim's prefill — the per-victim crossover the "auto" preemption
+        mode evaluates.  Both sides carry a fixed term (2x DMA setup vs
+        iteration + per-block overheads) and a linear term (KV bytes over
+        the host link vs prefill flops + weight re-stream).  On the
+        shipped calibrations the recompute side's fixed cost and — for
+        MoE models — the expert re-stream dominate, so swap wins from the
+        smallest contexts up; the hook earns its keep on calibrations
+        with fatter recompute batches or thinner host links (memoized:
+        the pressure pass may evaluate it per victim per iteration)."""
+        if n_tokens <= 0:
+            return False
+        hit = self._swap_cmp_cache.get(n_tokens)
+        if hit is None:
+            swap = 2.0 * self.swap_transfer(n_tokens)["duration"]
+            hit = swap < self.recompute_cost(n_tokens)["duration"]
+            if len(self._swap_cmp_cache) < 65536:
+                self._swap_cmp_cache[n_tokens] = hit
+        return hit
 
     # -- iteration-level costs ------------------------------------------------------
 

@@ -77,6 +77,10 @@ class Engine:
                  n_slots: int = 8, max_len: int = 512,
                  pages: Optional[int] = None, page_size: int = 16,
                  preemption: bool = True,
+                 preemption_mode: str = "recompute",
+                 host_pages: Optional[int] = None,
+                 swap_in_budget: Optional[int] = None,
+                 swap_cost_fn=None,
                  decode_reserve: Optional[int] = None,
                  eos_token: Optional[int] = None, gmm_fn=None,
                  moe_dispatch: str = "ragged"):
@@ -88,9 +92,15 @@ class Engine:
         ``pages``/``page_size`` size the paged KV pool shared with the
         scheduler (default: enough pages to fill every slot row — no
         pressure beyond the slot bound).  ``preemption`` enables memory-
-        pressure eviction with restore-by-recompute; with it off, admission
-        still queues on pressure but decode growth past ``decode_reserve``
-        can raise PagedPoolExhausted."""
+        pressure eviction; with it off, admission still queues on pressure
+        but decode growth past ``decode_reserve`` can raise
+        PagedPoolExhausted.  ``preemption_mode`` picks the eviction flavour
+        ("recompute" | "swap" | "auto"): under swap, victims' cache rows
+        are copied to host memory and restored verbatim on swap-in (gated
+        by ``swap_in_budget`` KV tokens per iteration), sized by
+        ``host_pages`` (default 4x the device pool).  ``swap_cost_fn``
+        prices swap vs recompute per victim for "auto"; without one, auto
+        swaps whenever the victim is swappable."""
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -111,10 +121,16 @@ class Engine:
             per_slot = (-(-(max_len + reserve) // page_size)
                         + -(-int(max_len * stash_factor + 1) // page_size))
             pages = n_slots * per_slot
+        if host_pages is None:
+            host_pages = 4 * pages if preemption_mode != "recompute" else 0
         self.alloc = PagedKVAllocator(pages, page_size,
-                                      stash_factor=stash_factor)
+                                      stash_factor=stash_factor,
+                                      n_host_pages=host_pages)
         self.scheduler.attach_kv(self.alloc, decode_reserve=decode_reserve,
-                                 preemption=preemption)
+                                 preemption=preemption,
+                                 mode=preemption_mode,
+                                 swap_in_budget=swap_in_budget,
+                                 swap_cost_fn=swap_cost_fn)
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_token = eos_token
@@ -135,10 +151,14 @@ class Engine:
         self.outputs: Dict[int, List[int]] = {}
         self.stash: Dict[int, Tuple[Array, int]] = {}    # req -> (hidden, len)
         self.enc_frames: Dict[int, np.ndarray] = {}
+        # swapped-out requests: req -> (host cache rows, offset, last_tok)
+        self.host_kv: Dict[int, Tuple[object, int, int]] = {}
 
         # metrics
         self.iteration = 0
         self.n_preempted = 0
+        self.n_swapped_out = 0
+        self.n_swapped_in = 0
         self.expert_load_bytes = 0
         self.iter_log: List[dict] = []
         bytes_per_el = dtype_bytes(self.cfg.param_dtype)
@@ -246,10 +266,14 @@ class Engine:
             (self.model.n_blocks, max(self.cfg.moe.n_experts, 1)), bool)
 
         # memory-pressure victims first: their slot rows and stash must be
-        # released before this iteration's admissions can reuse them
+        # released before this iteration's swap-ins/admissions reuse them
         for rid in plan.preempted_ids:
             self._preempt(rid)
+        for rid in plan.swapped_out_ids:
+            self._swap_out(rid)
 
+        for rid in plan.swapped_in_ids:
+            self._swap_in(rid)
         for rid in plan.admitted_ids:
             self._admit(rid)
 
@@ -273,7 +297,10 @@ class Engine:
             "expert_load_bytes": (int(block_expert_union.sum())
                                   * self._expert_bytes),
             "pages_in_use": self.alloc.pages_in_use(),
+            "host_pages_in_use": self.alloc.host_pages_in_use(),
             "n_preempted": len(plan.preempted_ids),
+            "n_swapped_out": len(plan.swapped_out_ids),
+            "n_swapped_in": len(plan.swapped_in_ids),
         })
         self.iteration += 1
         return plan
@@ -299,6 +326,34 @@ class Engine:
         assert len(self.prompts[rid]) == self.requests[rid].prompt_len, \
             (rid, len(self.prompts[rid]), self.requests[rid].prompt_len)
         self.n_preempted += 1
+
+    def _swap_out(self, rid: int) -> None:
+        """Execute a swap-to-host eviction: copy the victim's slot row
+        (every per-block KV / recurrent-state entry) to host memory
+        verbatim and release the slot.  The scheduler already moved the
+        allocator pages to the host pool."""
+        slot = self._slot_of.pop(rid)
+        assert rid not in self.stash, rid       # swap victims are DECODE
+        row = jax.tree_util.tree_map(np.asarray,
+                                     _slice_cache(self.cache, slot))
+        self.host_kv[rid] = (row, int(self.offsets[slot]),
+                             int(self.last_tok[slot]))
+        self._free_slots.append(slot)
+        self.decoding[slot] = False
+        self.n_swapped_out += 1
+
+    def _swap_in(self, rid: int) -> None:
+        """DMA-back: restore the host copy into a fresh slot row and resume
+        decode exactly where the victim left off (bit-identical KV, so the
+        greedy continuation matches an undisturbed run)."""
+        slot = self._free_slots.pop()
+        self._slot_of[rid] = slot
+        row, offset, last = self.host_kv.pop(rid)
+        self.cache = _scatter_cache(self.cache, row, slot)
+        self.offsets[slot] = offset
+        self.last_tok[slot] = last
+        self.decoding[slot] = True
+        self.n_swapped_in += 1
 
     def _admit(self, rid: int) -> None:
         slot = self._free_slots.pop()

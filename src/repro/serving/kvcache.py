@@ -23,6 +23,14 @@ Memory charged against the pool:
     kv_bytes_per_token``) and released when the request's prefill
     completes.
 
+A second, host-side page pool (``n_host_pages``) backs **swap-to-host
+preemption**: ``swap_out`` moves a resident request's KV pages to host
+pages wholesale (the block table is remembered on the host side, in
+logical order), freeing HBM; ``swap_in`` is the DMA-back — it claims fresh
+HBM pages and releases the host copy, after which decode resumes with the
+KV intact (no recompute epoch).  Host pages are accounted exactly like HBM
+pages: a swapped request owns its host pages until swap-in or ``free``.
+
 The allocator never decides WHO to evict — victim selection
 (latest-arrival-first) lives in ``core.base.Scheduler``; the allocator
 only enforces that nobody allocates pages it does not have.
@@ -52,16 +60,28 @@ class PagedKVAllocator:
     # (layered prefill's carry state); callers derive it from the model's
     # d_model / kv_bytes_per_token ratio.
     stash_factor: float = 1.0
+    # host-side page pool for swap-to-host preemption (0 = swap disabled)
+    n_host_pages: int = 0
     _free: List[int] = field(default_factory=list)
     _tables: Dict[int, List[int]] = field(default_factory=dict)  # req -> pages
     _lengths: Dict[int, int] = field(default_factory=dict)       # req -> toks
     _stash: Dict[int, List[int]] = field(default_factory=dict)   # req -> pages
+    _host_free: List[int] = field(default_factory=list)
+    _host_tables: Dict[int, List[int]] = field(default_factory=dict)
     pages_high_water: int = 0
+    host_pages_high_water: int = 0
     n_grow_allocs: int = 0
+    # swap traffic accounting (cumulative, in KV tokens moved per direction)
+    n_swap_outs: int = 0
+    n_swap_ins: int = 0
+    swapped_out_tokens: int = 0
+    swapped_in_tokens: int = 0
 
     def __post_init__(self):
         assert self.n_pages > 0 and self.page_size > 0
+        assert self.n_host_pages >= 0
         self._free = list(range(self.n_pages))[::-1]
+        self._host_free = list(range(self.n_host_pages))[::-1]
 
     # -- sizing --------------------------------------------------------------
 
@@ -77,6 +97,13 @@ class PagedKVAllocator:
 
     def pages_in_use(self) -> int:
         return self.n_pages - len(self._free)
+
+    @property
+    def n_free_host_pages(self) -> int:
+        return len(self._host_free)
+
+    def host_pages_in_use(self) -> int:
+        return self.n_host_pages - len(self._host_free)
 
     # -- admission queries ---------------------------------------------------
 
@@ -94,7 +121,15 @@ class PagedKVAllocator:
     # -- request lifecycle ---------------------------------------------------
 
     def owns(self, req_id: int) -> bool:
+        """True iff ``req_id`` holds pages in EITHER pool (resident or
+        swapped) — i.e. ``free`` has something to release."""
+        return req_id in self._tables or req_id in self._host_tables
+
+    def is_resident(self, req_id: int) -> bool:
         return req_id in self._tables
+
+    def is_swapped(self, req_id: int) -> bool:
+        return req_id in self._host_tables
 
     def reserve(self, req_id: int, n_tokens: int,
                 stash_tokens: int = 0) -> None:
@@ -144,10 +179,61 @@ class PagedKVAllocator:
         self._stash[req_id] = []
 
     def free(self, req_id: int) -> None:
-        """Return every page (KV + stash) of ``req_id`` to the pool."""
-        self._free.extend(reversed(self._tables.pop(req_id)))
+        """Return every page (KV + stash, HBM or host) of ``req_id``."""
+        assert self.owns(req_id), req_id
+        self._free.extend(reversed(self._tables.pop(req_id, [])))
         self._free.extend(reversed(self._stash.pop(req_id, [])))
+        self._host_free.extend(reversed(self._host_tables.pop(req_id, [])))
         self._lengths.pop(req_id, None)
+
+    # -- swap-to-host ---------------------------------------------------------
+
+    def can_swap_out(self, req_id: int) -> bool:
+        """True iff the host pool can hold ``req_id``'s KV pages right now.
+        A mid-prefill request (live stash) is never swappable — boundary
+        activations are execution state, not KV; such victims fold to
+        recompute instead."""
+        if not self.is_resident(req_id) or self._stash.get(req_id):
+            return False
+        return len(self._tables[req_id]) <= len(self._host_free)
+
+    def swap_out(self, req_id: int) -> int:
+        """Move every KV page of ``req_id`` to the host pool; the block
+        table is remembered host-side in logical order.  Returns the number
+        of KV tokens moved (the DMA traffic the executor must price)."""
+        assert self.can_swap_out(req_id), req_id
+        n_pages = len(self._tables[req_id])
+        self._free.extend(reversed(self._tables.pop(req_id)))
+        self._stash.pop(req_id, None)       # empty by the can_swap_out guard
+        self._host_tables[req_id] = [self._host_free.pop()
+                                     for _ in range(n_pages)]
+        self.host_pages_high_water = max(self.host_pages_high_water,
+                                         self.host_pages_in_use())
+        moved = self._lengths[req_id]
+        self.n_swap_outs += 1
+        self.swapped_out_tokens += moved
+        return moved
+
+    def swapped_pages(self, req_id: int) -> int:
+        return len(self._host_tables[req_id])
+
+    def can_swap_in(self, req_id: int) -> bool:
+        return (self.is_swapped(req_id)
+                and len(self._host_tables[req_id]) <= len(self._free))
+
+    def swap_in(self, req_id: int) -> int:
+        """DMA-back: claim fresh HBM pages for the swapped KV and release
+        the host copy.  Returns the number of KV tokens moved."""
+        assert self.can_swap_in(req_id), req_id
+        n_pages = len(self._host_tables[req_id])
+        self._host_free.extend(reversed(self._host_tables.pop(req_id)))
+        self._tables[req_id] = [self._free.pop() for _ in range(n_pages)]
+        self._stash[req_id] = []
+        self._bump_high_water()
+        moved = self._lengths[req_id]
+        self.n_swap_ins += 1
+        self.swapped_in_tokens += moved
+        return moved
 
     # -- physical mapping ----------------------------------------------------
 

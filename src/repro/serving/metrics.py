@@ -57,6 +57,17 @@ def request_metrics(requests: Iterable[Request],
     n_pre = sum(r.n_preemptions for r in reqs)
     out["n_preemptions"] = float(n_pre)
     out["preemption_rate"] = n_pre / len(reqs) if reqs else float("nan")
+    # swap-to-host eviction: swap counts and the time victims sat on host
+    # (swap-out -> swap-in) — the latency cost of the DMA restore path
+    n_swaps = sum(r.n_swaps for r in reqs)
+    out["n_swaps"] = float(n_swaps)
+    out["swap_rate"] = n_swaps / len(reqs) if reqs else float("nan")
+    restores: List[float] = []
+    for r in reqs:
+        restores.extend(r.restore_latencies())
+    out["restore_latency_mean"] = sum(restores) / len(restores) \
+        if restores else float("nan")
+    out["restore_latency_p99"] = percentile(restores, 99)
     if slo is not None:
         att = [slo.attained(r) for r in reqs]
         out["slo_attainment"] = sum(att) / len(att) if att else float("nan")

@@ -14,7 +14,7 @@ are modelled.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro.core.base import Scheduler, make_scheduler
 from repro.core.plan import Request, RequestState
@@ -39,6 +39,13 @@ class SimResult:
     recompute_tokens: int = 0      # prefill tokens re-run due to preemption
     pages_high_water: int = 0
     n_pool_pages: int = 0
+    # swap-to-host accounting
+    n_swap_outs: int = 0
+    n_swap_ins: int = 0
+    swap_bytes: float = 0.0        # host-link traffic, both directions
+    swap_stall_time: float = 0.0   # time the iteration clock spent on DMA
+    host_pages_high_water: int = 0
+    n_host_pages: int = 0
 
     @property
     def total_tokens(self) -> int:
@@ -63,12 +70,20 @@ class Simulator:
     def __init__(self, cfg: ModelConfig, scheduler, hw: HardwareSpec,
                  moe_dispatch: str = "ragged", n_pages: Optional[int] = None,
                  page_size: int = 16, preemption: bool = True,
+                 preemption_mode: str = "recompute",
+                 host_pages: Optional[int] = None,
+                 swap_in_budget: Optional[int] = None,
                  decode_reserve: Optional[int] = None, **sched_kw):
         """The simulator shares the scheduler's ``PagedKVAllocator`` so page
-        occupancy, queueing delay, preemption counts and recompute cost are
-        first-class outputs of the paper-scale sweeps. ``n_pages`` defaults
-        to the page count the hardware's HBM can actually hold after model
-        weights (see cost_model.kv_pool_pages)."""
+        occupancy, queueing delay, preemption counts and recompute/swap cost
+        are first-class outputs of the paper-scale sweeps. ``n_pages``
+        defaults to the page count the hardware's HBM can actually hold
+        after model weights (see cost_model.kv_pool_pages);
+        ``preemption_mode`` picks the eviction flavour ("recompute" |
+        "swap" | "auto" — auto prices each victim's DMA round-trip against
+        its recompute prefill on this hardware), ``host_pages`` sizes the
+        host pool (default 4x the device pool) and ``swap_in_budget`` caps
+        DMA-back KV tokens per iteration."""
         self.cfg = cfg
         if isinstance(scheduler, str):
             scheduler = make_scheduler(scheduler, cfg.n_layers, **sched_kw)
@@ -76,10 +91,20 @@ class Simulator:
         self.cost = CostModel(cfg, hw, moe_dispatch=moe_dispatch)
         if n_pages is None:
             n_pages = kv_pool_pages(cfg, hw, page_size)
+        if host_pages is None:
+            host_pages = 4 * n_pages if preemption_mode != "recompute" else 0
         self.kv = PagedKVAllocator(n_pages, page_size,
-                                   stash_factor=cfg.stash_token_factor())
+                                   stash_factor=cfg.stash_token_factor(),
+                                   n_host_pages=host_pages)
+        swap_cost_fn = None
+        if preemption_mode == "auto":
+            swap_cost_fn = lambda r: self.cost.swap_beats_recompute(  # noqa: E731
+                r.prompt_len + r.n_generated - r.n_folded)
         self.scheduler.attach_kv(self.kv, decode_reserve=decode_reserve,
-                                 preemption=preemption)
+                                 preemption=preemption,
+                                 mode=preemption_mode,
+                                 swap_in_budget=swap_in_budget,
+                                 swap_cost_fn=swap_cost_fn)
 
     def run(self, trace: List[TraceRequest],
             max_iterations: int = 2_000_000) -> SimResult:
@@ -112,6 +137,19 @@ class Simulator:
             res.n_preemptions += len(plan.preempted_ids)
             res.recompute_tokens += sum(
                 sched.requests[rid].prompt_len for rid in plan.preempted_ids)
+            # swap DMA: the host link stalls the iteration clock and burns
+            # host-path energy; lengths survive the swap so both directions
+            # price the victim's true filled KV
+            if plan.swapped_out_ids or plan.swapped_in_ids:
+                moved = sum(self.kv.length(rid) for rid in
+                            plan.swapped_out_ids + plan.swapped_in_ids)
+                xfer = self.cost.swap_transfer(moved)
+                t += xfer["duration"]
+                res.swap_stall_time += xfer["duration"]
+                res.swap_bytes += xfer["bytes"]
+                res.total_energy += xfer["energy"]
+                res.n_swap_outs += len(plan.swapped_out_ids)
+                res.n_swap_ins += len(plan.swapped_in_ids)
             if plan.empty:
                 if i_arr < len(pending):
                     # nothing runnable yet — fast-forward to the arrival
@@ -157,4 +195,6 @@ class Simulator:
         res.sim_time = t
         res.pages_high_water = self.kv.pages_high_water
         res.n_pool_pages = self.kv.n_pages
+        res.host_pages_high_water = self.kv.host_pages_high_water
+        res.n_host_pages = self.kv.n_host_pages
         return res

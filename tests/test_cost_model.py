@@ -5,12 +5,10 @@ accounting."""
 
 from __future__ import annotations
 
-import math
 
 import pytest
 
 from repro.configs import get_config
-from repro.core.base import make_scheduler
 from repro.core.plan import IterationPlan, PrefillSlice, Request
 from repro.serving.cost_model import (CostModel, H100X2, TPU_V5E,
                                       expected_coverage)
@@ -76,7 +74,6 @@ def test_ridge_point_batch_threshold(qwen):
     a 2048-token prompt leaves each expert memory-bound, 8192+ compute-
     bound territory (paper: 'more than 8192 tokens')."""
     cm = CostModel(qwen, H100X2)
-    e = qwen.moe
     for prompt, bound in ((2048, "memory"), (16384, "compute")):
         plan = IterationPlan(prefill=[PrefillSlice(
             req_id=0, token_start=0, token_end=prompt,

@@ -86,3 +86,65 @@ def test_high_water_tracks_peak_not_current():
     kv.reserve(3, 2)
     assert kv.pages_in_use() == 5
     assert kv.pages_high_water == 9
+
+
+# ------------------------------------------------------------------------
+# Swap-to-host: the second (host) pool behind swap-mode preemption
+# ------------------------------------------------------------------------
+
+
+def test_swap_roundtrip_moves_pages_between_pools():
+    kv = PagedKVAllocator(n_pages=6, page_size=4, n_host_pages=3)
+    kv.reserve(1, 10)                       # 3 HBM pages
+    kv.set_length(1, 10)
+    assert kv.can_swap_out(1)
+    moved = kv.swap_out(1)
+    assert moved == 10                      # filled KV tokens, not capacity
+    assert kv.pages_in_use() == 0 and kv.host_pages_in_use() == 3
+    assert not kv.is_resident(1) and kv.is_swapped(1) and kv.owns(1)
+    assert kv.length(1) == 10               # length survives the swap
+    assert kv.can_swap_in(1)
+    assert kv.swap_in(1) == 10
+    assert kv.pages_in_use() == 3 and kv.host_pages_in_use() == 0
+    assert kv.block_table(1) and kv.is_resident(1)
+    assert (kv.n_swap_outs, kv.n_swap_ins) == (1, 1)
+    assert (kv.swapped_out_tokens, kv.swapped_in_tokens) == (10, 10)
+    kv.free(1)
+    assert kv.n_free_pages == 6 and kv.n_free_host_pages == 3
+
+
+def test_swap_out_guards_host_room_stash_and_residency():
+    kv = PagedKVAllocator(n_pages=8, page_size=4, n_host_pages=2,
+                          stash_factor=1.0)
+    kv.reserve(1, 12)                       # 3 pages > 2 host pages
+    assert not kv.can_swap_out(1)
+    kv.reserve(2, 4, stash_tokens=4)        # live stash: mid-prefill
+    assert not kv.can_swap_out(2)
+    kv.release_stash(2)
+    assert kv.can_swap_out(2)
+    assert not kv.can_swap_out(99)          # never reserved
+    kv.swap_out(2)
+    assert not kv.can_swap_out(2)           # already swapped
+    assert not kv.can_swap_in(99)
+
+
+def test_free_releases_host_pages_of_swapped_request():
+    kv = PagedKVAllocator(n_pages=4, page_size=4, n_host_pages=4)
+    kv.reserve(1, 8)
+    kv.set_length(1, 8)
+    kv.swap_out(1)
+    kv.free(1)                              # finished/cancelled while on host
+    assert not kv.owns(1)
+    assert kv.n_free_pages == 4 and kv.n_free_host_pages == 4
+    assert kv.host_pages_high_water == 2
+
+
+def test_swap_in_requires_free_hbm_pages():
+    kv = PagedKVAllocator(n_pages=3, page_size=4, n_host_pages=3)
+    kv.reserve(1, 12)
+    kv.set_length(1, 12)
+    kv.swap_out(1)
+    kv.reserve(2, 8)                        # occupies 2 of 3 HBM pages
+    assert not kv.can_swap_in(1)            # needs 3, only 1 free
+    kv.free(2)
+    assert kv.can_swap_in(1)

@@ -164,8 +164,6 @@ def test_aux_loss_favors_balance():
     cfg = tiny_moe()
     e = cfg.moe
     # balanced counts give lower switch loss than concentrated ones
-    t = 64
-    p_uniform = jnp.full((t, e.n_experts), 1.0 / e.n_experts)
     # fake: loss = E * sum(f * pbar); compute directly
     f_bal = jnp.full((e.n_experts,), 1.0 / e.n_experts)
     f_conc = jnp.zeros((e.n_experts,)).at[0].set(1.0)

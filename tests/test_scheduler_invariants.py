@@ -11,8 +11,6 @@
 
 from __future__ import annotations
 
-import math
-
 import pytest
 try:
     from hypothesis import given, settings, strategies as st

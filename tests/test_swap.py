@@ -1,0 +1,268 @@
+"""Swap-to-host preemption: the second eviction mode next to
+restore-by-recompute (DESIGN.md §Swap-to-host preemption).
+
+Covers the acceptance bar for the mode: oversubscribed engine AND
+simulator runs under ``preemption_mode="swap"`` must match unconstrained
+runs token-for-token (the DMA-back restores KV verbatim), a victim swapped
+twice must still agree, the swap-in bandwidth budget must throttle without
+deadlocking, and — as a property over random workloads — swap accounting
+must never leak a page from either pool.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to a deterministic seeded sweep
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from conftest import tiny_dense
+from repro.core.base import make_scheduler
+from repro.core.plan import Request, RequestState
+from repro.models.model import DecoderModel
+from repro.serving.cost_model import H100X2
+from repro.serving.engine import Engine
+from repro.serving.kvcache import PagedKVAllocator
+from repro.serving.simulator import Simulator
+from repro.serving.traffic import TraceRequest
+
+
+def _run_engine(cfg, sched_name, jobs, **eng_kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler(sched_name, model.n_blocks, n_slots=4, quantum=8,
+                           token_budget=16)
+    eng = Engine(model, params, sched, n_slots=4, max_len=64, **eng_kw)
+    for prompt, max_new in jobs:
+        eng.submit(prompt, max_new)
+    eng.run(max_iterations=100_000)
+    return eng
+
+
+OVERSUB_JOBS = None
+
+
+def _oversub_jobs():
+    global OVERSUB_JOBS
+    if OVERSUB_JOBS is None:
+        rng = np.random.default_rng(0)
+        OVERSUB_JOBS = [
+            (list(rng.integers(1, 200, int(rng.integers(4, 10)))), 12)
+            for _ in range(32)]
+    return OVERSUB_JOBS
+
+
+@pytest.mark.parametrize("sched", ["layered", "chunked"])
+def test_engine_oversubscribed_swap_matches_unconstrained(sched):
+    """Acceptance: 32 requests into a ~3-resident pool under swap mode
+    must complete via DMA-backed eviction with tokens identical to an
+    unconstrained run — swap restores KV verbatim, so the greedy
+    continuation is the same function."""
+    cfg = tiny_dense()
+    jobs = _oversub_jobs()
+    tight = _run_engine(cfg, sched, jobs, pages=16, page_size=4,
+                        decode_reserve=1, preemption_mode="swap")
+    assert tight.n_swapped_out > 0, "scenario must actually swap"
+    assert tight.n_swapped_out == tight.n_swapped_in
+    assert tight.alloc.pages_in_use() == 0
+    assert tight.alloc.host_pages_in_use() == 0
+    assert not tight.host_kv                # every host copy consumed
+
+    free = _run_engine(cfg, sched, jobs)    # unconstrained pool
+    assert free.n_swapped_out == 0
+    assert tight.outputs == free.outputs, "swap changed generated tokens"
+    swapped = [rid for rid, r in tight.requests.items() if r.n_swaps > 0]
+    assert swapped
+    for rid in swapped:
+        assert len(tight.outputs[rid]) == 12
+
+
+@pytest.mark.parametrize("mode", ["swap", "auto"])
+def test_simulator_oversubscribed_swap_matches_unconstrained(mode):
+    """The simulator drives the same scheduler logic: per-request token
+    counts (and every request completing) must match the unconstrained
+    run under both swap and auto mode."""
+    cfg = tiny_dense()
+    rng = np.random.default_rng(1)
+    trace = [TraceRequest(arrival_time=i * 1e-3,
+                          prompt_len=int(rng.integers(4, 10)),
+                          output_len=12) for i in range(32)]
+
+    def gens(**kw):
+        sim = Simulator(cfg, "layered", H100X2, n_slots=8, quantum=16,
+                        token_budget=64, page_size=4, decode_reserve=1,
+                        **kw)
+        res = sim.run(trace)
+        assert sim.kv.pages_in_use() == 0
+        assert sim.kv.host_pages_in_use() == 0
+        return res, sorted((r.req_id, r.n_generated) for r in res.requests)
+
+    res_free, free = gens()
+    res_tight, tight = gens(n_pages=16, preemption_mode=mode)
+    assert res_tight.n_swap_outs > 0, "scenario must actually swap"
+    assert res_tight.n_swap_outs == res_tight.n_swap_ins
+    assert res_tight.swap_bytes > 0
+    assert res_tight.swap_stall_time > 0
+    assert res_tight.host_pages_high_water > 0
+    assert res_free.n_swap_outs == 0 and res_free.swap_bytes == 0
+    assert tight == free
+
+
+def test_engine_doubly_swapped_victim_tokens_identical():
+    """Force the SAME request through two swap-out/swap-in cycles: the
+    restored KV must continue the greedy decode exactly (and, unlike
+    recompute, the prompt must NOT grow — nothing is folded)."""
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=2, quantum=8)
+    eng = Engine(model, params, sched, n_slots=2, max_len=64,
+                 preemption_mode="swap")
+    rid = eng.submit(list(range(1, 9)), 12)
+    forced = []
+    while eng.scheduler.has_work():
+        r = eng.requests[rid]
+        if r.state == RequestState.DECODE and r.n_generated in (3, 7) \
+                and r.n_generated not in forced:
+            sched.swap_out(rid)           # what the pressure pass would do
+            eng._swap_out(rid)            # what step() would execute
+            forced.append(r.n_generated)
+        eng.step()
+    assert forced == [3, 7]
+    assert eng.requests[rid].n_swaps == 2
+    assert eng.requests[rid].n_preemptions == 0
+    assert eng.requests[rid].prompt_len == 8     # no recompute fold
+    clean = _run_engine(cfg, "layered", [(list(range(1, 9)), 12)])
+    assert eng.outputs[rid] == clean.outputs[0]
+    assert len(eng.outputs[rid]) == 12
+
+
+def drive_swap(reqs, *, n_pages, n_host_pages, page_size=4,
+               decode_reserve=2, swap_in_budget=None, mode="swap",
+               n_blocks=6, max_iters=100_000, **sched_kw):
+    """Drive a pure scheduler to drain under swap-mode pressure, checking
+    page conservation in BOTH pools after every iteration."""
+    sched = make_scheduler("continuous", n_blocks, **sched_kw)
+    kv = PagedKVAllocator(n_pages, page_size, stash_factor=0.25,
+                          n_host_pages=n_host_pages)
+    sched.attach_kv(kv, decode_reserve=decode_reserve, mode=mode,
+                    swap_in_budget=swap_in_budget)
+    for r in reqs:
+        sched.submit(r)
+    plans = []
+    it = 0
+    while sched.has_work():
+        pre = {rid for rid, r in sched.requests.items()
+               if r.state == RequestState.DECODE}
+        plan = sched.next_plan(now=float(it))
+        plans.append(plan)
+        # I1 modulo eviction: every pre-iteration DECODE request is either
+        # decoded or was evicted THIS iteration (folded OR swapped out)
+        assert pre.issubset(set(plan.decode_ids) | set(plan.preempted_ids)
+                            | set(plan.swapped_out_ids))
+        # conservation: no page is ever minted or leaked, in either pool
+        assert kv.pages_in_use() + kv.n_free_pages == kv.n_pages
+        assert kv.host_pages_in_use() + kv.n_free_host_pages \
+            == kv.n_host_pages
+        it += 1
+        assert it < max_iters, "did not drain under swap pressure"
+    return plans, sched, kv
+
+
+swap_spec = st.lists(
+    st.tuples(st.integers(1, 40), st.integers(1, 24)),
+    min_size=2, max_size=10)
+
+
+@given(spec=swap_spec, host_pages=st.integers(4, 40),
+       budget=st.sampled_from([None, 4, 16]))
+@settings(max_examples=25, deadline=None)
+def test_swap_accounting_never_leaks_pages(spec, host_pages, budget):
+    """Property: across a full oversubscribed run — arbitrary request
+    mix, host pool size, and swap-in budget — both pools conserve pages
+    every iteration, drain empty, every request finishes, and every
+    swap-out is eventually matched by a swap-in."""
+    reqs = [Request(req_id=i, prompt_len=p, max_new_tokens=m,
+                    arrival_time=float(i))
+            for i, (p, m) in enumerate(spec)]
+    # pool floored so the biggest request always fits an empty pool
+    worst = max(-(-(p + m + 2) // 4) + -(-(p // 4 + 1) // 4)
+                for p, m in spec)
+    plans, sched, kv = drive_swap(
+        reqs, n_pages=max(16, worst + 2), n_host_pages=host_pages,
+        swap_in_budget=budget, n_slots=8, token_budget=64, quantum=16)
+    assert kv.pages_in_use() == 0
+    assert kv.host_pages_in_use() == 0
+    assert kv.n_swap_outs == kv.n_swap_ins
+    assert kv.swapped_out_tokens == kv.swapped_in_tokens
+    for r in reqs:
+        assert r.n_generated == r.max_new_tokens, r.req_id
+        assert len(r.swap_out_times) == len(r.swap_in_times) == r.n_swaps
+
+
+def test_swap_in_budget_throttles_but_never_deadlocks():
+    """A budget smaller than any single request still makes progress (one
+    restore per iteration is always allowed) while capping restores: no
+    iteration may DMA-in two requests whose combined KV beats the budget."""
+    reqs = [Request(req_id=i, prompt_len=12, max_new_tokens=10,
+                    arrival_time=float(i)) for i in range(5)]
+    plans, sched, kv = drive_swap(
+        reqs, n_pages=16, n_host_pages=64, swap_in_budget=1,
+        n_slots=8, token_budget=64, quantum=16)
+    assert kv.n_swap_outs > 0
+    for plan in plans:
+        assert len(plan.swapped_in_ids) <= 1       # budget 1 => one/iter
+    for r in reqs:
+        assert r.n_generated == r.max_new_tokens
+
+
+def test_auto_mode_follows_cost_hook():
+    """auto consults swap_cost_fn per victim: an always-False hook routes
+    every eviction to recompute, an always-True hook to swap."""
+    def run(hook):
+        sched = make_scheduler("continuous", 4, n_slots=4)
+        kv = PagedKVAllocator(n_pages=12, page_size=2, n_host_pages=24)
+        sched.attach_kv(kv, decode_reserve=0, mode="auto",
+                        swap_cost_fn=hook)
+        for i in range(3):
+            sched.submit(Request(req_id=i, prompt_len=7, max_new_tokens=10,
+                                 arrival_time=float(i)))
+        it = 0
+        while sched.has_work():
+            sched.next_plan(now=float(it))
+            it += 1
+            assert it < 2000
+        return sched
+
+    prefer_swap = run(lambda r: True)
+    assert prefer_swap.n_swap_outs > 0 and prefer_swap.n_preemptions == 0
+    prefer_recompute = run(lambda r: False)
+    assert prefer_recompute.n_preemptions > 0
+    assert prefer_recompute.n_swap_outs == 0
+
+
+def test_swap_mode_requires_host_pool():
+    sched = make_scheduler("continuous", 4, n_slots=4)
+    kv = PagedKVAllocator(n_pages=8, page_size=2)      # no host pages
+    with pytest.raises(ValueError, match="host pool"):
+        sched.attach_kv(kv, mode="swap")
+    with pytest.raises(ValueError, match="unknown preemption mode"):
+        sched.attach_kv(kv, mode="dma")
+
+
+def test_swap_falls_back_to_recompute_when_host_pool_full():
+    """Host pool too small for any victim: swap mode must degrade to the
+    recompute path, never raise or deadlock."""
+    reqs = [Request(req_id=i, prompt_len=12, max_new_tokens=10,
+                    arrival_time=float(i)) for i in range(4)]
+    plans, sched, kv = drive_swap(
+        reqs, n_pages=16, n_host_pages=1,   # 1 page: no victim ever fits
+        n_slots=8, token_budget=64, quantum=16)
+    assert kv.n_swap_outs == 0
+    assert sched.n_preemptions > 0
+    for r in reqs:
+        assert r.n_generated == r.max_new_tokens
