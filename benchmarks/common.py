@@ -11,7 +11,7 @@ from typing import Dict, List
 
 from repro.configs import get_config
 from repro.serving.cost_model import H100X2
-from repro.serving.metrics import SLOConfig, request_metrics
+from repro.serving.metrics import SLOConfig, per_class_metrics, request_metrics
 from repro.serving.simulator import Simulator
 from repro.serving.traffic import DATASETS, poisson_trace
 
@@ -52,8 +52,19 @@ def oversubscribed_pages(model: str, trace, page_size: int = 16,
 
 def run_sim(model: str, dataset: str, scheduler: str, rate: float,
             n_requests: int = 100, seed: int = 0, **sched_kw):
-    cfg = get_config(model)
     trace = poisson_trace(DATASETS[dataset], rate, n_requests, seed=seed)
+    m, res, _ = run_sim_trace(model, trace, scheduler,
+                              slo=SLOS.get((model, dataset)), **sched_kw)
+    m.update({"dataset": dataset, "rate": rate})
+    return m, res
+
+
+def run_sim_trace(model: str, trace, scheduler: str, slo=None, **sched_kw):
+    """Run an externally built trace (e.g. a multi-class mix) through the
+    standard simulator configuration.  ``slo`` may be a single SLOConfig
+    or a per-class dict; returns (aggregate metrics, SimResult,
+    per-class metrics)."""
+    cfg = get_config(model)
     defaults = dict(token_budget=512, quantum=512)
     defaults.update(sched_kw)
     if defaults.pop("oversubscribed", False):
@@ -62,11 +73,10 @@ def run_sim(model: str, dataset: str, scheduler: str, rate: float,
                 model, trace, defaults.get("page_size", 16)))
     sim = Simulator(cfg, scheduler, H100X2, n_slots=N_SLOTS, **defaults)
     res = sim.run(trace)
-    slo = SLOS.get((model, dataset))
-    m = request_metrics(res.requests, slo)
+    agg_slo = None if isinstance(slo, dict) else slo
+    m = request_metrics(res.requests, agg_slo)
     m.update({
-        "model": model, "dataset": dataset, "scheduler": scheduler,
-        "rate": rate,
+        "model": model, "scheduler": scheduler,
         "energy_per_token_mj": res.energy_per_token * 1e3,
         "expert_bytes_total": res.total_expert_bytes,
         "mean_decode_batch": res.mean_decode_batch,
@@ -74,10 +84,11 @@ def run_sim(model: str, dataset: str, scheduler: str, rate: float,
         # memory-subsystem signals (nonzero only under a bounded pool)
         "recompute_tokens": res.recompute_tokens,
         "swap_bytes": res.swap_bytes,
+        "swap_dma_time": res.swap_dma_time,
         "swap_stall_time": res.swap_stall_time,
         "pages_high_water": res.pages_high_water,
     })
-    return m, res
+    return m, res, per_class_metrics(res.requests, slo)
 
 
 def save(name: str, payload) -> str:

@@ -45,6 +45,15 @@ Eviction is mode-aware (DESIGN.md §Swap-to-host preemption):
     from the hardware cost model) says the DMA round-trip is cheaper than
     re-running the recompute prefill; without a cost hook, auto prefers
     swap whenever the victim is swappable.
+
+Multi-tenant SLO classes (DESIGN.md §Serving runtime): every request
+carries a ``slo_class`` ("interactive" | "batch" | operator-defined).
+The eviction victim walk is class-aware — candidates are ranked by
+``CLASS_EVICT_RANK`` FIRST (batch victims go before interactive ones) and
+latest-arrival within a class — and admission can reserve per-class
+headroom pages: with ``class_headroom={"interactive": k}``, a request of
+any OTHER class must leave k pages free, so a batch burst cannot starve
+interactive admissions.
 """
 
 from __future__ import annotations
@@ -56,6 +65,10 @@ from repro.core.plan import IterationPlan, Request, RequestState
 
 if TYPE_CHECKING:  # avoid core <-> serving import cycle at runtime
     from repro.serving.kvcache import PagedKVAllocator
+
+# Eviction priority per SLO class: HIGHER rank is evicted first.  Unknown
+# classes rank with "interactive" (never evicted ahead of batch work).
+CLASS_EVICT_RANK: Dict[str, int] = {"interactive": 0, "batch": 1}
 
 
 class Scheduler:
@@ -77,6 +90,7 @@ class Scheduler:
         self.preemption_mode = "recompute"
         self.swap_in_budget: Optional[int] = None
         self.swap_cost_fn: Optional[Callable[[Request], bool]] = None
+        self.class_headroom: Dict[str, int] = {}
         self.n_preemptions = 0
         self.n_swap_outs = 0
 
@@ -86,14 +100,17 @@ class Scheduler:
                   decode_reserve: Optional[int] = None,
                   preemption: bool = True, mode: str = "recompute",
                   swap_in_budget: Optional[int] = None,
-                  swap_cost_fn=None) -> None:
+                  swap_cost_fn=None,
+                  class_headroom: Optional[Dict[str, int]] = None) -> None:
         """Share a paged allocator with this scheduler. ``decode_reserve``
         is the per-request decode KV reservation in tokens (default: one
         page); growth beyond it triggers the preemption path.  ``mode``
         selects the eviction flavour ("recompute" | "swap" | "auto");
         ``swap_in_budget`` caps the KV tokens DMA'd back from host per
         iteration (None = unlimited); ``swap_cost_fn(req) -> bool`` prices
-        swap vs recompute per victim for "auto" (True = swap is cheaper)."""
+        swap vs recompute per victim for "auto" (True = swap is cheaper).
+        ``class_headroom`` maps an SLO class to pages reserved for it:
+        admission of any OTHER class must leave that many pages free."""
         if mode not in ("recompute", "swap", "auto"):
             raise ValueError(f"unknown preemption mode {mode!r}")
         if mode != "recompute" and kv.n_host_pages <= 0:
@@ -107,6 +124,13 @@ class Scheduler:
         self.preemption_mode = mode
         self.swap_in_budget = swap_in_budget
         self.swap_cost_fn = swap_cost_fn
+        self.class_headroom = dict(class_headroom or {})
+
+    def _headroom_for(self, slo_class: str) -> int:
+        """Pages a request of ``slo_class`` must leave free at admission:
+        the headroom reserved for every OTHER class."""
+        return sum(pages for cls, pages in self.class_headroom.items()
+                   if cls != slo_class)
 
     def max_stash_tokens(self, req: Request,
                          prompt_len: Optional[int] = None) -> int:
@@ -154,18 +178,21 @@ class Scheduler:
             return True
         need = r.prompt_len + self.decode_reserve
         stash = self.max_stash_tokens(r)
-        # a request that cannot fit even an EMPTY pool would wait forever —
-        # surface it instead of deadlocking the queue (queued requests have
+        headroom = self._headroom_for(r.slo_class)
+        # a request that cannot fit even an EMPTY pool (minus the headroom
+        # reserved for other classes) would wait forever — surface it
+        # instead of deadlocking the queue (queued requests have
         # n_generated == n_folded, so prompt_len + remaining generation is
         # the true final sequence length)
         worst = r.prompt_len + (r.max_new_tokens - r.n_folded)
-        if not self.kv.fits_pool(worst, stash):
+        if not self.kv.fits_pool(worst, stash, headroom_pages=headroom):
+            reserved = f" minus {headroom} headroom pages" if headroom else ""
             raise RuntimeError(
                 f"request {r.req_id} needs {worst} KV tokens "
                 f"(+{stash} stash) but the pool holds only "
-                f"{self.kv.n_pages * self.kv.page_size} tokens; "
+                f"{self.kv.n_pages * self.kv.page_size} tokens{reserved}; "
                 f"enlarge --pages or shard the request")
-        return self.kv.can_admit(need, stash)
+        return self.kv.can_admit(need, stash, headroom_pages=headroom)
 
     def admit(self, now: float, limit: Optional[int] = None) -> List[int]:
         """FCFS admission, gated on BOTH a free slot and the page pool
@@ -200,11 +227,13 @@ class Scheduler:
     def _evictable(self, r: Request) -> bool:
         """True iff ``r`` would still fit an EMPTY pool after the
         restore-by-recompute fold (prompt + generated-so-far, with the
-        stash re-evaluated at the folded length)."""
+        stash re-evaluated at the folded length, and the same per-class
+        headroom its re-admission will be gated on)."""
         folded = r.prompt_len + (r.n_generated - r.n_folded)
         worst = folded + (r.max_new_tokens - r.n_generated)
         return self.kv.fits_pool(worst,
-                                 self.max_stash_tokens(r, prompt_len=folded))
+                                 self.max_stash_tokens(r, prompt_len=folded),
+                                 headroom_pages=self._headroom_for(r.slo_class))
 
     def _on_preempt(self, req_id: int) -> None:
         """Scheduler-specific cleanup (drop the victim from in-flight cohort
@@ -305,13 +334,16 @@ class Scheduler:
             # fits, so keeping it guarantees forward progress.
             earliest = min(self.active,
                            key=lambda r: (r.arrival_time, r.req_id))
-            # walk candidates latest-arrival-first and take the FIRST with
-            # an eviction route — identical victim to scoring them all,
-            # but the route (and the auto-mode cost hook behind it) is
-            # evaluated only until a victim is found, not per resident
+            # walk candidates class-rank-first (batch victims before
+            # interactive — CLASS_EVICT_RANK), latest-arrival within a
+            # class, and take the FIRST with an eviction route — identical
+            # victim to scoring them all, but the route (and the auto-mode
+            # cost hook behind it) is evaluated only until a victim is
+            # found, not per resident
             victim = route = None
             for r in sorted((r for r in self.active if r is not earliest),
-                            key=lambda r: (r.arrival_time, r.req_id),
+                            key=lambda r: (CLASS_EVICT_RANK.get(r.slo_class, 0),
+                                           r.arrival_time, r.req_id),
                             reverse=True):
                 route = self._evict_route(r)
                 if route:
@@ -354,6 +386,12 @@ class Scheduler:
             if r.state != RequestState.SWAPPED or rid in exclude:
                 break
             if not self.kv.can_swap_in(rid):
+                break
+            # the DMA-back is a re-admission: it must leave the same
+            # per-class headroom free that queue admission enforces, or a
+            # swapped batch request would retake the interactive reserve
+            if self.kv.n_free_pages - self.kv.swapped_pages(rid) \
+                    < self._headroom_for(r.slo_class):
                 break
             need = self.kv.length(rid)
             if budget is not None and need > budget and swapped_in:

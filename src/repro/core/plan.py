@@ -45,6 +45,10 @@ class Request:
     prompt_len: int
     max_new_tokens: int
     arrival_time: float = 0.0
+    # multi-tenant SLO class ("interactive" | "batch" | operator-defined):
+    # drives class-aware eviction ordering (batch victims go first) and the
+    # optional per-class admission headroom — see core/base.py
+    slo_class: str = "interactive"
     # engine-only: actual token ids (None in the simulator)
     prompt_tokens: Optional[object] = None
     state: RequestState = RequestState.WAITING

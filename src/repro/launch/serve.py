@@ -1,15 +1,25 @@
 """Production serving launcher: real-execution engine (smoke-sized models
 on CPU; the same engine code path runs under a device mesh on TPU) or the
-discrete-event simulator at full model scale.
+discrete-event simulator at full model scale.  Both run the SAME
+ServingRuntime loop (serving/runtime.py): closed-loop drain by default,
+open-loop timed-trace replay with ``--open-loop`` (engine) or
+``--simulate`` (always open-loop), optional per-token streaming via
+``--stream`` and multi-tenant class mixes via ``--batch-fraction``.
 
 Usage:
-  # real engine, reduced model, layered prefill:
+  # real engine, reduced model, layered prefill, closed loop:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
       --smoke --scheduler layered --requests 8
 
-  # full-scale simulation of the paper's serving scenario:
+  # real engine, open-loop Poisson replay with streamed tokens:
+  PYTHONPATH=src python -m repro.launch.serve --smoke --open-loop \
+      --rate 0.5 --requests 8 --stream
+
+  # full-scale simulation of the paper's serving scenario, 30% batch-class
+  # bursty background traffic, 64 pages held back for interactive:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-30b-a3b \
-      --simulate --dataset arxiv --rate 1.3 --requests 100
+      --simulate --dataset arxiv --rate 1.3 --requests 100 \
+      --batch-fraction 0.3 --arrival bursty --class-headroom 64
 """
 
 from __future__ import annotations
@@ -25,9 +35,13 @@ from repro.core.base import SCHEDULERS, make_scheduler
 from repro.models.model import DecoderModel
 from repro.serving.cost_model import H100X2, TPU_V5E
 from repro.serving.engine import Engine
-from repro.serving.metrics import SLOConfig, request_metrics
+from repro.serving.metrics import (SLOConfig, per_class_metrics,
+                                   request_metrics)
+from repro.serving.runtime import EngineExecutor, ServingRuntime
 from repro.serving.simulator import Simulator
-from repro.serving.traffic import DATASETS, poisson_trace
+from repro.serving.traffic import (ARRIVAL_PROCESSES, DATASETS, ClassSpec,
+                                   DatasetModel, LengthModel,
+                                   attach_prompt_tokens, multi_class_trace)
 
 
 def preemption_opts(args):
@@ -38,6 +52,48 @@ def preemption_opts(args):
     mode = args.preemption if args.preemption in ("swap", "auto") \
         else "recompute"
     return enabled, mode
+
+
+def class_headroom_opt(args):
+    """--class-headroom N reserves N pages for interactive admissions."""
+    return {"interactive": args.class_headroom} if args.class_headroom \
+        else None
+
+
+def _print_per_class(tag, requests, slo=None) -> None:
+    per = per_class_metrics(requests, slo)
+    if len(per) < 2:
+        return
+    for cls, m in per.items():
+        att = f" slo={m['slo_attainment']:.2f}" if "slo_attainment" in m \
+            else ""
+        print(f"[{tag}]   class {cls:<12} n={m['n_requests']:.0f} "
+              f"ttft mean={m['ttft_mean']:.2f} p99={m['ttft_p99']:.2f}; "
+              f"preempt rate {m['preemption_rate']:.2f}/req; "
+              f"swap rate {m['swap_rate']:.2f}/req{att}")
+
+
+def _engine_trace(args, cfg):
+    """Open-loop trace for the smoke-scale engine, built with the SAME
+    traffic generators as the simulator (``--arrival`` selects the
+    process, ``--batch-fraction`` the class mix) but with a length model
+    shrunk to the engine's max_len, and real token ids attached for
+    replay.  ``--rate`` is requests per unit of the selected clock."""
+    smoke = DatasetModel(
+        name="engine-smoke",
+        input_len=LengthModel(mean=args.max_len // 6, std=args.max_len // 8,
+                              lo=16, hi=args.max_len // 2),
+        output_len=LengthModel(mean=9, std=4, lo=4, hi=15))
+    n_batch = int(round(args.requests * args.batch_fraction))
+    specs = [ClassSpec("batch", smoke, args.rate * args.batch_fraction,
+                       n_batch, process=args.arrival)] if n_batch else []
+    if args.requests - n_batch:
+        specs.append(ClassSpec(
+            "interactive", smoke, args.rate * (1 - args.batch_fraction),
+            args.requests - n_batch,
+            process=args.arrival if not n_batch else "poisson"))
+    trace = multi_class_trace(specs, seed=args.seed)
+    return attach_prompt_tokens(trace, cfg.vocab_size, seed=args.seed)
 
 
 def serve_real(args) -> None:
@@ -54,32 +110,56 @@ def serve_real(args) -> None:
                  preemption=enabled, preemption_mode=mode,
                  host_pages=args.host_pages,
                  swap_in_budget=args.swap_in_budget,
-                 decode_reserve=args.decode_reserve)
-    rng = np.random.default_rng(args.seed)
-    for _ in range(args.requests):
-        n = int(rng.integers(16, args.max_len // 2))
-        enc = None
-        if cfg.encoder.enabled:
-            enc = np.zeros((cfg.encoder.n_frames, cfg.d_model), np.float32)
-        eng.submit(rng.integers(1, cfg.vocab_size, n).tolist(),
-                   max_new_tokens=int(rng.integers(4, 16)), enc_frames=enc)
-    eng.run()
+                 decode_reserve=args.decode_reserve,
+                 class_headroom=class_headroom_opt(args))
+    def _stream(rid, tok, t):
+        print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
+    on_token = _stream if args.stream else None
+    if args.open_loop:
+        # open-loop timed replay through the shared runtime: requests are
+        # injected at their arrival times, the engine idles through gaps
+        trace = _engine_trace(args, cfg)
+        wall = args.clock == "wall"
+        runtime = ServingRuntime(
+            EngineExecutor(eng, wall=wall), on_token=on_token,
+            clock="executor" if wall else "iteration")
+        runtime.run(trace, max_iterations=100_000)
+        unit = "s" if wall else "iters"
+    else:
+        rng = np.random.default_rng(args.seed)
+        for _ in range(args.requests):
+            n = int(rng.integers(16, args.max_len // 2))
+            enc = None
+            if cfg.encoder.enabled:
+                enc = np.zeros((cfg.encoder.n_frames, cfg.d_model),
+                               np.float32)
+            cls = "batch" if rng.random() < args.batch_fraction \
+                else "interactive"
+            eng.submit(rng.integers(1, cfg.vocab_size, n).tolist(),
+                       max_new_tokens=int(rng.integers(4, 16)),
+                       enc_frames=enc, slo_class=cls)
+        runtime = ServingRuntime(EngineExecutor(eng), on_token=on_token,
+                                 clock="iteration")
+        runtime.run((), max_iterations=100_000)
+        unit = "iters"
     m = request_metrics(eng.requests.values())
-    print(f"[serve] {cfg.name} x {args.scheduler}: "
+    loop = "open-loop" if args.open_loop else "closed-loop"
+    print(f"[serve] {cfg.name} x {args.scheduler} ({loop}): "
           f"{args.requests} requests in {eng.iteration} iterations")
-    print(f"[serve] ttft(iters) mean={m['ttft_mean']:.1f} "
+    print(f"[serve] ttft({unit}) mean={m['ttft_mean']:.1f} "
           f"p99={m['ttft_p99']:.1f}; expert-load "
           f"{eng.expert_load_bytes / 1e6:.1f} MB")
     print(f"[serve] kv pages high-water {eng.alloc.pages_high_water}"
           f"/{eng.alloc.n_pages}; queue delay mean "
-          f"{m['queue_delay_mean']:.1f} iters; "
+          f"{m['queue_delay_mean']:.1f} {unit}; "
           f"preemptions {eng.n_preempted} "
           f"(rate {m['preemption_rate']:.2f}/req)")
     if eng.alloc.n_host_pages:
         print(f"[serve] swap: {eng.n_swapped_out} out / "
               f"{eng.n_swapped_in} in; host pages high-water "
               f"{eng.alloc.host_pages_high_water}/{eng.alloc.n_host_pages}; "
-              f"restore latency mean {m['restore_latency_mean']:.1f} iters")
+              f"restore latency mean {m['restore_latency_mean']:.1f} {unit}")
+    _print_per_class("serve", eng.requests.values())
 
 
 def serve_sim(args) -> None:
@@ -87,8 +167,22 @@ def serve_sim(args) -> None:
     hw = H100X2 if args.hw == "h100x2" else TPU_V5E
     if args.host_bw is not None:
         hw = dataclasses.replace(hw, host_bw=args.host_bw * 1e9)
-    trace = poisson_trace(DATASETS[args.dataset], args.rate, args.requests,
-                          seed=args.seed)
+    if args.batch_fraction > 0:
+        # multi-tenant mix: interactive foreground on the chosen dataset,
+        # batch-class arXiv background on the selected arrival process
+        n_batch = int(round(args.requests * args.batch_fraction))
+        trace = multi_class_trace([
+            ClassSpec("interactive", DATASETS[args.dataset],
+                      args.rate * (1 - args.batch_fraction),
+                      args.requests - n_batch),
+            ClassSpec("batch", DATASETS["arxiv"],
+                      args.rate * args.batch_fraction, n_batch,
+                      process=args.arrival),
+        ], seed=args.seed)
+    else:
+        trace = ARRIVAL_PROCESSES[args.arrival](
+            DATASETS[args.dataset], args.rate, args.requests,
+            seed=args.seed)
     enabled, mode = preemption_opts(args)
     sim = Simulator(cfg, args.scheduler, hw, n_slots=args.slots,
                     quantum=args.quantum, token_budget=args.token_budget,
@@ -97,9 +191,12 @@ def serve_sim(args) -> None:
                     preemption=enabled, preemption_mode=mode,
                     host_pages=args.host_pages,
                     swap_in_budget=args.swap_in_budget,
-                    decode_reserve=args.decode_reserve)
+                    decode_reserve=args.decode_reserve,
+                    swap_overlap=not args.swap_serial,
+                    class_headroom=class_headroom_opt(args))
     res = sim.run(trace)
-    m = request_metrics(res.requests, SLOConfig(args.ttft_slo, args.tbt_slo))
+    slo = SLOConfig(args.ttft_slo, args.tbt_slo)
+    m = request_metrics(res.requests, slo)
     print(f"[serve-sim] {cfg.name} x {args.scheduler} on {args.dataset} "
           f"@{args.rate} req/s ({hw.name}; "
           f"{sim.kv.n_pages} x {sim.kv.page_size}-token pages)")
@@ -119,9 +216,11 @@ def serve_sim(args) -> None:
         print(f"[serve-sim]   swap             "
               f"{res.n_swap_outs} out / {res.n_swap_ins} in; "
               f"{res.swap_bytes / 1e9:.2f} GB over host link, "
-              f"{res.swap_stall_time:.3f} s stall; host pages "
+              f"{res.swap_dma_time:.3f} s DMA ({res.swap_stall_time:.3f} s "
+              f"unhidden stall); host pages "
               f"high-water {res.host_pages_high_water}/{res.n_host_pages}; "
               f"restore latency mean {m['restore_latency_mean']:.3f} s")
+    _print_per_class("serve-sim", res.requests, slo)
 
 
 def main() -> None:
@@ -131,9 +230,35 @@ def main() -> None:
                     choices=sorted(SCHEDULERS))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--simulate", action="store_true")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="real engine: replay a timed Poisson trace "
+                         "through the shared ServingRuntime (requests "
+                         "injected at their arrival times) instead of the "
+                         "closed-loop submit-everything drain")
+    ap.add_argument("--clock", default="virtual",
+                    choices=["virtual", "wall"],
+                    help="open-loop engine clock: virtual (1 unit per "
+                         "iteration, deterministic) or wall (arrival "
+                         "times in real seconds; idles really sleep)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print every generated token as it is emitted "
+                         "(the incremental-output API; engine streams "
+                         "real ids, the simulator streams placeholders)")
     ap.add_argument("--dataset", default="arxiv", choices=list(DATASETS))
+    ap.add_argument("--arrival", default="poisson",
+                    choices=sorted(ARRIVAL_PROCESSES),
+                    help="arrival process (bursty = on/off modulated "
+                         "Poisson with the same long-run rate)")
     ap.add_argument("--rate", type=float, default=1.3)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-fraction", type=float, default=0.0,
+                    help="fraction of requests tagged slo_class=batch "
+                         "(evicted before interactive under memory "
+                         "pressure); the simulator draws their lengths "
+                         "from arXiv and their arrivals from --arrival")
+    ap.add_argument("--class-headroom", type=int, default=0,
+                    help="pages reserved for interactive admissions: "
+                         "batch requests must leave this many pages free")
     ap.add_argument("--slots", type=int, default=64)
     ap.add_argument("--quantum", type=int, default=512)
     ap.add_argument("--token-budget", type=int, default=512)
@@ -156,6 +281,10 @@ def main() -> None:
     ap.add_argument("--host-bw", type=float, default=None,
                     help="host<->HBM DMA bandwidth in GB/s (simulator "
                          "only; overrides the hardware spec's PCIe term)")
+    ap.add_argument("--swap-serial", action="store_true",
+                    help="charge swap DMA as a fully serial stall "
+                         "(simulator only; default overlaps it with the "
+                         "iteration's compute)")
     ap.add_argument("--swap-in-budget", type=int, default=None,
                     help="max KV tokens DMA'd back from host per iteration "
                          "(default: unlimited; at least one restore per "

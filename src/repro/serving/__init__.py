@@ -1,4 +1,7 @@
 from repro.serving.engine import Engine
-from repro.serving.metrics import SLOConfig, request_metrics
+from repro.serving.metrics import (SLOConfig, per_class_metrics,
+                                   request_metrics)
+from repro.serving.runtime import EngineExecutor, ServingRuntime, SimExecutor
 
-__all__ = ["Engine", "SLOConfig", "request_metrics"]
+__all__ = ["Engine", "EngineExecutor", "SLOConfig", "ServingRuntime",
+           "SimExecutor", "per_class_metrics", "request_metrics"]

@@ -40,6 +40,8 @@ from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
 from repro.models.config import dtype_bytes
 from repro.models.model import DecoderModel
 from repro.serving.kvcache import PagedKVAllocator
+from repro.serving.runtime import (EngineExecutor, RunResult, ServingRuntime,
+                                   TokenEvent, timestamp_events)
 
 Array = jax.Array
 
@@ -82,6 +84,7 @@ class Engine:
                  swap_in_budget: Optional[int] = None,
                  swap_cost_fn=None,
                  decode_reserve: Optional[int] = None,
+                 class_headroom: Optional[Dict[str, int]] = None,
                  eos_token: Optional[int] = None, gmm_fn=None,
                  moe_dispatch: str = "ragged"):
         """``moe_dispatch`` selects the dropless MoE data path: "ragged"
@@ -100,7 +103,9 @@ class Engine:
         by ``swap_in_budget`` KV tokens per iteration), sized by
         ``host_pages`` (default 4x the device pool).  ``swap_cost_fn``
         prices swap vs recompute per victim for "auto"; without one, auto
-        swaps whenever the victim is swappable."""
+        swaps whenever the victim is swappable.  ``class_headroom``
+        reserves admission pages per SLO class (see
+        core.base.Scheduler.attach_kv)."""
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -130,7 +135,8 @@ class Engine:
                                  preemption=preemption,
                                  mode=preemption_mode,
                                  swap_in_budget=swap_in_budget,
-                                 swap_cost_fn=swap_cost_fn)
+                                 swap_cost_fn=swap_cost_fn,
+                                 class_headroom=class_headroom)
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_token = eos_token
@@ -156,6 +162,7 @@ class Engine:
 
         # metrics
         self.iteration = 0
+        self._step_events: List[TokenEvent] = []
         self.n_preempted = 0
         self.n_swapped_out = 0
         self.n_swapped_in = 0
@@ -172,7 +179,8 @@ class Engine:
     # ------------------------------------------------------------------ API
 
     def submit(self, prompt_tokens, max_new_tokens: int,
-               enc_frames=None) -> int:
+               enc_frames=None, *, slo_class: str = "interactive",
+               arrival_time: Optional[float] = None) -> int:
         rid = self._next_id
         self._next_id += 1
         prompt = np.asarray(prompt_tokens, np.int32)
@@ -184,7 +192,9 @@ class Engine:
                 f"{max_new_tokens} exceeds max_len {self.max_len}")
         req = Request(req_id=rid, prompt_len=len(prompt),
                       max_new_tokens=max_new_tokens,
-                      arrival_time=float(self.iteration),
+                      arrival_time=float(self.iteration)
+                      if arrival_time is None else arrival_time,
+                      slo_class=slo_class,
                       prompt_tokens=prompt)
         self.requests[rid] = req
         self.prompts[rid] = prompt
@@ -194,11 +204,13 @@ class Engine:
         self.scheduler.submit(req)
         return rid
 
-    def run(self, max_iterations: int = 10_000) -> None:
-        while self.scheduler.has_work():
-            if self.iteration >= max_iterations:
-                raise RuntimeError("engine did not drain; scheduler stuck?")
-            self.step()
+    def run(self, max_iterations: int = 10_000) -> "RunResult":
+        """Closed-loop drain of everything already submitted, through the
+        shared ServingRuntime loop (timestamps are iteration-indexed, as
+        they always were).  For open-loop timed-trace replay build a
+        ``ServingRuntime(EngineExecutor(engine))`` and pass the trace."""
+        runtime = ServingRuntime(EngineExecutor(self), clock="iteration")
+        return runtime.run((), max_iterations=max_iterations)
 
     # -------------------------------------------------------------- jit fns
 
@@ -261,7 +273,22 @@ class Engine:
     # -------------------------------------------------------------- stepping
 
     def step(self) -> IterationPlan:
+        """Legacy self-driving step (plan + execute + iteration-clock
+        timestamps via the runtime's shared rule). The serving loop —
+        arrivals, clocks, streaming — lives in serving/runtime.py; this
+        remains for tests and tools that drive iterations by hand."""
         plan = self.scheduler.next_plan(now=float(self.iteration))
+        events = self.execute_plan(plan)
+        # execute_plan advanced self.iteration: tokens visible at the
+        # new count, exactly the runtime's iteration-clock t_end
+        timestamp_events(self.scheduler, events, float(self.iteration))
+        return plan
+
+    def execute_plan(self, plan: IterationPlan) -> List[TokenEvent]:
+        """Execute one scheduler-produced plan against the real model and
+        return the tokens it emitted (consumed by the ServingRuntime for
+        timestamping and streaming callbacks)."""
+        self._step_events: List[TokenEvent] = []
         block_expert_union = np.zeros(
             (self.model.n_blocks, max(self.cfg.moe.n_experts, 1)), bool)
 
@@ -303,7 +330,7 @@ class Engine:
             "n_swapped_in": len(plan.swapped_in_ids),
         })
         self.iteration += 1
-        return plan
+        return self._step_events
 
     # -------------------------------------------------------------- helpers
 
@@ -448,15 +475,11 @@ class Engine:
         return np.asarray(counts)
 
     def _record_token(self, rid: int, tok: int, *, first: bool) -> None:
-        req = self.requests[rid]
-        now = float(self.iteration + 1)   # token visible at iteration end
+        """Append the token to the request's output and report it as an
+        event.  TIMESTAMPS are the ServingRuntime's job (one loop, one
+        clock) — the engine only knows WHAT was emitted, not when."""
         self.outputs[rid].append(tok)
-        if first and req.first_token_time is None:
-            req.first_token_time = now
-        else:
-            # the "first token" of a recompute epoch is a CONTINUATION
-            # token — TTFT is pinned to the original first emission
-            req.token_times.append(now)
+        self._step_events.append(TokenEvent(rid, tok, first=first))
 
     def _maybe_finish(self, rid: int, tok: int,
                       after_first: bool = False) -> None:
@@ -465,7 +488,6 @@ class Engine:
         if eos and req.state != RequestState.DONE:
             self.scheduler.finish(rid)
         if req.state == RequestState.DONE:
-            req.finish_time = float(self.iteration + 1)
             slot = self._slot_of.pop(rid)
             self._free_slots.append(slot)
             self.decoding[slot] = False

@@ -107,16 +107,20 @@ class PagedKVAllocator:
 
     # -- admission queries ---------------------------------------------------
 
-    def can_admit(self, n_tokens: int, stash_tokens: int = 0) -> bool:
+    def can_admit(self, n_tokens: int, stash_tokens: int = 0,
+                  headroom_pages: int = 0) -> bool:
         """True iff a reservation for ``n_tokens`` of KV plus the stash
-        charge fits the pool RIGHT NOW."""
+        charge fits the pool RIGHT NOW, leaving ``headroom_pages`` free
+        (the scheduler's per-SLO-class admission reserve)."""
         need = self.pages_for(n_tokens) + self.stash_pages_for(stash_tokens)
-        return need <= len(self._free)
+        return need + headroom_pages <= len(self._free)
 
-    def fits_pool(self, n_tokens: int, stash_tokens: int = 0) -> bool:
-        """True iff the request could EVER fit (empty pool)."""
+    def fits_pool(self, n_tokens: int, stash_tokens: int = 0,
+                  headroom_pages: int = 0) -> bool:
+        """True iff the request could EVER fit (empty pool minus the
+        caller's headroom reserve)."""
         need = self.pages_for(n_tokens) + self.stash_pages_for(stash_tokens)
-        return need <= self.n_pages
+        return need + headroom_pages <= self.n_pages
 
     # -- request lifecycle ---------------------------------------------------
 

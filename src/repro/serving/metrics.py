@@ -1,23 +1,32 @@
 """Serving metrics: TTFT / TBT statistics, per-request SLO attainment
 (paper §5.1: a request attains the SLO iff its TTFT meets the TTFT SLO AND
-every TBT meets the TBT SLO), energy-per-token accounting, and the paged-KV
+every TBT meets the TBT SLO), per-SLO-class breakdowns for the
+multi-tenant sweeps, energy-per-token accounting, and the paged-KV
 memory-subsystem signals (queueing delay under memory-gated admission,
 preemption rate, page high-water)."""
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence, Union
 
 from repro.core.plan import Request
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile (numpy's default "linear" method).
+    The old nearest-rank-via-round variant biased p99 on small samples —
+    on 10 points it returned the maximum for every q above ~94."""
     if not xs:
         return float("nan")
     s = sorted(xs)
-    idx = min(int(round(q / 100.0 * (len(s) - 1))), len(s) - 1)
-    return s[idx]
+    if len(s) == 1:
+        return s[0]
+    pos = min(max(q, 0.0), 100.0) / 100.0 * (len(s) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(s) - 1)
+    return s[lo] + (s[hi] - s[lo]) * (pos - lo)
 
 
 @dataclass(frozen=True)
@@ -42,8 +51,12 @@ def request_metrics(requests: Iterable[Request],
     out = {
         "n_requests": float(len(reqs)),
         "ttft_mean": sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+        "ttft_p50": percentile(ttfts, 50),
+        "ttft_p90": percentile(ttfts, 90),
         "ttft_p99": percentile(ttfts, 99),
         "tbt_mean": sum(tbts) / len(tbts) if tbts else float("nan"),
+        "tbt_p50": percentile(tbts, 50),
+        "tbt_p90": percentile(tbts, 90),
         "tbt_p99": percentile(tbts, 99),
     }
     e2e = [r.finish_time - r.arrival_time for r in reqs
@@ -75,4 +88,21 @@ def request_metrics(requests: Iterable[Request],
         b_ok = [all(b <= slo.tbt_slo for b in r.tbts()) for r in reqs]
         out["ttft_attainment"] = sum(t_ok) / len(t_ok) if t_ok else float("nan")
         out["tbt_attainment"] = sum(b_ok) / len(b_ok) if b_ok else float("nan")
+    return out
+
+
+def per_class_metrics(
+        requests: Iterable[Request],
+        slo: Union[SLOConfig, Dict[str, SLOConfig], None] = None,
+) -> Dict[str, Dict[str, float]]:
+    """Split ``request_metrics`` by SLO class (the multi-tenant breakdown:
+    per-class TTFT/TBT/attainment/preemption/swap).  ``slo`` may be one
+    config applied to every class, a per-class dict (classes missing from
+    it get no attainment columns), or None."""
+    reqs = list(requests)
+    out: Dict[str, Dict[str, float]] = {}
+    for cls in sorted({r.slo_class for r in reqs}):
+        cls_slo = slo.get(cls) if isinstance(slo, dict) else slo
+        out[cls] = request_metrics(
+            [r for r in reqs if r.slo_class == cls], cls_slo)
     return out

@@ -1,0 +1,332 @@
+"""The executor-agnostic serving loop (DESIGN.md §Serving runtime).
+
+``ServingRuntime`` owns everything the real-execution engine and the
+discrete-event simulator used to reimplement privately: timed arrival
+injection (open-loop trace replay), idling to the next arrival instead of
+raising when the pool drains, per-iteration stepping via the scheduler's
+``next_plan``, token timestamping (TTFT pinning across recompute epochs),
+preemption/swap accounting, per-token streaming callbacks, and the
+no-progress / iteration-cap guards.  ``Engine.run`` and ``Simulator.run``
+both delegate here, so the two loops cannot drift and the equivalence
+tests compare one loop driving two backends, not two reimplementations.
+
+An ``Executor`` is the backend behind the loop:
+
+  * ``EngineExecutor`` — wraps ``serving.engine.Engine``: plans execute on
+    a REAL jax model, token events carry actual token ids, and the clock
+    is either the iteration index (deterministic replay — the default) or
+    real wall time (``wall=True``: arrivals in seconds, the runtime sleeps
+    through idle gaps — open-loop serving).
+  * ``SimExecutor`` — wraps ``serving.simulator.Simulator``: plans are
+    priced by the analytic cost model, token events carry ``None`` (there
+    is no model), and the clock advances by modeled iteration durations.
+
+Arrival clock semantics: the runtime keeps ONE clock ``t``.  With
+``clock="executor"`` (simulator default, engine wall mode) ``t`` advances
+by each step's modeled/measured duration and arrival times are in the
+executor's time unit (seconds).  With ``clock="iteration"`` (engine
+default) ``t`` advances 1.0 per executed iteration and arrival times are
+iteration indices — identical across backends by construction, which is
+what makes cross-backend trace-replay equivalence exactly testable.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable, List, Optional, Protocol, Sequence
+
+from repro.core.plan import IterationPlan, Request, RequestState
+
+if TYPE_CHECKING:  # typing only — runtime must not import its backends
+    from repro.core.base import Scheduler
+    from repro.serving.traffic import TraceRequest
+
+# on_token(req_id, token_or_None, t) — called once per emitted token, in
+# emission order, timestamped at the end of the iteration that produced it
+TokenCallback = Callable[[int, Optional[int], float], None]
+
+
+@dataclass(frozen=True)
+class TokenEvent:
+    """One token emitted by an executor step. ``token`` is the real id on
+    the engine, None on the simulator. ``first`` marks tokens produced by
+    an emitting prefill slice — the runtime decides whether that is the
+    request's TRUE first token or a recompute-epoch continuation."""
+    req_id: int
+    token: Optional[int]
+    first: bool = False
+
+
+@dataclass
+class StepOutcome:
+    """What one executed iteration reports back to the loop."""
+    duration: float
+    events: List[TokenEvent] = field(default_factory=list)
+
+
+def timestamp_events(sched, events: List[TokenEvent], t_end: float,
+                     on_token: Optional[TokenCallback] = None) -> None:
+    """THE timestamping rule, shared by the runtime loop and the engine's
+    legacy hand-stepping path: tokens become visible at iteration end;
+    the first token of a recompute epoch is a CONTINUATION — TTFT stays
+    pinned to the original first emission; finish times stamp when the
+    scheduler bookkeeping (or an engine-side EOS) has moved the request
+    to DONE."""
+    for ev in events:
+        r = sched.requests[ev.req_id]
+        if ev.first and r.first_token_time is None:
+            r.first_token_time = t_end
+        else:
+            r.token_times.append(t_end)
+        if r.state == RequestState.DONE and r.finish_time is None:
+            r.finish_time = t_end
+        if on_token is not None:
+            on_token(ev.req_id, ev.token, t_end)
+
+
+class Executor(Protocol):
+    """Backend protocol: the runtime never touches jax or the cost model
+    directly — it schedules, clocks and timestamps; the executor runs."""
+    scheduler: "Scheduler"
+
+    def submit(self, tr: "TraceRequest", now: float) -> Request:
+        """Create + submit the request for an arriving TraceRequest."""
+        ...
+
+    def execute(self, plan: IterationPlan, now: float) -> StepOutcome:
+        """Run one iteration plan; return its duration and token events."""
+        ...
+
+    def idle(self, t: float, until: float) -> float:
+        """Advance the executor clock from ``t`` to ``until`` with no work
+        resident (wall executors sleep); returns the new clock value."""
+        ...
+
+    def initial_clock(self) -> float:
+        """Where this run's clock starts.  The engine's iteration clock
+        resumes from its persistent iteration counter so a second run()
+        cannot stamp tokens EARLIER than requests submitted after the
+        first (TTFT stays positive across incremental submit/run
+        cycles); fresh backends start at 0."""
+        ...
+
+
+@dataclass
+class RunResult:
+    """Backend-agnostic outcome of one ``ServingRuntime.run``. Executors
+    layer their own accounting on top (see ``simulator.SimResult``)."""
+    requests: List[Request] = field(default_factory=list)
+    n_iterations: int = 0
+    clock: float = 0.0             # final clock value (sim_time / iterations)
+    decode_batch_sizes: List[int] = field(default_factory=list)
+    n_preemptions: int = 0
+    recompute_tokens: int = 0      # prefill tokens re-run due to preemption
+    n_swap_outs: int = 0
+    n_swap_ins: int = 0
+
+
+class ServingRuntime:
+    def __init__(self, executor: Executor, *,
+                 on_token: Optional[TokenCallback] = None,
+                 clock: str = "executor",
+                 record_plans: bool = False):
+        if clock not in ("executor", "iteration"):
+            raise ValueError(f"unknown clock {clock!r}")
+        self.executor = executor
+        self.on_token = on_token
+        self.clock = clock
+        self.record_plans = record_plans
+        self.plans: List[IterationPlan] = []
+
+    def run(self, trace: Sequence["TraceRequest"] = (),
+            max_iterations: int = 10_000) -> RunResult:
+        """Replay ``trace`` open-loop (requests injected at their arrival
+        times; the loop idles to the next arrival when the pool drains)
+        and drain everything already submitted to the scheduler.  An empty
+        trace is the closed-loop drain the engine's legacy ``run`` was."""
+        x = self.executor
+        sched = x.scheduler
+        res = RunResult(
+            # closed-loop requests submitted before run() — id order
+            requests=[sched.requests[k] for k in sorted(sched.requests)])
+        pending = sorted(trace, key=lambda tr: tr.arrival_time)
+        i_arr = 0
+        t = float(x.initial_clock())
+
+        def inject(now: float) -> None:
+            nonlocal i_arr
+            while i_arr < len(pending) \
+                    and pending[i_arr].arrival_time <= now:
+                res.requests.append(x.submit(pending[i_arr], now))
+                i_arr += 1
+
+        while i_arr < len(pending) or sched.has_work():
+            inject(t)
+            if not sched.has_work():
+                # open-loop idle: fast-forward (or, on a wall clock, sleep)
+                # to the next arrival instead of raising "did not drain"
+                nxt = pending[i_arr].arrival_time
+                t = nxt if self.clock == "iteration" else x.idle(t, nxt)
+                inject(t)
+            if res.n_iterations >= max_iterations:
+                raise RuntimeError(
+                    f"did not drain within {max_iterations} iterations; "
+                    "scheduler stuck?")
+            plan = sched.next_plan(now=t)
+            if self.record_plans:
+                self.plans.append(plan)
+            res.n_preemptions += len(plan.preempted_ids)
+            res.recompute_tokens += sum(
+                sched.requests[rid].prompt_len
+                for rid in plan.preempted_ids)
+            res.n_swap_outs += len(plan.swapped_out_ids)
+            res.n_swap_ins += len(plan.swapped_in_ids)
+            if plan.empty:
+                if i_arr < len(pending):
+                    # nothing runnable yet — fast-forward to the arrival
+                    # that will create work (t never moves backwards)
+                    t = max(t, pending[i_arr].arrival_time)
+                    continue
+                # no runnable work, no future arrivals: advancing neither
+                # t nor the iteration count would spin forever
+                raise RuntimeError(
+                    f"scheduler {sched.name!r} made no progress: "
+                    f"{len(sched.waiting)} waiting, {sched.n_active} "
+                    "active, no pending arrivals")
+            outcome = x.execute(plan, t)
+            res.n_iterations += 1
+            res.decode_batch_sizes.append(len(plan.decode_ids))
+            t_end = t + (1.0 if self.clock == "iteration"
+                         else outcome.duration)
+            timestamp_events(sched, outcome.events, t_end, self.on_token)
+            t = t_end
+
+        res.clock = t
+        return res
+
+
+class EngineExecutor:
+    """Real-execution backend: wraps ``serving.engine.Engine``.
+
+    ``wall=False`` (default): each iteration advances the clock by 1.0 —
+    pair with ``ServingRuntime(clock="iteration")`` for deterministic
+    replay where trace arrival times are iteration indices.  ``wall=True``:
+    durations are measured wall seconds and idle really sleeps — pair with
+    ``clock="executor"`` for open-loop serving against wall-clock arrival
+    times."""
+
+    def __init__(self, engine, *, wall: bool = False):
+        self.engine = engine
+        self.scheduler = engine.scheduler
+        self.wall = wall
+        self._t0 = time.monotonic()      # re-anchored by initial_clock()
+
+    def submit(self, tr: "TraceRequest", now: float) -> Request:
+        if tr.prompt_tokens is None:
+            raise ValueError(
+                f"trace request arriving at t={tr.arrival_time} carries no "
+                "prompt_tokens; real-engine replay needs token ids — see "
+                "traffic.attach_prompt_tokens")
+        rid = self.engine.submit(list(tr.prompt_tokens), tr.output_len,
+                                 slo_class=tr.slo_class,
+                                 arrival_time=tr.arrival_time)
+        return self.engine.requests[rid]
+
+    def execute(self, plan: IterationPlan, now: float) -> StepOutcome:
+        events = self.engine.execute_plan(plan)
+        # wall durations are ABSOLUTE elapsed minus the loop clock, so
+        # scheduling/streaming overhead between steps is charged too and
+        # the pacing cannot drift behind the trace's real-second schedule
+        dur = max(0.0, time.monotonic() - self._t0 - now) if self.wall \
+            else 1.0
+        return StepOutcome(duration=dur, events=events)
+
+    def idle(self, t: float, until: float) -> float:
+        if not self.wall:
+            return until
+        # wall clock: wait until the ABSOLUTE arrival deadline (chunked
+        # so huge gaps in a mis-scaled trace stay interruptible); if the
+        # loop is already past it, no sleep happens at all
+        deadline = self._t0 + until
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            time.sleep(min(remaining, 0.05))
+        return time.monotonic() - self._t0
+
+    def initial_clock(self) -> float:
+        # the iteration clock resumes from the engine's persistent
+        # counter, matching requests' iteration-stamped arrival times
+        # across incremental submit/run cycles; wall runs re-anchor to
+        # now (arrival times are seconds since run start)
+        if self.wall:
+            self._t0 = time.monotonic()
+            return 0.0
+        return float(self.engine.iteration)
+
+
+class SimExecutor:
+    """Analytic backend: wraps ``serving.simulator.Simulator``. Iteration
+    durations come from the cost model; swap DMA is charged as overlappable
+    with the iteration's compute (``stall = max(0, dma - compute)``) unless
+    the simulator was built with ``swap_overlap=False`` (the PR-3 serial
+    model, kept for comparison).  Accumulates the energy/traffic totals
+    that ``Simulator.run`` folds into its ``SimResult``."""
+
+    def __init__(self, sim):
+        self.sim = sim
+        self.scheduler = sim.scheduler
+        self._next_id = 0
+        self.total_energy = 0.0
+        self.total_expert_bytes = 0.0
+        self.total_hbm_bytes = 0.0
+        self.total_flops = 0.0
+        self.swap_bytes = 0.0
+        self.swap_dma_time = 0.0       # host-link busy time, both directions
+        self.swap_stall_time = 0.0     # the part compute could not hide
+
+    def submit(self, tr: "TraceRequest", now: float) -> Request:
+        req = Request(req_id=self._next_id, prompt_len=tr.prompt_len,
+                      max_new_tokens=tr.output_len,
+                      arrival_time=tr.arrival_time,
+                      slo_class=tr.slo_class)
+        self._next_id += 1
+        self.scheduler.submit(req)
+        return req
+
+    def execute(self, plan: IterationPlan, now: float) -> StepOutcome:
+        sim = self.sim
+        dma = 0.0
+        if plan.swapped_out_ids or plan.swapped_in_ids:
+            # swap DMA: lengths survive the swap so both directions price
+            # the victim's true filled KV
+            moved = sum(sim.kv.length(rid) for rid in
+                        plan.swapped_out_ids + plan.swapped_in_ids)
+            xfer = sim.cost.swap_transfer(moved)
+            dma = xfer["duration"]
+            self.swap_dma_time += dma
+            self.swap_bytes += xfer["bytes"]
+            self.total_energy += xfer["energy"]
+        cost = sim.cost.iteration_cost(plan, self.scheduler.requests)
+        self.total_energy += cost["energy"]
+        self.total_expert_bytes += cost["expert_bytes"]
+        self.total_hbm_bytes += cost["hbm_bytes"]
+        self.total_flops += cost["flops"]
+        # the DMA engines run asynchronously to compute: only the excess
+        # past the iteration's compute stalls the clock (serial flag
+        # charges the whole transfer, the PR-3 model)
+        stall = dma if not sim.swap_overlap \
+            else max(0.0, dma - cost["duration"])
+        self.swap_stall_time += stall
+        events = [TokenEvent(sl.req_id, None, first=True)
+                  for sl in plan.prefill if sl.emits_first_token]
+        events += [TokenEvent(rid, None) for rid in plan.decode_ids]
+        return StepOutcome(duration=cost["duration"] + stall, events=events)
+
+    def idle(self, t: float, until: float) -> float:
+        return until
+
+    def initial_clock(self) -> float:
+        return 0.0

@@ -3,8 +3,13 @@
 Drives the SAME scheduler classes as the real-execution engine through the
 analytic cost model, producing paper-scale latency/energy numbers on CPU:
 iterations are events whose durations come from CostModel; arrivals are an
-exogenous Poisson trace. This is the apparatus behind the Figure 3/4 SLO
-sweeps, Tables 2/6/8 and Figure 5.
+exogenous trace (Poisson or bursty). This is the apparatus behind the
+Figure 3/4 SLO sweeps, Tables 2/6/8 and Figure 5.
+
+The serving loop itself — arrival injection, stepping, timestamping —
+is the shared ``serving.runtime.ServingRuntime`` (the same loop that
+drives the real engine); this module only prices iterations and
+aggregates the analytic accounting into a ``SimResult``.
 
 The functional-correctness of the schedulers is established separately by
 tests/test_engine_equivalence.py on real models; here only TIME and TRAFFIC
@@ -14,13 +19,14 @@ are modelled.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.base import Scheduler, make_scheduler
-from repro.core.plan import Request, RequestState
+from repro.core.plan import Request
 from repro.models.config import ModelConfig
 from repro.serving.cost_model import CostModel, HardwareSpec, kv_pool_pages
 from repro.serving.kvcache import PagedKVAllocator
+from repro.serving.runtime import ServingRuntime, SimExecutor
 from repro.serving.traffic import TraceRequest
 
 
@@ -43,7 +49,10 @@ class SimResult:
     n_swap_outs: int = 0
     n_swap_ins: int = 0
     swap_bytes: float = 0.0        # host-link traffic, both directions
-    swap_stall_time: float = 0.0   # time the iteration clock spent on DMA
+    swap_dma_time: float = 0.0     # host-link busy time, both directions
+    swap_stall_time: float = 0.0   # DMA time the iteration compute could
+    #                                not hide (== swap_dma_time when the
+    #                                serial model is selected)
     host_pages_high_water: int = 0
     n_host_pages: int = 0
 
@@ -73,7 +82,10 @@ class Simulator:
                  preemption_mode: str = "recompute",
                  host_pages: Optional[int] = None,
                  swap_in_budget: Optional[int] = None,
-                 decode_reserve: Optional[int] = None, **sched_kw):
+                 decode_reserve: Optional[int] = None,
+                 swap_overlap: bool = True,
+                 class_headroom: Optional[Dict[str, int]] = None,
+                 **sched_kw):
         """The simulator shares the scheduler's ``PagedKVAllocator`` so page
         occupancy, queueing delay, preemption counts and recompute/swap cost
         are first-class outputs of the paper-scale sweeps. ``n_pages``
@@ -83,7 +95,11 @@ class Simulator:
         "swap" | "auto" — auto prices each victim's DMA round-trip against
         its recompute prefill on this hardware), ``host_pages`` sizes the
         host pool (default 4x the device pool) and ``swap_in_budget`` caps
-        DMA-back KV tokens per iteration."""
+        DMA-back KV tokens per iteration.  ``swap_overlap`` charges swap
+        DMA as overlappable with the iteration's compute (stall =
+        max(0, dma - compute)); False restores the PR-3 fully-serial stall
+        for comparison.  ``class_headroom`` reserves admission pages per
+        SLO class (see core.base.Scheduler.attach_kv)."""
         self.cfg = cfg
         if isinstance(scheduler, str):
             scheduler = make_scheduler(scheduler, cfg.n_layers, **sched_kw)
@@ -104,97 +120,39 @@ class Simulator:
                                  preemption=preemption,
                                  mode=preemption_mode,
                                  swap_in_budget=swap_in_budget,
-                                 swap_cost_fn=swap_cost_fn)
+                                 swap_cost_fn=swap_cost_fn,
+                                 class_headroom=class_headroom)
+        self.swap_overlap = swap_overlap
 
     def run(self, trace: List[TraceRequest],
-            max_iterations: int = 2_000_000) -> SimResult:
-        sched = self.scheduler
-        res = SimResult(requests=[])
-        pending = sorted(trace, key=lambda t: t.arrival_time)
-        next_id = 0
-        t = 0.0
-        i_arr = 0
-
-        def admit_arrivals(now: float):
-            nonlocal i_arr, next_id
-            while i_arr < len(pending) and pending[i_arr].arrival_time <= now:
-                tr = pending[i_arr]
-                req = Request(req_id=next_id, prompt_len=tr.prompt_len,
-                              max_new_tokens=tr.output_len,
-                              arrival_time=tr.arrival_time)
-                res.requests.append(req)
-                sched.submit(req)
-                next_id += 1
-                i_arr += 1
-
-        while i_arr < len(pending) or sched.has_work():
-            admit_arrivals(t)
-            if not sched.has_work():
-                # idle until the next arrival
-                t = pending[i_arr].arrival_time
-                admit_arrivals(t)
-            plan = sched.next_plan(now=t)
-            res.n_preemptions += len(plan.preempted_ids)
-            res.recompute_tokens += sum(
-                sched.requests[rid].prompt_len for rid in plan.preempted_ids)
-            # swap DMA: the host link stalls the iteration clock and burns
-            # host-path energy; lengths survive the swap so both directions
-            # price the victim's true filled KV
-            if plan.swapped_out_ids or plan.swapped_in_ids:
-                moved = sum(self.kv.length(rid) for rid in
-                            plan.swapped_out_ids + plan.swapped_in_ids)
-                xfer = self.cost.swap_transfer(moved)
-                t += xfer["duration"]
-                res.swap_stall_time += xfer["duration"]
-                res.swap_bytes += xfer["bytes"]
-                res.total_energy += xfer["energy"]
-                res.n_swap_outs += len(plan.swapped_out_ids)
-                res.n_swap_ins += len(plan.swapped_in_ids)
-            if plan.empty:
-                if i_arr < len(pending):
-                    # nothing runnable yet — fast-forward to the arrival
-                    # that will create work (t never moves backwards)
-                    t = max(t, pending[i_arr].arrival_time)
-                    continue
-                # no runnable work, no future arrivals: advancing neither t
-                # nor the iteration count would spin forever
-                raise RuntimeError(
-                    f"scheduler {sched.name!r} made no progress: "
-                    f"{len(sched.waiting)} waiting, {sched.n_active} active, "
-                    "no pending arrivals")
-            cost = self.cost.iteration_cost(plan, sched.requests)
-            t += cost["duration"]
-            res.total_energy += cost["energy"]
-            res.total_expert_bytes += cost["expert_bytes"]
-            res.total_hbm_bytes += cost["hbm_bytes"]
-            res.total_flops += cost["flops"]
-            res.n_iterations += 1
-            res.decode_batch_sizes.append(len(plan.decode_ids))
-
-            # timestamp tokens at iteration end
-            for sl in plan.prefill:
-                if sl.emits_first_token:
-                    r = sched.requests[sl.req_id]
-                    if r.first_token_time is None:
-                        r.first_token_time = t
-                    else:
-                        # recompute epoch: the emitting slice produces a
-                        # continuation token, not a second "first token"
-                        r.token_times.append(t)
-                    if r.state == RequestState.DONE:
-                        r.finish_time = t
-            for rid in plan.decode_ids:
-                r = sched.requests[rid]
-                r.token_times.append(t)
-                if r.state == RequestState.DONE and r.finish_time is None:
-                    r.finish_time = t
-
-            if res.n_iterations >= max_iterations:
-                raise RuntimeError("simulation iteration cap hit")
-
-        res.sim_time = t
-        res.pages_high_water = self.kv.pages_high_water
-        res.n_pool_pages = self.kv.n_pages
-        res.host_pages_high_water = self.kv.host_pages_high_water
-        res.n_host_pages = self.kv.n_host_pages
-        return res
+            max_iterations: int = 2_000_000, *,
+            on_token=None, clock: str = "executor") -> SimResult:
+        """Replay ``trace`` through the shared ServingRuntime loop with the
+        analytic backend.  ``on_token``/``clock`` pass straight through to
+        the runtime (tokens stream as ``None`` — the simulator carries no
+        model; ``clock="iteration"`` interprets arrival times as iteration
+        indices for deterministic cross-backend replay)."""
+        ex = SimExecutor(self)
+        runtime = ServingRuntime(ex, on_token=on_token, clock=clock)
+        rr = runtime.run(trace, max_iterations=max_iterations)
+        return SimResult(
+            requests=rr.requests,
+            total_energy=ex.total_energy,
+            total_expert_bytes=ex.total_expert_bytes,
+            total_hbm_bytes=ex.total_hbm_bytes,
+            total_flops=ex.total_flops,
+            n_iterations=rr.n_iterations,
+            sim_time=rr.clock,
+            decode_batch_sizes=rr.decode_batch_sizes,
+            n_preemptions=rr.n_preemptions,
+            recompute_tokens=rr.recompute_tokens,
+            pages_high_water=self.kv.pages_high_water,
+            n_pool_pages=self.kv.n_pages,
+            n_swap_outs=rr.n_swap_outs,
+            n_swap_ins=rr.n_swap_ins,
+            swap_bytes=ex.swap_bytes,
+            swap_dma_time=ex.swap_dma_time,
+            swap_stall_time=ex.swap_stall_time,
+            host_pages_high_water=self.kv.host_pages_high_water,
+            n_host_pages=self.kv.n_host_pages,
+        )

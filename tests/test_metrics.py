@@ -52,3 +52,49 @@ def test_percentile_bounds(xs):
 def test_percentile_empty_nan():
     import math
     assert math.isnan(percentile([], 99))
+
+
+def test_percentile_linear_interpolation():
+    """Satellite: proper linear-interpolation percentiles (numpy's
+    default), not nearest-rank-via-round — which returned the MAXIMUM for
+    p99 on any sample smaller than ~50 points."""
+    import numpy as np
+    assert percentile([0.0, 10.0], 50) == pytest.approx(5.0)
+    assert percentile([0.0, 10.0], 99) == pytest.approx(9.9)
+    xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0]
+    # 10 samples: the old round() rule mapped p99 -> the max; linear
+    # interpolation lands strictly below it
+    assert percentile(xs, 99) == pytest.approx(float(np.percentile(xs, 99)))
+    assert percentile(xs, 99) < 10.0
+    for q in (0, 10, 25, 50, 90, 99, 100):
+        assert percentile(xs, q) == pytest.approx(
+            float(np.percentile(xs, q)))
+    assert percentile([7.0], 99) == 7.0
+
+
+def test_request_metrics_p50_p90_columns():
+    reqs = [_req(0.0, float(i + 1), [0.1 * (i + 1)]) for i in range(10)]
+    m = request_metrics(reqs)
+    assert m["ttft_p50"] == pytest.approx(5.5)
+    assert m["ttft_p50"] <= m["ttft_p90"] <= m["ttft_p99"]
+    assert m["tbt_p50"] <= m["tbt_p90"] <= m["tbt_p99"]
+
+
+def test_per_class_metrics_split_and_slos():
+    from repro.serving.metrics import per_class_metrics
+    fast = _req(0.0, 1.0, [0.1, 0.1])
+    slow = _req(0.0, 9.0, [0.3, 0.3])
+    fast.slo_class = "interactive"
+    slow.slo_class = "batch"
+    per = per_class_metrics(
+        [fast, slow],
+        {"interactive": SLOConfig(2.0, 0.15), "batch": SLOConfig(10.0, 0.2)})
+    assert set(per) == {"interactive", "batch"}
+    assert per["interactive"]["n_requests"] == 1
+    assert per["interactive"]["slo_attainment"] == 1.0
+    assert per["batch"]["slo_attainment"] == 0.0      # TBT 0.3 > 0.2
+    assert per["interactive"]["ttft_mean"] == pytest.approx(1.0)
+    assert per["batch"]["ttft_mean"] == pytest.approx(9.0)
+    # single shared SLOConfig applies to every class
+    per2 = per_class_metrics([fast, slow], SLOConfig(10.0, 0.5))
+    assert per2["batch"]["slo_attainment"] == 1.0

@@ -1,0 +1,242 @@
+"""The unified serving loop (serving/runtime.py): open-loop trace replay
+on the REAL engine, cross-backend equivalence (one loop, two executors),
+streaming callbacks, and arrival-clock semantics.
+
+The acceptance bar: Engine and Simulator both execute timed traces through
+the SAME ServingRuntime loop.  Under the deterministic iteration clock the
+two backends see identical submit/next_plan sequences, so their full plan
+streams (admissions, slices, decode batches, evictions, swaps) must be
+IDENTICAL — and the engine's token values are invariant to scheduling, so
+per-request tokens under replay equal an unconstrained closed-loop run.
+Together that is token identity across the two backends: the simulator
+emits the engine's exact token schedule, the engine fills in the values.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.core.base import make_scheduler
+from repro.models.model import DecoderModel
+from repro.serving.engine import Engine
+from repro.serving.cost_model import H100X2
+from repro.serving.runtime import (EngineExecutor, ServingRuntime,
+                                   SimExecutor)
+from repro.serving.simulator import Simulator
+from repro.serving.traffic import TraceRequest
+
+
+def _mixed_trace(n=32, seed=0, spread=40):
+    """Multi-class oversubscribed trace with iteration-indexed arrivals
+    and real token ids (interactive/batch interleaved)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.integers(0, spread, n)).astype(float)
+    trace = []
+    for i, t in enumerate(arrivals):
+        n_tok = int(rng.integers(4, 10))
+        trace.append(TraceRequest(
+            arrival_time=float(t), prompt_len=n_tok,
+            output_len=int(rng.integers(8, 13)),
+            slo_class="batch" if i % 3 == 0 else "interactive",
+            prompt_tokens=tuple(int(x)
+                                for x in rng.integers(1, 200, n_tok))))
+    return trace
+
+
+def _make_engine(cfg, sched_name, **eng_kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler(sched_name, model.n_blocks, n_slots=4,
+                           quantum=8, token_budget=16)
+    return Engine(model, params, sched, n_slots=4, max_len=64, **eng_kw)
+
+
+def _plan_key(plan):
+    return (tuple(plan.admitted_ids), tuple(plan.decode_ids),
+            tuple((s.req_id, s.token_start, s.token_end, s.block_start,
+                   s.block_end, s.emits_first_token) for s in plan.prefill),
+            tuple(plan.preempted_ids), tuple(plan.swapped_out_ids),
+            tuple(plan.swapped_in_ids))
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_trace_replay_equivalence_engine_vs_sim(mode):
+    """Same multi-class oversubscribed trace, same scheduler, iteration
+    clock: the engine and simulator backends must produce IDENTICAL plan
+    streams and per-request timelines, and the engine's replayed tokens
+    must equal an unconstrained closed-loop run."""
+    cfg = tiny_dense()
+    trace = _mixed_trace()
+    kw = dict(page_size=4, decode_reserve=1, preemption_mode=mode)
+
+    # engine backend, oversubscribed (~3 residents in 16 pages)
+    eng = _make_engine(cfg, "layered", pages=16, **kw)
+    eng_rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                            record_plans=True)
+    eng_res = eng_rt.run(trace, max_iterations=100_000)
+
+    # simulator backend: same scheduler type/params, same pool
+    sim_sched = make_scheduler("layered", eng.model.n_blocks, n_slots=4,
+                               quantum=8, token_budget=16)
+    sim = Simulator(cfg, sim_sched, H100X2, n_pages=16, **kw)
+    sim_rt = ServingRuntime(SimExecutor(sim), clock="iteration",
+                            record_plans=True)
+    sim_res = sim_rt.run(trace, max_iterations=100_000)
+
+    # one loop, two backends: the full scheduling history agrees
+    assert [_plan_key(p) for p in eng_rt.plans] \
+        == [_plan_key(p) for p in sim_rt.plans]
+    assert eng_res.n_iterations == sim_res.n_iterations
+    assert eng_res.n_preemptions == sim_res.n_preemptions
+    assert eng_res.n_swap_outs == sim_res.n_swap_outs
+    if mode == "swap":
+        assert eng_res.n_swap_outs > 0, "scenario must actually swap"
+    else:
+        assert eng_res.n_preemptions > 0, "scenario must actually preempt"
+
+    # identical per-request timelines (classes, arrivals, every timestamp)
+    for er, sr in zip(eng_res.requests, sim_res.requests):
+        assert er.req_id == sr.req_id
+        assert er.slo_class == sr.slo_class
+        assert er.arrival_time == sr.arrival_time
+        assert er.admit_time == sr.admit_time
+        assert er.first_token_time == sr.first_token_time
+        assert er.token_times == sr.token_times
+        assert er.finish_time == sr.finish_time
+        assert er.n_generated == sr.n_generated
+
+    # token identity: replay under pressure == unconstrained closed loop
+    free = _make_engine(cfg, "layered")
+    for tr in trace:
+        free.submit(list(tr.prompt_tokens), tr.output_len,
+                    slo_class=tr.slo_class)
+    free.run(max_iterations=100_000)
+    assert eng.outputs == free.outputs, \
+        "timed replay changed generated tokens"
+    assert eng.alloc.pages_in_use() == 0
+
+
+def test_engine_open_loop_idles_to_next_arrival():
+    """A huge arrival gap must fast-forward the clock, not spin iterations
+    or raise 'did not drain' (the closed-loop harness's failure mode)."""
+    cfg = tiny_dense()
+    eng = _make_engine(cfg, "layered")
+    trace = [TraceRequest(0.0, 5, 4, prompt_tokens=(1, 2, 3, 4, 5)),
+             TraceRequest(1000.0, 5, 4, prompt_tokens=(9, 8, 7, 6, 5))]
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration")
+    res = rt.run(trace, max_iterations=500)   # << 1000: no spin allowed
+    assert res.clock >= 1000.0
+    assert res.n_iterations < 500
+    late = res.requests[1]
+    assert late.arrival_time == 1000.0
+    assert late.admit_time >= 1000.0
+    assert late.first_token_time > 1000.0
+    assert all(len(eng.outputs[r.req_id]) == 4 for r in res.requests)
+
+
+def test_engine_second_run_keeps_clock_monotone():
+    """The iteration clock resumes from the engine's persistent counter:
+    a request submitted AFTER a first run() (arrival stamped at the
+    current iteration) must get a positive TTFT from the second run(),
+    not timestamps from a clock reset to zero."""
+    cfg = tiny_dense()
+    eng = _make_engine(cfg, "layered")
+    r0 = eng.submit([1, 2, 3, 4], 4)
+    eng.run()
+    it = eng.iteration
+    assert it > 0
+    r1 = eng.submit([5, 6, 7, 8], 4)
+    assert eng.requests[r1].arrival_time == float(it)
+    eng.run()
+    req = eng.requests[r1]
+    assert req.first_token_time > req.arrival_time
+    assert req.ttft() > 0
+    assert req.queue_delay() >= 0
+    assert eng.requests[r0].finish_time < req.first_token_time
+
+
+def test_engine_manual_step_still_timestamps():
+    """Hand-driving eng.step() (no runtime) must stamp the same
+    iteration-clock timestamps the loop would — external drivers that
+    call request_metrics afterwards keep working."""
+    cfg = tiny_dense()
+    eng = _make_engine(cfg, "layered")
+    rid = eng.submit([1, 2, 3, 4, 5], 4)
+    while eng.scheduler.has_work():
+        eng.step()
+    req = eng.requests[rid]
+    assert req.first_token_time is not None
+    assert len(req.token_times) == 3
+    assert req.finish_time == req.token_times[-1]
+    # identical to what a runtime-driven run stamps
+    ref = _make_engine(cfg, "layered")
+    ref_rid = ref.submit([1, 2, 3, 4, 5], 4)
+    ref.run()
+    assert req.first_token_time == ref.requests[ref_rid].first_token_time
+    assert req.token_times == ref.requests[ref_rid].token_times
+
+
+def test_engine_replay_requires_prompt_tokens():
+    cfg = tiny_dense()
+    eng = _make_engine(cfg, "layered")
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration")
+    with pytest.raises(ValueError, match="prompt_tokens"):
+        rt.run([TraceRequest(0.0, 4, 4)])
+
+
+def test_streaming_callback_ordering():
+    """on_token streams every generated token: per-request order matches
+    the final outputs, timestamps are nondecreasing iteration ends, and
+    the first streamed token of a request carries its TTFT timestamp."""
+    cfg = tiny_dense()
+    eng = _make_engine(cfg, "layered", pages=16, page_size=4,
+                       decode_reserve=1)   # pressure: restarts happen too
+    events = []
+    rt = ServingRuntime(EngineExecutor(eng),
+                        on_token=lambda rid, tok, t:
+                        events.append((rid, tok, t)),
+                        clock="iteration")
+    trace = _mixed_trace(n=12, seed=3, spread=10)
+    rt.run(trace, max_iterations=100_000)
+
+    ts = [t for _, _, t in events]
+    assert ts == sorted(ts)                      # emission order
+    streamed = {}
+    first_t = {}
+    for rid, tok, t in events:
+        assert tok is not None                   # engine streams real ids
+        streamed.setdefault(rid, []).append(tok)
+        first_t.setdefault(rid, t)
+    assert streamed == eng.outputs               # complete, in order
+    for rid, t in first_t.items():
+        assert eng.requests[rid].first_token_time == t
+
+
+def test_sim_streaming_tokens_are_placeholders():
+    cfg = tiny_dense()
+    events = []
+    sim = Simulator(cfg, "layered", H100X2, n_slots=8, quantum=16,
+                    token_budget=64)
+    trace = [TraceRequest(i * 0.5, 8, 4) for i in range(6)]
+    res = sim.run(trace, on_token=lambda rid, tok, t:
+                  events.append((rid, tok, t)))
+    assert len(events) == sum(r.n_generated for r in res.requests)
+    assert all(tok is None for _, tok, _ in events)
+
+
+def test_engine_wall_clock_replay_sleeps_to_arrivals():
+    """wall=True: arrival times are real seconds — the runtime sleeps
+    through the gap and timestamps in wall time."""
+    cfg = tiny_dense()
+    eng = _make_engine(cfg, "layered")
+    trace = [TraceRequest(0.0, 4, 3, prompt_tokens=(1, 2, 3, 4)),
+             TraceRequest(0.3, 4, 3, prompt_tokens=(4, 3, 2, 1))]
+    rt = ServingRuntime(EngineExecutor(eng, wall=True), clock="executor")
+    res = rt.run(trace, max_iterations=10_000)
+    assert res.clock >= 0.3                     # really waited
+    assert all(len(eng.outputs[r.req_id]) == 3 for r in res.requests)
+    r1 = res.requests[1]
+    assert r1.first_token_time > r1.arrival_time

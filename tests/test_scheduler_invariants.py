@@ -330,6 +330,82 @@ def test_double_preemption_folds_only_unfolded_tail():
     assert kv.pages_in_use() == 0
 
 
+def test_batch_victims_evicted_before_interactive():
+    """Class-aware eviction: the victim walk ranks by CLASS_EVICT_RANK
+    first — a batch resident is evicted before a LATER-arriving
+    interactive one (pure recency would pick the interactive request)."""
+    sched = make_scheduler("continuous", 4, n_slots=4)
+    kv = PagedKVAllocator(n_pages=18, page_size=2)
+    sched.attach_kv(kv, decode_reserve=0)
+    # arrival order: interactive (earliest, protected), batch, interactive
+    specs = [("interactive", 0), ("batch", 1), ("interactive", 2)]
+    for i, (cls, t) in enumerate(specs):
+        sched.submit(Request(req_id=i, prompt_len=7, max_new_tokens=10,
+                             arrival_time=float(t), slo_class=cls))
+    preempted = []
+    it = 0
+    while sched.has_work():
+        plan = sched.next_plan(now=float(it))
+        preempted.extend(plan.preempted_ids)
+        it += 1
+        assert it < 1000
+    assert preempted, "scenario must create pressure"
+    assert preempted[0] == 1               # the batch request, not req 2
+    assert 0 not in preempted              # earliest resident never evicted
+
+
+def test_class_headroom_blocks_batch_admission_only():
+    """class_headroom={"interactive": k}: a batch request must leave k
+    pages free at admission; an identical interactive request is exempt."""
+    def drain(cls, headroom):
+        sched = make_scheduler("continuous", 4, n_slots=4)
+        kv = PagedKVAllocator(n_pages=10, page_size=4)
+        sched.attach_kv(kv, decode_reserve=0,
+                        class_headroom={"interactive": headroom})
+        # needs 8 pages of the 10-page pool (32-token prompt, page 4)
+        sched.submit(Request(req_id=0, prompt_len=32, max_new_tokens=2,
+                             slo_class=cls))
+        return sched
+
+    ok = drain("interactive", 4)
+    ok.next_plan()
+    assert ok.requests[0].state != RequestState.WAITING   # admitted
+
+    blocked = drain("batch", 4)
+    with pytest.raises(RuntimeError, match="headroom"):
+        blocked.next_plan()        # 8 + 4 headroom can NEVER fit 10 pages
+
+    queued = drain("batch", 1)     # 8 + 1 fits the pool but not right now?
+    queued.next_plan()             # 10 free - 1 headroom >= 8: admitted
+    assert queued.requests[0].state != RequestState.WAITING
+
+
+def test_class_headroom_batch_waits_while_interactive_flows():
+    """Under a shared pool with interactive headroom, batch admission
+    queues when it would eat into the reserve, while interactive requests
+    keep being admitted — and the batch request still completes once the
+    pool drains (no starvation-deadlock)."""
+    sched = make_scheduler("continuous", 4, n_slots=8)
+    kv = PagedKVAllocator(n_pages=12, page_size=4)
+    sched.attach_kv(kv, decode_reserve=0,
+                    class_headroom={"interactive": 4})
+    sched.submit(Request(req_id=0, prompt_len=16, max_new_tokens=6,
+                         arrival_time=0.0, slo_class="batch"))
+    sched.submit(Request(req_id=1, prompt_len=16, max_new_tokens=6,
+                         arrival_time=1.0, slo_class="interactive"))
+    it = 0
+    while sched.has_work():
+        sched.next_plan(now=float(it))
+        it += 1
+        assert it < 1000
+    for r in sched.requests.values():
+        assert r.n_generated == r.max_new_tokens
+    # batch (earlier arrival!) needed 4+4 headroom pages free of 12 — it
+    # was admitted, but an interactive admission was never blocked by the
+    # batch reserve; both made it through and the pool drained clean
+    assert kv.pages_in_use() == 0
+
+
 def test_oversized_request_raises_instead_of_deadlocking():
     sched = make_scheduler("chunked", 4, n_slots=4, token_budget=64)
     kv = PagedKVAllocator(n_pages=4, page_size=4)    # 16-token pool
