@@ -102,6 +102,31 @@ def moe_gmm(x, w_gate, w_up, w_down, *, c_blk: int = 128, f_blk: int = 128,
     return out[:, :c0]
 
 
+def gather_slot_rows(cache, slots: jax.Array):
+    """Gather a slot VECTOR of KV-cache rows — one ``jnp.take`` per leaf
+    instead of B full-tree dynamic slices (the engine's packed layer-group
+    batches; DESIGN.md §Engine hot path).  Leaves are ``(reps, n_slots,
+    ...)``; ``slots`` is ``(B,)`` int32.  Padding rows carry the
+    out-of-range id ``n_slots``: ``mode="clip"`` reads the last real row
+    (its output is masked downstream and its writeback is dropped by
+    ``scatter_slot_rows``), never a NaN fill that could poison the batch's
+    shared MoE dispatch."""
+    return jax.tree_util.tree_map(
+        lambda c: jnp.take(c, slots, axis=1, mode="clip"), cache)
+
+
+def scatter_slot_rows(cache, rows, slots: jax.Array):
+    """Scatter gathered rows back into the multi-slot cache with one
+    ``.at[:, slots].set`` per leaf.  ``mode="drop"`` discards writes from
+    padding rows (slot id ``n_slots`` is out of range), so a bucket-padded
+    batch can never corrupt a live slot.  Real slot ids are distinct by
+    construction (one resident request per slot), so the scatter has no
+    duplicate-index races."""
+    return jax.tree_util.tree_map(
+        lambda f, r: f.at[:, slots].set(r.astype(f.dtype), mode="drop"),
+        cache, rows)
+
+
 def fetch_expert_ids(tile_expert: jax.Array, n_experts: int) -> jax.Array:
     """Replace sentinel tile ids (== n_experts) with the last active expert
     id (forward fill), so skipped tiles drive the weight DMA at an already-

@@ -111,7 +111,8 @@ def serve_real(args) -> None:
                  host_pages=args.host_pages,
                  swap_in_budget=args.swap_in_budget,
                  decode_reserve=args.decode_reserve,
-                 class_headroom=class_headroom_opt(args))
+                 class_headroom=class_headroom_opt(args),
+                 packed=args.packed)
     def _stream(rid, tok, t):
         print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
     on_token = _stream if args.stream else None
@@ -154,6 +155,11 @@ def serve_real(args) -> None:
           f"{m['queue_delay_mean']:.1f} {unit}; "
           f"preemptions {eng.n_preempted} "
           f"(rate {m['preemption_rate']:.2f}/req)")
+    print(f"[serve] hot path: {'packed' if args.packed else 'per-slice'}; "
+          f"{eng.n_dispatches} device launches "
+          f"({eng.n_dispatches / max(eng.iteration, 1):.1f}/iter), "
+          f"{eng.n_prefill_dispatches} prefill batches, "
+          f"{eng.n_prefill_compiles} prefill executables")
     if eng.alloc.n_host_pages:
         print(f"[serve] swap: {eng.n_swapped_out} out / "
               f"{eng.n_swapped_in} in; host pages high-water "
@@ -293,6 +299,13 @@ def main() -> None:
                     help="per-request decode KV reservation in tokens "
                          "(default: one page; 0 = admit on prompt KV only "
                          "and rely on preemption for decode growth)")
+    ap.add_argument("--packed", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="packed layer-group execution: all prefill "
+                         "slices sharing a (block-range, emit) rectangle "
+                         "run as ONE jitted slot-vector batch per "
+                         "iteration; --no-packed is the per-slice escape "
+                         "hatch (one dispatch per slice)")
     ap.add_argument("--moe-dispatch", default="ragged",
                     choices=["ragged", "dense"],
                     help="dropless MoE data path: ragged (sorted "

@@ -241,16 +241,26 @@ def _write_cache(buf: Array, new: Array, offset: Array,
                  row_ok: Optional[Array] = None) -> Array:
     """Write ``new`` (B,S,...) into ``buf`` (B,S_max,...) at per-row offsets.
     Rows with ``row_ok == False`` keep their previous contents (the engine's
-    full-pool decode step must not corrupt slots that are idle or mid-way
-    through a layered prefill)."""
-    def row(b, n, off):
-        idx = (off,) + (0,) * (buf.ndim - 2)
-        return jax.lax.dynamic_update_slice(b, n, idx)
-    written = jax.vmap(row)(buf, new.astype(buf.dtype), offset)
+    full-pool decode step and bucket-padded packed prefill batches must not
+    corrupt slots that are idle or mid-way through a layered prefill).
+
+    Masking is applied at the WRITE WINDOW, not the whole buffer: a masked
+    row re-writes its own current S tokens (an identity write) instead of
+    selecting over all S_max positions — under donated cache buffers this
+    keeps the update O(B*S), so the decode step scales with the written
+    tokens rather than the pool size."""
+    new = new.astype(buf.dtype)
     if row_ok is None:
-        return written
-    sel = row_ok.reshape((-1,) + (1,) * (buf.ndim - 1))
-    return jnp.where(sel, written, buf)
+        def row(b, n, off):
+            idx = (off,) + (0,) * (b.ndim - 1)
+            return jax.lax.dynamic_update_slice(b, n, idx)
+        return jax.vmap(row)(buf, new, offset)
+
+    def row(b, n, off, ok):
+        idx = (off,) + (0,) * (b.ndim - 1)
+        cur = jax.lax.dynamic_slice(b, idx, n.shape)
+        return jax.lax.dynamic_update_slice(b, jnp.where(ok, n, cur), idx)
+    return jax.vmap(row)(buf, new, offset, row_ok)
 
 
 # ---------------------------------------------------------------------------

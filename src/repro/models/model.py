@@ -305,8 +305,21 @@ class DecoderModel:
                    valid: Optional[Array] = None, gmm_fn=None,
                    dropless: bool = False, moe_dispatch: str = "dense"):
         """Run blocks [start, start+n) over x (B,S,D). start/n are static.
-        Returns (x', cache', aux-list-in-block-order)."""
+        Returns (x', cache', aux-list-in-block-order).
+
+        B is the caller's batch axis and is fully vectorized: the engine's
+        packed layer-group path runs ALL prefill slices sharing this block
+        range as one call, with ``cache`` holding a slot-VECTOR of rows
+        (leaves ``(reps, B, ...)`` gathered by ``ops.gather_slot_rows``),
+        per-row ``offset``/``valid`` masking, and bucket-padded rows that
+        are no-ops end to end (their KV writes and recurrent-state updates
+        are suppressed by ``valid``)."""
         auxes = []
+        if cache is not None:
+            # one shallow per-segment copy up front (NOT per block): the
+            # caller's list structure is never mutated, and the packed hot
+            # path does not rebuild the tree n times per call
+            cache = [list(seg) for seg in cache]
         for b in range(start, start + n):
             s, r, p_idx = self.index_map[b]
             spec = self.specs[b]
@@ -318,7 +331,6 @@ class DecoderModel:
                 cache=c, enc_out=enc_out, valid=valid, gmm_fn=gmm_fn,
                 dropless=dropless, moe_dispatch=moe_dispatch)
             if cache is not None:
-                cache = [list(seg) for seg in cache]
                 cache[s][p_idx] = jax.tree_util.tree_map(
                     lambda full, new: full.at[r].set(new.astype(full.dtype)),
                     cache[s][p_idx], nc)

@@ -23,6 +23,22 @@ activation counts from the REAL router; the engine takes, per (iteration,
 block), the union of experts activated by decode and by every prefill slice
 touching that block — exactly the set of expert weight loads a fused hybrid
 batch would issue — and accumulates ``bytes = nnz(union) * bytes_per_expert``.
+
+Hot-path contract (DESIGN.md §Engine hot path):
+
+  * PACKED layer-group batches — all prefill slices of a plan sharing
+    (block_start, n_blocks, emits_first_token) execute as ONE jitted call
+    over a slot vector: hidden (B, P, d), per-row offsets/valid/lengths,
+    cache rows gathered/scattered with a single take / ``.at[slots].set``
+    per leaf (``kernels.ops.gather_slot_rows``).  ``packed=False`` keeps
+    the per-slice reference path (each slice is a batch of one).
+  * DONATED cache buffers — every prefill/decode executable takes the KV
+    pool with ``donate_argnums``, so XLA updates it in place instead of
+    allocating a fresh ``n_slots × max_len`` copy per call.
+  * ONE device sync per iteration — jitted calls return device arrays
+    (first tokens, per-block expert-activation masks, decode tokens, swap
+    victim rows) that are fetched by a single ``jax.device_get`` at the
+    end of ``execute_plan``; no per-slice ``int(token)`` stalls.
 """
 
 from __future__ import annotations
@@ -37,6 +53,7 @@ import numpy as np
 
 from repro.core.base import Scheduler, make_scheduler
 from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+from repro.kernels.ops import gather_slot_rows, scatter_slot_rows
 from repro.models.config import dtype_bytes
 from repro.models.model import DecoderModel
 from repro.serving.kvcache import PagedKVAllocator
@@ -45,9 +62,11 @@ from repro.serving.runtime import (EngineExecutor, RunResult, ServingRuntime,
 
 Array = jax.Array
 
-# Upper bound on live prefill executables: one per (block_start, n_blocks,
-# emit) triple. Long mixed-shape traces would otherwise retain (and on
-# shape-thrash, recompile) executables without bound.
+# Upper bound on live prefill executables.  Keys are (block_start, n_blocks,
+# emit, B_bucket, P_bucket) — the batch/token buckets are part of the key,
+# so one LRU entry == one compiled executable and the bound is real (keyed
+# on the triple alone, mixed-shape traces used to retrace INSIDE an entry
+# and grow live executables past the bound unobserved).
 PREFILL_CACHE_SIZE = 32
 
 
@@ -86,7 +105,7 @@ class Engine:
                  decode_reserve: Optional[int] = None,
                  class_headroom: Optional[Dict[str, int]] = None,
                  eos_token: Optional[int] = None, gmm_fn=None,
-                 moe_dispatch: str = "ragged"):
+                 moe_dispatch: str = "ragged", packed: bool = True):
         """``moe_dispatch`` selects the dropless MoE data path: "ragged"
         (default — expert-sorted tile-aligned buffer, compute/traffic scale
         with the routed work) or "dense" (worst-case (E, T, d) capacity
@@ -105,10 +124,16 @@ class Engine:
         prices swap vs recompute per victim for "auto"; without one, auto
         swaps whenever the victim is swappable.  ``class_headroom``
         reserves admission pages per SLO class (see
-        core.base.Scheduler.attach_kv)."""
+        core.base.Scheduler.attach_kv).  ``packed`` enables packed
+        layer-group batches (one jitted call per (block-range, emit) group
+        of the plan's prefill slices); ``packed=False`` executes every
+        slice as its own batch of one — the reference path the
+        equivalence tests and ``benchmarks/engine_iter_bench.py`` compare
+        against."""
         self.model = model
         self.cfg = model.cfg
         self.params = params
+        self.packed = packed
         if moe_dispatch not in ("dense", "ragged"):
             raise ValueError(f"unknown moe_dispatch {moe_dispatch!r}")
         self.moe_dispatch = moe_dispatch
@@ -155,7 +180,9 @@ class Engine:
         self.requests: Dict[int, Request] = {}
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
-        self.stash: Dict[int, Tuple[Array, int]] = {}    # req -> (hidden, len)
+        # req -> (packed boundary batch, row index, token count): cohort
+        # members share ONE (B, P, d) batch array (§Engine hot path)
+        self.stash: Dict[int, Tuple[Array, int, int]] = {}
         self.enc_frames: Dict[int, np.ndarray] = {}
         # swapped-out requests: req -> (host cache rows, offset, last_tok)
         self.host_kv: Dict[int, Tuple[object, int, int]] = {}
@@ -170,10 +197,21 @@ class Engine:
         self.iter_log: List[dict] = []
         bytes_per_el = dtype_bytes(self.cfg.param_dtype)
         self._expert_bytes = self.cfg.expert_bytes(bytes_per_el)
+        # dispatch accounting (benchmarks/engine_iter_bench.py and the
+        # packed-vs-per-slice regression tests): n_dispatches counts
+        # engine-level device launches (embed / prefill / decode / encode /
+        # stash regather), n_prefill_* the packed-batch executions and
+        # compiled executables specifically
+        self.n_dispatches = 0
+        self.n_prefill_dispatches = 0
+        self.n_prefill_compiles = 0
 
         self._jit_embed = {}
         self._jit_prefill: OrderedDict = OrderedDict()   # LRU, bounded
-        self._jit_decode = jax.jit(self._decode_step_impl)
+        # the KV pool is donated on every decode/prefill call: XLA aliases
+        # the input buffers to the outputs and updates the cache in place
+        self._jit_decode = jax.jit(self._decode_step_impl,
+                                   donate_argnums=(1,))
         self._jit_encode = jax.jit(self._encode_impl)
 
     # ------------------------------------------------------------------ API
@@ -223,7 +261,9 @@ class Engine:
 
     def _decode_step_impl(self, params, cache, tokens, offsets, valid_rows):
         """tokens: (n_slots, 1). One decode token for every slot; masked
-        rows are no-ops (state & KV preserved)."""
+        rows are no-ops (state & KV preserved).  Returns the per-(block,
+        expert) activation MASK rather than raw counts — the union
+        reduction the host needs stays on device."""
         positions = offsets[:, None]
         valid = valid_rows[:, None]
         logits, cache, aux = self.model.forward(
@@ -231,36 +271,52 @@ class Engine:
             valid=valid, gmm_fn=self.gmm_fn, dropless=True,
             moe_dispatch=self.moe_dispatch)
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return next_tok, cache, aux["expert_counts"]
+        return next_tok, cache, aux["expert_counts"] > 0
 
     def _prefill_impl(self, start: int, n: int, emit: bool,
-                      params, cache, hidden, valid, slot, offset, length):
-        """hidden: (1, P, d). Static: (start, n, emit, P)."""
-        row = _slice_cache(cache, slot)
+                      params, cache, hidden, valid, slots, offset, length):
+        """One packed layer-group batch: hidden (B, P, d) holds one row per
+        prefill slice, slots/offset/length are (B,).  Static key: (start,
+        n, emit, B, P).  The multi-slot cache is DONATED by the caller;
+        rows are gathered/scattered with one take / one slot-vector
+        scatter per leaf instead of B full-tree dynamic slices.  Padding
+        rows (valid all-False, slot id == n_slots) are no-ops end to end:
+        their KV/state writes are suppressed by ``valid`` and their
+        writeback is dropped by the out-of-range scatter."""
+        rows = gather_slot_rows(cache, slots)
         positions = offset[:, None] + jnp.arange(hidden.shape[1],
                                                  dtype=jnp.int32)[None]
-        x, row, auxes = self.model.run_blocks(
+        x, rows, auxes = self.model.run_blocks(
             params, hidden, start, n,
-            positions=positions, offset=offset, cache=row, valid=valid,
+            positions=positions, offset=offset, cache=rows, valid=valid,
             gmm_fn=self.gmm_fn, dropless=True,
             moe_dispatch=self.moe_dispatch)
-        cache = _scatter_cache(cache, row, slot)
-        counts = jnp.stack([a["expert_counts"] for a in auxes])  # (n, E)
-        token = jnp.int32(-1)
+        cache = scatter_slot_rows(cache, rows, slots)
+        # per-(block, expert) activation mask over the WHOLE batch (n, E):
+        # router counts are already summed over rows, so the host-side
+        # union fetch is batch-size-free
+        loads = jnp.stack([a["expert_counts"] > 0 for a in auxes])
+        tokens = jnp.full((hidden.shape[0],), -1, jnp.int32)
         if emit:
             h_last = jnp.take_along_axis(
                 x, (length - 1)[:, None, None], axis=1)[:, 0]
             logits = self.model.logits(params, h_last)
-            token = jnp.argmax(logits[0], axis=-1).astype(jnp.int32)
-        return x, cache, counts, token
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return x, cache, loads, tokens
 
-    def _get_prefill_fn(self, start: int, n: int, emit: bool):
-        key = (start, n, emit)
+    def _get_prefill_fn(self, start: int, n: int, emit: bool,
+                        b: int, p: int):
+        """One executable per (block_start, n_blocks, emit, B_bucket,
+        P_bucket).  The shape buckets are part of the LRU key so the
+        PREFILL_CACHE_SIZE bound counts executables, not trace families."""
+        key = (start, n, emit, b, p)
         if key in self._jit_prefill:
             self._jit_prefill.move_to_end(key)
         else:
             self._jit_prefill[key] = jax.jit(
-                functools.partial(self._prefill_impl, start, n, emit))
+                functools.partial(self._prefill_impl, start, n, emit),
+                donate_argnums=(1,))
+            self.n_prefill_compiles += 1
             while len(self._jit_prefill) > PREFILL_CACHE_SIZE:
                 self._jit_prefill.popitem(last=False)
         return self._jit_prefill[key]
@@ -287,32 +343,61 @@ class Engine:
     def execute_plan(self, plan: IterationPlan) -> List[TokenEvent]:
         """Execute one scheduler-produced plan against the real model and
         return the tokens it emitted (consumed by the ServingRuntime for
-        timestamping and streaming callbacks)."""
+        timestamping and streaming callbacks).
+
+        The hot path is sync-free: prefill groups and the decode step are
+        LAUNCHED first (device arrays only), then ONE ``jax.device_get``
+        fetches everything the host needs — emitted tokens, per-block
+        expert-activation masks, and this iteration's swap-out victim rows
+        — and all bookkeeping (offsets, EOS, token events, expert union)
+        runs on the fetched numpy values."""
         self._step_events: List[TokenEvent] = []
+        dispatches0 = self.n_dispatches
         block_expert_union = np.zeros(
             (self.model.n_blocks, max(self.cfg.moe.n_experts, 1)), bool)
 
         # memory-pressure victims first: their slot rows and stash must be
-        # released before this iteration's swap-ins/admissions reuse them
+        # released before this iteration's swap-ins/admissions reuse them.
+        # Swap-out rows are snapshotted as device arrays (immutable — later
+        # writes build new buffers) and join the end-of-iteration fetch.
         for rid in plan.preempted_ids:
             self._preempt(rid)
-        for rid in plan.swapped_out_ids:
-            self._swap_out(rid)
+        swap_pending = [self._swap_out(rid) for rid in plan.swapped_out_ids]
 
         for rid in plan.swapped_in_ids:
             self._swap_in(rid)
         for rid in plan.admitted_ids:
             self._admit(rid)
 
-        prefill_tokens = 0
-        for sl in plan.prefill:
-            counts = self._exec_prefill_slice(sl)
-            block_expert_union[sl.block_start:sl.block_end] |= counts > 0
-            prefill_tokens += sl.n_tokens
+        groups = self._pack_slices(plan.prefill)
+        launched = [self._launch_prefill_group(*g) for g in groups]
+        prefill_tokens = sum(sl.n_tokens for sl in plan.prefill)
 
+        decode_slot_req = decode_out = None
         if plan.decode_ids:
-            counts = self._exec_decode(plan.decode_ids)
-            block_expert_union |= counts > 0
+            decode_slot_req, decode_out = self._launch_decode(plan.decode_ids)
+
+        # ---- the ONE host sync per iteration ----
+        if launched or decode_out is not None or swap_pending:
+            launched, decode_out, swap_rows = jax.device_get(
+                (launched, decode_out, [row for _, row in swap_pending]))
+            for (rid, _), row in zip(swap_pending, swap_rows):
+                self.host_kv[rid] = (row,) + self.host_kv[rid][1:]
+
+        for (start, end, emit, slices), (loads, toks) in zip(groups,
+                                                             launched):
+            block_expert_union[start:end] |= loads
+            for i, sl in enumerate(slices):
+                self._finish_prefill_slice(sl, int(toks[i]))
+        if decode_out is not None:
+            next_tok, loads = decode_out
+            block_expert_union |= loads
+            for slot, rid in decode_slot_req.items():
+                tok = int(next_tok[slot])
+                self.offsets[slot] += 1
+                self.last_tok[slot] = tok
+                self._record_token(rid, tok, first=False)
+                self._maybe_finish(rid, tok)
 
         if self.cfg.moe.enabled:
             loaded = int(block_expert_union.sum())
@@ -328,6 +413,7 @@ class Engine:
             "n_preempted": len(plan.preempted_ids),
             "n_swapped_out": len(plan.swapped_out_ids),
             "n_swapped_in": len(plan.swapped_in_ids),
+            "n_dispatches": self.n_dispatches - dispatches0,
         })
         self.iteration += 1
         return self._step_events
@@ -354,20 +440,27 @@ class Engine:
             (rid, len(self.prompts[rid]), self.requests[rid].prompt_len)
         self.n_preempted += 1
 
-    def _swap_out(self, rid: int) -> None:
-        """Execute a swap-to-host eviction: copy the victim's slot row
-        (every per-block KV / recurrent-state entry) to host memory
-        verbatim and release the slot.  The scheduler already moved the
+    def _swap_out(self, rid: int):
+        """Execute a swap-to-host eviction: snapshot the victim's slot row
+        (every per-block KV / recurrent-state entry) as ONE device slice
+        and release the slot; ``execute_plan`` materialises the host copy
+        in the single end-of-iteration ``jax.device_get`` (one batched
+        transfer, not a per-leaf ``np.asarray`` stall each).  The snapshot
+        is immutable — this iteration's compute builds new cache buffers —
+        so deferring the fetch cannot observe later writes.  Until then
+        ``host_kv`` holds the device snapshot (hand-stepping drivers that
+        call ``_swap_out`` directly stay correct: ``_swap_in`` restores
+        either representation verbatim).  The scheduler already moved the
         allocator pages to the host pool."""
         slot = self._slot_of.pop(rid)
         assert rid not in self.stash, rid       # swap victims are DECODE
-        row = jax.tree_util.tree_map(np.asarray,
-                                     _slice_cache(self.cache, slot))
+        row = _slice_cache(self.cache, slot)
         self.host_kv[rid] = (row, int(self.offsets[slot]),
                              int(self.last_tok[slot]))
         self._free_slots.append(slot)
         self.decoding[slot] = False
         self.n_swapped_out += 1
+        return rid, row
 
     def _swap_in(self, rid: int) -> None:
         """DMA-back: restore the host copy into a fresh slot row and resume
@@ -402,47 +495,115 @@ class Engine:
                         xv=cur["xv"].at[:, slot].set(kv["xv"][:, 0]),
                     )
 
-    def _exec_prefill_slice(self, sl: PrefillSlice) -> np.ndarray:
-        """Returns per-block expert counts (n_blocks_of_slice, E)."""
+    def _pack_slices(self, slices: List[PrefillSlice]):
+        """Group the plan's prefill slices by their layer-group rectangle:
+        every (block_start, block_end, emits_first_token) group executes
+        as ONE jitted call over a slot vector.  A request appears at most
+        once per plan (scheduler invariant I3), so rows within a group are
+        independent — distinct slots, no intra-group KV dependencies.
+        With packing disabled each slice is its own group of one (the
+        per-slice reference path)."""
+        if not self.packed:
+            return [(sl.block_start, sl.block_end, sl.emits_first_token,
+                     [sl]) for sl in slices]
+        grouped: OrderedDict = OrderedDict()
+        for sl in slices:
+            key = (sl.block_start, sl.block_end, sl.emits_first_token)
+            grouped.setdefault(key, []).append(sl)
+        return [(start, end, emit, sls)
+                for (start, end, emit), sls in grouped.items()]
+
+    def _launch_prefill_group(self, start: int, end: int, emit: bool,
+                              slices: List[PrefillSlice]):
+        """Launch one packed layer-group batch; returns DEVICE arrays
+        (per-block expert-activation mask, per-row first tokens) for the
+        end-of-iteration fetch.  Rows pad to a power-of-two batch bucket
+        (padding rows carry the out-of-range slot id and an all-False
+        valid mask) and tokens to a power-of-two token bucket."""
+        b = len(slices)
+        b_pad = _bucket(b, minimum=1, cap=self.n_slots)
+        if start == 0:
+            # fresh rectangle rows: embed every token range in ONE call
+            p = _bucket(max(sl.n_tokens for sl in slices), cap=self.max_len)
+            toks = np.zeros((b_pad, p), np.int32)
+            pos = np.zeros((b_pad, p), np.int32)
+            for i, sl in enumerate(slices):
+                toks[i, :sl.n_tokens] = \
+                    self.prompts[sl.req_id][sl.token_start:sl.token_end]
+                pos[i] = sl.token_start + np.arange(p, dtype=np.int32)
+            hidden = self._get_embed_fn()(self.params, jnp.asarray(toks),
+                                          jnp.asarray(pos))
+            self.n_dispatches += 1
+        else:
+            hidden = self._stash_hidden(slices, b_pad)
+            p = hidden.shape[1]
+        valid = np.zeros((b_pad, p), bool)
+        slots = np.full(b_pad, self.n_slots, np.int32)  # OOB: writes dropped
+        offs = np.zeros(b_pad, np.int32)
+        lens = np.ones(b_pad, np.int32)
+        for i, sl in enumerate(slices):
+            valid[i, :sl.n_tokens] = True
+            slots[i] = self._slot_of[sl.req_id]
+            offs[i] = sl.token_start
+            lens[i] = sl.n_tokens
+        fn = self._get_prefill_fn(start, end - start, emit, b_pad, p)
+        x, self.cache, loads, tokens = fn(
+            self.params, self.cache, hidden, jnp.asarray(valid),
+            jnp.asarray(slots), jnp.asarray(offs), jnp.asarray(lens))
+        self.n_dispatches += 1
+        self.n_prefill_dispatches += 1
+        if end < self.model.n_blocks:
+            # the whole packed boundary activation is stashed ONCE; each
+            # request holds a (batch, row) reference into it
+            for i, sl in enumerate(slices):
+                self.stash[sl.req_id] = (x, i, sl.n_tokens)
+        else:
+            for sl in slices:
+                self.stash.pop(sl.req_id, None)
+        return loads, tokens
+
+    def _stash_hidden(self, slices: List[PrefillSlice], b_pad: int) -> Array:
+        """Boundary activations for a block_start > 0 group.  The common
+        case — a layered cohort whose membership is unchanged since the
+        previous group — reuses the stashed packed batch WHOLESALE (zero
+        extra dispatches; this is why stash rows are stored as (batch,
+        row) references).  After a mid-cohort preemption or under shape
+        drift the surviving rows are regathered into a fresh batch."""
+        entries = []
+        for sl in slices:
+            src, row, n_tok = self.stash[sl.req_id]
+            assert n_tok == sl.n_tokens, "stash/token-range mismatch"
+            entries.append((src, row))
+        src0 = entries[0][0]
+        rows = [row for _, row in entries]
+        same_src = all(src is src0 for src, _ in entries)
+        if same_src and rows == list(range(len(slices))) \
+                and src0.shape[0] == b_pad:
+            return src0
+        p = max(src.shape[1] for src, _ in entries)
+        if same_src:
+            h = jnp.take(src0, jnp.asarray(rows, jnp.int32), axis=0)
+            h = jnp.pad(h, ((0, b_pad - h.shape[0]),
+                            (0, p - h.shape[1]), (0, 0)))
+        else:
+            parts = [jnp.pad(src[row], ((0, p - src.shape[1]), (0, 0)))
+                     for src, row in entries]
+            h = jnp.stack(parts)
+            if h.shape[0] < b_pad:
+                h = jnp.pad(h, ((0, b_pad - h.shape[0]), (0, 0), (0, 0)))
+        self.n_dispatches += 1
+        return h
+
+    def _finish_prefill_slice(self, sl: PrefillSlice, tok: int) -> None:
+        """Host bookkeeping for one executed slice (post-fetch): offsets,
+        the emitted first token, EOS, and the decode handoff."""
         rid = sl.req_id
         slot = self._slot_of[rid]
-        n_tok = sl.n_tokens
-
-        if sl.block_start == 0:
-            # fresh rectangle row: embed the token range
-            prompt = self.prompts[rid]
-            toks = prompt[sl.token_start:sl.token_end]
-            p = _bucket(n_tok, cap=self.max_len)
-            padded = np.zeros((1, p), np.int32)
-            padded[0, :n_tok] = toks
-            positions = sl.token_start + jnp.arange(p, dtype=jnp.int32)[None]
-            hidden = self._get_embed_fn()(self.params, jnp.asarray(padded),
-                                          positions)
-        else:
-            hidden, stash_len = self.stash[rid]
-            assert stash_len == n_tok, "stash/token-range mismatch"
-            p = hidden.shape[1]
-
-        valid = jnp.arange(p)[None] < n_tok
-        offset = jnp.asarray([sl.token_start], jnp.int32)
-        length = jnp.asarray([n_tok], jnp.int32)
-        fn = self._get_prefill_fn(sl.block_start, sl.n_blocks,
-                                  sl.emits_first_token)
-        x, self.cache, counts, token = fn(
-            self.params, self.cache, hidden, valid, jnp.int32(slot), offset,
-            length)
-
-        if sl.block_end < self.model.n_blocks:
-            self.stash[rid] = (x, n_tok)
-        else:
-            self.stash.pop(rid, None)
-
         req = self.requests[rid]
         if sl.block_end == self.model.n_blocks:
             # tokens fully processed through the stack
             self.offsets[slot] = sl.token_end
         if sl.emits_first_token:
-            tok = int(token)
             self._record_token(rid, tok, first=True)
             self.offsets[slot] = req.prompt_len
             self.last_tok[slot] = tok
@@ -451,9 +612,12 @@ class Engine:
             self._maybe_finish(rid, tok, after_first=True)
             if req.state == RequestState.DECODE:
                 self.decoding[slot] = True
-        return np.asarray(counts)
 
-    def _exec_decode(self, decode_ids: List[int]) -> np.ndarray:
+    def _launch_decode(self, decode_ids: List[int]):
+        """Launch the full-pool decode step; returns the slot→request map
+        and DEVICE arrays (next tokens, expert-activation mask) for the
+        end-of-iteration fetch.  Slots mid-prefill this iteration carry
+        stale offsets — harmless, their rows are valid-masked no-ops."""
         tokens = np.zeros((self.n_slots, 1), np.int32)
         valid = np.zeros(self.n_slots, bool)
         slot_req = {}
@@ -462,17 +626,11 @@ class Engine:
             tokens[slot, 0] = self.last_tok[slot]
             valid[slot] = True
             slot_req[slot] = rid
-        next_tok, self.cache, counts = self._jit_decode(
+        next_tok, self.cache, loads = self._jit_decode(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(self.offsets), jnp.asarray(valid))
-        next_tok = np.asarray(next_tok)
-        for slot, rid in slot_req.items():
-            tok = int(next_tok[slot])
-            self.offsets[slot] += 1
-            self.last_tok[slot] = tok
-            self._record_token(rid, tok, first=False)
-            self._maybe_finish(rid, tok)
-        return np.asarray(counts)
+        self.n_dispatches += 1
+        return slot_req, (next_tok, loads)
 
     def _record_token(self, rid: int, tok: int, *, first: bool) -> None:
         """Append the token to the request's output and report it as an

@@ -63,6 +63,10 @@ class StepOutcome:
     """What one executed iteration reports back to the loop."""
     duration: float
     events: List[TokenEvent] = field(default_factory=list)
+    # engine-level device launches this iteration (embed + packed prefill
+    # batches + decode); 0 for analytic backends.  Surfaced so serving
+    # harnesses can track dispatch pressure without poking the engine.
+    n_dispatches: int = 0
 
 
 def timestamp_events(sched, events: List[TokenEvent], t_end: float,
@@ -124,6 +128,7 @@ class RunResult:
     recompute_tokens: int = 0      # prefill tokens re-run due to preemption
     n_swap_outs: int = 0
     n_swap_ins: int = 0
+    n_dispatches: int = 0          # total device launches (engine backends)
 
 
 class ServingRuntime:
@@ -196,6 +201,7 @@ class ServingRuntime:
                     "active, no pending arrivals")
             outcome = x.execute(plan, t)
             res.n_iterations += 1
+            res.n_dispatches += outcome.n_dispatches
             res.decode_batch_sizes.append(len(plan.decode_ids))
             t_end = t + (1.0 if self.clock == "iteration"
                          else outcome.duration)
@@ -234,13 +240,15 @@ class EngineExecutor:
         return self.engine.requests[rid]
 
     def execute(self, plan: IterationPlan, now: float) -> StepOutcome:
+        before = self.engine.n_dispatches
         events = self.engine.execute_plan(plan)
         # wall durations are ABSOLUTE elapsed minus the loop clock, so
         # scheduling/streaming overhead between steps is charged too and
         # the pacing cannot drift behind the trace's real-second schedule
         dur = max(0.0, time.monotonic() - self._t0 - now) if self.wall \
             else 1.0
-        return StepOutcome(duration=dur, events=events)
+        return StepOutcome(duration=dur, events=events,
+                           n_dispatches=self.engine.n_dispatches - before)
 
     def idle(self, t: float, until: float) -> float:
         if not self.wall:

@@ -157,14 +157,30 @@ def test_prefill_jit_cache_is_lru_bounded():
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, "layered", n_slots=2, max_len=64)
     for start in range(PREFILL_CACHE_SIZE + 8):
-        eng._get_prefill_fn(start % (PREFILL_CACHE_SIZE + 4), 1, False)
+        eng._get_prefill_fn(start % (PREFILL_CACHE_SIZE + 4), 1, False, 1, 16)
     assert len(eng._jit_prefill) <= PREFILL_CACHE_SIZE
     # hits refresh recency: oldest surviving key evicts first, hit key stays
     keys = list(eng._jit_prefill)
     eng._get_prefill_fn(*keys[0])                 # touch the LRU entry
-    eng._get_prefill_fn(999, 1, False)            # force one eviction
+    eng._get_prefill_fn(999, 1, False, 1, 16)     # force one eviction
     assert keys[0] in eng._jit_prefill
     assert keys[1] not in eng._jit_prefill
+
+
+def test_prefill_jit_cache_keys_include_shape_buckets():
+    """The LRU key folds the batch and padded-token buckets in: shape
+    retraces land in their own entries (one entry == one executable), so
+    the PREFILL_CACHE_SIZE bound is real on mixed-shape traces."""
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, "layered", n_slots=4, max_len=64)
+    eng._get_prefill_fn(0, 1, False, 1, 16)
+    eng._get_prefill_fn(0, 1, False, 1, 32)      # P retrace: new entry
+    eng._get_prefill_fn(0, 1, False, 4, 16)      # B retrace: new entry
+    eng._get_prefill_fn(0, 1, False, 1, 16)      # hit, not a compile
+    assert len(eng._jit_prefill) == 3
+    assert eng.n_prefill_compiles == 3
 
 
 def _run_engine(cfg, sched_name, jobs, **eng_kw):

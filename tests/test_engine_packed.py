@@ -1,0 +1,163 @@
+"""Packed layer-group execution (DESIGN.md §Engine hot path): the packed
+slot-vector path must be BIT-IDENTICAL to per-slice execution — token
+streams, expert-load bytes and the per-iteration page counters — under
+memory pressure in both preemption modes; dispatch counts must scale with
+layer groups instead of co-resident requests; and the engine iteration
+must sync with the host exactly once."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense, tiny_moe
+from test_runtime import _mixed_trace
+from repro.core.base import make_scheduler
+from repro.models.model import DecoderModel
+from repro.serving.engine import Engine
+from repro.serving.runtime import EngineExecutor, ServingRuntime
+
+
+def _engine(cfg, packed, n_slots=4, **kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=n_slots,
+                           quantum=8, token_budget=16)
+    return Engine(model, params, sched, n_slots=n_slots, max_len=64,
+                  packed=packed, **kw)
+
+
+def _replay(cfg, packed, mode):
+    """The multi-class oversubscribed trace from test_runtime, through the
+    shared runtime loop on a ~3-resident pool (the regime where cohorts,
+    evictions and swap-ins all coexist in one plan)."""
+    eng = _engine(cfg, packed, pages=16, page_size=4, decode_reserve=1,
+                  preemption_mode=mode)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        record_plans=True)
+    res = rt.run(_mixed_trace(), max_iterations=100_000)
+    return eng, rt, res
+
+
+ITER_KEYS = ("iteration", "n_decode", "prefill_tokens", "expert_load_bytes",
+             "pages_in_use", "host_pages_in_use", "n_preempted",
+             "n_swapped_out", "n_swapped_in")
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_packed_vs_per_slice_equivalence(mode):
+    """Acceptance: the packed path produces bit-identical tokens,
+    expert-load bytes and iter_log page counters to the per-slice path on
+    the cross-backend oversubscribed trace, in both preemption modes."""
+    cfg = tiny_moe()
+    pk_eng, pk_rt, pk_res = _replay(cfg, True, mode)
+    ps_eng, ps_rt, ps_res = _replay(cfg, False, mode)
+    if mode == "swap":
+        assert pk_eng.n_swapped_out > 0, "scenario must actually swap"
+    else:
+        assert pk_eng.n_preempted > 0, "scenario must actually preempt"
+
+    assert pk_eng.outputs == ps_eng.outputs, \
+        "packing changed generated tokens"
+    assert pk_eng.expert_load_bytes == ps_eng.expert_load_bytes > 0
+    assert [{k: row[k] for k in ITER_KEYS} for row in pk_eng.iter_log] \
+        == [{k: row[k] for k in ITER_KEYS} for row in ps_eng.iter_log]
+    # identical plan streams (scheduling is execution-independent) but
+    # strictly fewer device launches for the same work
+    assert len(pk_rt.plans) == len(ps_rt.plans)
+    assert pk_res.n_dispatches < ps_res.n_dispatches
+    assert pk_eng.alloc.pages_in_use() == 0
+
+
+def test_packed_dispatch_count_regression():
+    """A mixed-shape cohort of >= 4 co-resident prefills: the packed path
+    must launch >= 2x fewer prefill executions AND compile no more prefill
+    executables than per-slice (the P/B-bucketed LRU keys count real
+    executables on both paths)."""
+    cfg = tiny_dense(n_layers=4)
+    jobs = [list(range(1, n)) for n in (11, 21, 13, 25, 15, 29)]
+
+    def run(packed):
+        eng = _engine(cfg, packed, n_slots=8)
+        for p in jobs:
+            eng.submit(p, 4)
+        eng.run(max_iterations=10_000)
+        return eng
+
+    pk, ps = run(True), run(False)
+    assert pk.outputs == ps.outputs
+    # 6 requests form one layered cohort: per-slice launches one prefill
+    # per (request x group), packed one per group
+    assert pk.n_prefill_dispatches * 2 <= ps.n_prefill_dispatches
+    assert pk.n_prefill_compiles <= ps.n_prefill_compiles
+    assert pk.n_dispatches < ps.n_dispatches
+
+
+def test_one_device_sync_per_iteration(monkeypatch):
+    """The sync-free contract: execute_plan performs at most ONE
+    jax.device_get per iteration — tokens, expert masks and swap rows all
+    ride the same fetch."""
+    cfg = tiny_dense()
+    eng = _engine(cfg, True, pages=16, page_size=4, decode_reserve=1,
+                  preemption_mode="swap")
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        eng.submit(list(rng.integers(1, 200, int(rng.integers(4, 10)))), 12)
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda tree: calls.append(1) or real(tree))
+    while eng.scheduler.has_work():
+        before = len(calls)
+        eng.step()
+        assert len(calls) - before <= 1
+    assert eng.n_swapped_out > 0          # swap rows joined the one fetch
+    assert all(len(toks) == 12 for toks in eng.outputs.values())
+
+
+def test_stash_rows_reference_packed_batch():
+    """A layered cohort's boundary activations are stashed as (batch, row)
+    references into ONE packed array — group g+1 consumes the stash
+    wholesale instead of per-request splits."""
+    cfg = tiny_dense(n_layers=4)
+    eng = _engine(cfg, True, n_slots=4)
+    for i in range(3):
+        eng.submit([1 + i, 2, 3, 4, 5, 6, 7, 8, 9], 2)
+    saw_shared = False
+    while eng.scheduler.has_work():
+        eng.step()
+        if len(eng.stash) >= 2:
+            srcs = {id(src) for src, _, _ in eng.stash.values()}
+            rows = sorted(row for _, row, _ in eng.stash.values())
+            saw_shared = True
+            assert len(srcs) == 1, "cohort stash must share one batch"
+            assert rows == list(range(len(eng.stash)))
+    assert saw_shared
+    assert not eng.stash
+
+
+def test_packed_survives_mid_cohort_preemption():
+    """Preempting a cohort member between layer groups forces the stash
+    regather path (survivor rows no longer match the stored batch); the
+    survivors' tokens must still match an undisturbed run."""
+    from repro.core.plan import RequestState
+    cfg = tiny_dense(n_layers=4)
+    eng = _engine(cfg, True, n_slots=4)
+    sched = eng.scheduler
+    rids = [eng.submit([9 - i, 2, 3, 4, 5, 6, 7, 8], 3) for i in range(3)]
+    forced = False
+    while eng.scheduler.has_work():
+        victim = sched.requests[rids[0]]
+        if not forced and victim.state == RequestState.PREFILL \
+                and eng.stash:
+            sched.preempt(rids[0])        # what the pressure pass would do
+            eng._preempt(rids[0])
+            forced = True
+        eng.step()
+    assert forced
+    clean = _engine(cfg, True, n_slots=4)
+    for i in range(3):
+        clean.submit([9 - i, 2, 3, 4, 5, 6, 7, 8], 3)
+    clean.run()
+    assert eng.outputs == {rid: clean.outputs[rid] for rid in eng.outputs}
