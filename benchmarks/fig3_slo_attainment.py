@@ -15,6 +15,13 @@ background (bursty on/off arrivals) under an oversubscribed pool, so the
 class-aware eviction walk (batch victims first) really differentiates.
 Rows are emitted PER CLASS with TTFT/TBT/attainment breakdowns for
 chunked vs layered — the per-class Pareto frontier.
+
+``--spec {ngram,draft}`` adds the speculative verify-k frontier: chunked
+vs layered × speculation off/on at sampled rates (analytic acceptance
+``--spec-acceptance``), asserting token-count invariance, folded
+iteration counts, and no SLO loss from speculation.  With ``--spec`` set,
+the multi-tenant rows also run with speculation on and gain a per-class
+``accept_rate`` column.
 """
 
 from __future__ import annotations
@@ -51,10 +58,17 @@ OVERSUB_COLUMNS = ("model", "dataset", "sched", "mode", "rate", "slo",
                    "pages_high_water")
 
 # Per-class columns of the multi-tenant rows (same CI schema guard).
+# ``accept_rate`` is the per-class speculative acceptance (None when the
+# run is not speculating).
 MT_COLUMNS = ("model", "sched", "mode", "rate", "slo_class", "n_requests",
               "ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99", "ttft_att",
               "tbt_att", "slo", "queue_delay_p99", "preemption_rate",
-              "swap_rate")
+              "swap_rate", "accept_rate")
+
+# Speculative verify-k frontier rows (chunked vs layered x spec off/on).
+SPEC_COLUMNS = ("model", "dataset", "sched", "spec", "rate", "slo",
+                "ttft_att", "tbt_att", "acceptance_rate", "n_iterations",
+                "total_generated")
 
 # Multi-tenant operating points: total offered rate is split 70/30 between
 # the interactive ShareGPT foreground and the bursty batch arXiv
@@ -176,6 +190,72 @@ def run_oversubscribed(n_requests: int, sweeps) -> dict:
             "checks": checks}
 
 
+def run_spec_frontier(n_requests: int, sweeps, spec: str,
+                      spec_acceptance: float) -> dict:
+    """Chunked vs layered × speculation off/on at sampled rates.  The
+    simulator's verify-k is analytic (seeded Bernoulli acceptance), so
+    the frontier isolates the SCHEDULING effect of speculation: fewer,
+    wider decode iterations at identical token streams."""
+    rows = []
+    for (model, dataset), rates in sweeps.items():
+        picked = sorted({rates[0], rates[len(rates) // 2], rates[-1]})
+        for rate in picked:
+            for sched in ("chunked", "layered"):
+                for sp in ("off", spec):
+                    kw = {} if sp == "off" else dict(
+                        spec_mode=sp, spec_k=4,
+                        spec_acceptance=spec_acceptance)
+                    m, res = run_sim(model, dataset, sched, rate,
+                                     n_requests=n_requests, **kw)
+                    rows.append({
+                        "model": model, "dataset": dataset, "sched": sched,
+                        "spec": sp, "rate": rate,
+                        "slo": _finite(m["slo_attainment"]),
+                        "ttft_att": _finite(m["ttft_attainment"]),
+                        "tbt_att": _finite(m["tbt_attainment"]),
+                        "acceptance_rate": _finite(res.acceptance_rate),
+                        "n_iterations": res.n_iterations,
+                        "total_generated": sum(r.n_generated
+                                               for r in res.requests),
+                    })
+    print(table(rows, ["model", "dataset", "sched", "spec", "rate", "slo",
+                       "ttft_att", "tbt_att", "acceptance_rate",
+                       "n_iterations"],
+                "Fig 3 (speculative) — chunked vs layered x verify-k "
+                f"off/{spec}, analytic acceptance {spec_acceptance}"))
+
+    def by(model, dataset, sched, rate, sp):
+        for r in rows:
+            if (r["model"], r["dataset"], r["sched"], r["rate"],
+                    r["spec"]) == (model, dataset, sched, rate, sp):
+                return r
+        raise KeyError
+
+    points = {(r["model"], r["dataset"], r["sched"], r["rate"])
+              for r in rows}
+    pairs = [(by(*p, "off"), by(*p, spec)) for p in sorted(points)]
+    checks = {
+        # speculation never changes WHAT is generated, only when
+        "spec_frontier_token_invariant": all(
+            off["total_generated"] == on["total_generated"]
+            for off, on in pairs),
+        # accepted drafts fold decode iterations together
+        "spec_frontier_folds_iterations": all(
+            on["n_iterations"] < off["n_iterations"]
+            for off, on in pairs),
+        "spec_frontier_engaged": all(
+            (on["acceptance_rate"] or 0) > 0 for _, on in pairs),
+        # folding iterations can only help the latency SLOs (epsilon for
+        # attainment-quantization on small request counts)
+        "spec_frontier_no_slo_loss": all(
+            (on["slo"] or 0) >= (off["slo"] or 0) - 0.05
+            for off, on in pairs),
+    }
+    print("checks:", checks)
+    return {"spec_rows": rows, "spec_columns": list(SPEC_COLUMNS),
+            "checks": checks}
+
+
 def _class_eviction_probe(mode: str) -> bool:
     """Deterministic 3-resident scenario proving the class-aware victim
     walk: interactive (earliest, protected by the forward-progress rule),
@@ -200,10 +280,13 @@ def _class_eviction_probe(mode: str) -> bool:
     return evicted[1] > 0 and evicted[0] == 0 and evicted[2] == 0
 
 
-def run_multi_tenant(n_requests: int, models) -> dict:
+def run_multi_tenant(n_requests: int, models, spec_kw=None) -> dict:
     """Mixed interactive+batch trace under an oversubscribed pool, swept
     under BOTH preemption modes: emits one row per (model, sched, mode,
-    rate, slo_class) with the per-class TTFT/TBT/attainment breakdown."""
+    rate, slo_class) with the per-class TTFT/TBT/attainment breakdown.
+    ``spec_kw`` (spec_mode/spec_k/spec_acceptance) runs the points with
+    verify-k speculation on and fills the per-class ``accept_rate``."""
+    spec_kw = spec_kw or {}
     rows = []
     evictions = {"interactive": 0.0, "batch": 0.0}
     for model, rates in models.items():
@@ -223,7 +306,7 @@ def run_multi_tenant(n_requests: int, models) -> dict:
                 for mode in PREEMPTION_MODES:
                     m, res, per_cls = run_sim_trace(
                         model, trace, sched, slo=slos, oversubscribed=True,
-                        preemption_mode=mode)
+                        preemption_mode=mode, **spec_kw)
                     for cls, cm in per_cls.items():
                         rows.append({
                             "model": model, "sched": sched, "mode": mode,
@@ -241,12 +324,14 @@ def run_multi_tenant(n_requests: int, models) -> dict:
                             "preemption_rate":
                                 _finite(cm["preemption_rate"]),
                             "swap_rate": _finite(cm["swap_rate"]),
+                            "accept_rate":
+                                _finite(cm["spec_acceptance_rate"]),
                         })
                         evictions[cls] += (cm["n_preemptions"]
                                            + cm["n_swaps"])
     print(table(rows, ["model", "sched", "mode", "rate", "slo_class",
                        "ttft_p50", "ttft_p99", "slo", "queue_delay_p99",
-                       "preemption_rate", "swap_rate"],
+                       "preemption_rate", "swap_rate", "accept_rate"],
                 "Fig 3 (multi-tenant) — interactive ShareGPT (Poisson) + "
                 "batch arXiv (bursty), oversubscribed pool"))
 
@@ -274,7 +359,8 @@ def run_multi_tenant(n_requests: int, models) -> dict:
 
 
 def main(n_requests: int = 400, oversubscribed: bool = False,
-         multi_tenant: bool = False, smoke: bool = False) -> dict:
+         multi_tenant: bool = False, smoke: bool = False,
+         spec: str = "off", spec_acceptance: float = 0.7) -> dict:
     sweeps = SWEEPS
     if smoke:
         # tiny CI-sized run: one model/dataset pair, two rates
@@ -291,12 +377,19 @@ def main(n_requests: int = 400, oversubscribed: bool = False,
         result["oversub_rows"] = over["oversub_rows"]
         result["oversub_columns"] = over["oversub_columns"]
         result["checks"].update(over["checks"])
+    if spec != "off":
+        sf = run_spec_frontier(n_requests, sweeps, spec, spec_acceptance)
+        result["spec_rows"] = sf["spec_rows"]
+        result["spec_columns"] = sf["spec_columns"]
+        result["checks"].update(sf["checks"])
     if multi_tenant:
         models = MT_SWEEPS
         if smoke:
             key = "qwen3-30b-a3b"
             models = {key: MT_SWEEPS[key][:1]}
-        mt = run_multi_tenant(n_requests, models)
+        spec_kw = {} if spec == "off" else dict(
+            spec_mode=spec, spec_k=4, spec_acceptance=spec_acceptance)
+        mt = run_multi_tenant(n_requests, models, spec_kw=spec_kw)
         result["mt_rows"] = mt["mt_rows"]
         result["mt_columns"] = mt["mt_columns"]
         result["checks"].update(mt["checks"])
@@ -315,8 +408,17 @@ if __name__ == "__main__":
                     help="add mixed-class points (interactive ShareGPT + "
                          "bursty batch arXiv, oversubscribed pool) with "
                          "per-class TTFT/TBT/attainment rows")
+    ap.add_argument("--spec", choices=["off", "ngram", "draft"],
+                    default="off",
+                    help="add the speculative verify-k frontier (chunked "
+                         "vs layered x spec off/on, analytic acceptance); "
+                         "also speculates the --multi-tenant points")
+    ap.add_argument("--spec-acceptance", type=float, default=0.7,
+                    help="per-token draft acceptance probability for the "
+                         "simulator's analytic verify-k")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run (one sweep, <=24 requests)")
     args = ap.parse_args()
     main(n_requests=args.requests, oversubscribed=args.oversubscribed,
-         multi_tenant=args.multi_tenant, smoke=args.smoke)
+         multi_tenant=args.multi_tenant, smoke=args.smoke,
+         spec=args.spec, spec_acceptance=args.spec_acceptance)

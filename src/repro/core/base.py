@@ -93,6 +93,13 @@ class Scheduler:
         self.class_headroom: Dict[str, int] = {}
         self.n_preemptions = 0
         self.n_swap_outs = 0
+        # speculative verify-k decoding (configure_speculation): budgets are
+        # planned here, executed by the engine/simulator, and fed back via
+        # commit_speculation
+        self.spec_mode = "off"
+        self.spec_k = 0
+        self.spec_adaptive = True
+        self._spec_ema: Dict[int, float] = {}
 
     # -- memory subsystem ------------------------------------------------------
 
@@ -126,6 +133,100 @@ class Scheduler:
         self.swap_cost_fn = swap_cost_fn
         self.class_headroom = dict(class_headroom or {})
 
+    def configure_speculation(self, mode: str = "off", k: int = 4,
+                              adaptive: bool = True) -> None:
+        """Enable speculative verify-k decoding.  ``mode`` selects the
+        drafter the executor runs ("ngram" | "draft"; "off" disables);
+        ``k`` is the per-request draft budget ceiling; ``adaptive`` scales
+        the draft-model budget by a per-request acceptance EMA (n-gram
+        proposals are already self-limiting, so the EMA only gates the
+        draft-model path)."""
+        if mode not in ("off", "ngram", "draft"):
+            raise ValueError(f"unknown speculation mode {mode!r}")
+        if mode != "off" and k < 1:
+            raise ValueError("speculation needs k >= 1")
+        self.spec_mode = mode
+        self.spec_k = k if mode != "off" else 0
+        self.spec_adaptive = adaptive
+
+    def _spec_budget(self, r: Request) -> int:
+        """Draft budget for ``r`` this iteration: the configured k, shrunk
+        by the acceptance EMA (draft mode), and capped so the base token
+        plus every accepted draft can never exceed max_new_tokens."""
+        cap = r.max_new_tokens - r.n_generated - 1
+        if cap <= 0:
+            return 0
+        k = self.spec_k
+        if self.spec_adaptive and self.spec_mode == "draft":
+            ema = self._spec_ema.get(r.req_id, 1.0)
+            k = max(1, int(round(ema * self.spec_k)))
+        return min(k, cap)
+
+    def _spec_budgets(self) -> Dict[int, int]:
+        """Per-request draft budgets for this iteration's decode set, with
+        the verify window's worst-case KV pre-charged (``reserve_spec``).
+        Speculation is opportunistic: it never evicts — when the pool
+        cannot cover the full window the budget shrinks (possibly to 0)
+        instead, so spec on/off admission and eviction decisions are
+        identical."""
+        if self.spec_mode == "off":
+            return {}
+        budgets: Dict[int, int] = {}
+        decodes = sorted((r for r in self.requests.values()
+                          if r.state == RequestState.DECODE),
+                         key=lambda r: r.req_id)
+        for r in decodes:
+            k = self._spec_budget(r)
+            if k <= 0:
+                continue
+            if self.kv is not None:
+                base = r.prompt_len + r.n_generated - r.n_folded
+                while k > 0 and self.kv.growth_deficit(r.req_id, base + k) \
+                        > self.kv.n_free_pages:
+                    k -= 1
+                if k <= 0:
+                    continue
+                self.kv.reserve_spec(r.req_id, base + k)
+            budgets[r.req_id] = k
+        return budgets
+
+    def commit_speculation(self, req_id: int, *, proposed: int,
+                           accepted: int, extra: int,
+                           committed_len: Optional[int] = None) -> None:
+        """Executor feedback after verifying ``req_id``'s drafts:
+        ``proposed`` tokens were drafted, ``accepted`` matched the target
+        argmax, and ``extra`` tokens were emitted BEYOND the base decode
+        token (normally == accepted; EOS truncation can make it smaller).
+        Updates generation counters, the acceptance EMA, and trims the
+        speculative page reservation back to ``committed_len`` (the filled
+        KV length; inferred from the allocator record when omitted).  MUST
+        be called for every id in ``plan.verify_len`` — a 0-proposal call
+        is how the page pre-charge of a skipped row is released."""
+        r = self.requests[req_id]
+        if proposed > 0:
+            r.n_spec_rounds += 1
+            r.n_drafted += proposed
+            r.n_draft_accepted += accepted
+            r.accepted_lens.append(accepted)
+            ema = self._spec_ema.get(req_id, 1.0)
+            self._spec_ema[req_id] = 0.5 * ema + 0.5 * (accepted / proposed)
+        if extra > 0:
+            r.n_generated += extra
+            assert r.n_generated <= r.max_new_tokens, req_id
+            if r.n_generated >= r.max_new_tokens \
+                    and r.state == RequestState.DECODE:
+                r.state = RequestState.DONE
+        if self.kv is not None and self.kv.is_resident(req_id):
+            if r.state == RequestState.DONE:
+                self.kv.free(req_id)
+            else:
+                if committed_len is None:
+                    committed_len = self.kv.length(req_id) + extra
+                self.kv.grow_to(req_id, committed_len)
+                self.kv.release_spec(req_id)
+        if r.state == RequestState.DONE:
+            self._spec_ema.pop(req_id, None)
+
     def _headroom_for(self, slo_class: str) -> int:
         """Pages a request of ``slo_class`` must leave free at admission:
         the headroom reserved for every OTHER class."""
@@ -152,6 +253,7 @@ class Scheduler:
     def finish(self, req_id: int) -> None:
         """Executor signals EOS / client cancel before max_new_tokens."""
         self.requests[req_id].state = RequestState.DONE
+        self._spec_ema.pop(req_id, None)
         if self.kv is not None and self.kv.owns(req_id):
             self.kv.free(req_id)
 
@@ -414,11 +516,23 @@ class Scheduler:
         recompute-fold or swap-to-host), restore swapped requests within
         the DMA budget, then delegate iteration planning to ``_plan``."""
         preempted, swapped_out = self._reserve_decode_growth(now)
+        # draft budgets over the post-eviction decode set; requests swapped
+        # IN below decode plainly their first iteration back (their budget
+        # pass already ran)
+        spec = self._spec_budgets()
         swapped_in = self._readmit_swapped(now, exclude=swapped_out)
         plan = self._plan(now)
         plan.preempted_ids = preempted
         plan.swapped_out_ids = swapped_out
         plan.swapped_in_ids = swapped_in
+        if spec:
+            in_plan = set(plan.decode_ids)
+            plan.verify_len = {rid: k for rid, k in spec.items()
+                               if rid in in_plan}
+            if self.kv is not None:      # defensive: never strand a charge
+                for rid in spec:
+                    if rid not in in_plan:
+                        self.kv.release_spec(rid)
         return plan
 
     def _plan(self, now: float) -> IterationPlan:

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 
 class RequestState(enum.Enum):
@@ -66,6 +66,13 @@ class Request:
     n_swaps: int = 0
     swap_out_times: List[float] = field(default_factory=list)
     swap_in_times: List[float] = field(default_factory=list)
+    # speculative decoding bookkeeping (commit_speculation): rounds in which
+    # the executor actually proposed draft tokens, totals over proposed /
+    # accepted drafts, and the per-round accepted lengths (for p50/p90)
+    n_spec_rounds: int = 0
+    n_drafted: int = 0
+    n_draft_accepted: int = 0
+    accepted_lens: List[int] = field(default_factory=list)
     # metrics (filled by engine/simulator)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -133,6 +140,13 @@ class IterationPlan:
     # in DECODE state and appear in decode_ids — the executor must copy
     # their host KV back into device cache before the decode step
     swapped_in_ids: List[int] = field(default_factory=list)
+    # speculative decoding: req_id -> draft budget k for this iteration.
+    # The executor verifies up to k proposed tokens per listed request in
+    # one dispatch and MUST call scheduler.commit_speculation for every
+    # listed id afterwards (even with 0 proposals) so the speculative page
+    # reservation is released.  Requests absent from this dict decode one
+    # token exactly as before — an empty dict is the non-speculative plan.
+    verify_len: Dict[int, int] = field(default_factory=dict)
 
     @property
     def empty(self) -> bool:

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import (decode_attention_pallas,
-                                            paged_decode_attention_pallas)
+                                            paged_decode_attention_pallas,
+                                            paged_verify_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gmm import moe_gmm_pallas
 from repro.kernels.moe_gmm_ragged import moe_gmm_ragged_pallas
@@ -85,6 +86,21 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     are fixed-size by construction."""
     interpret = _auto_interpret() if interpret is None else interpret
     return paged_decode_attention_pallas(q, k_pages, v_pages, block_tables,
+                                         lengths, window=window,
+                                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_verify_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Speculative verify-k attention over the paged pool: ``q`` is a
+    (B, W, H, hd) window of W = k+1 query tokens per sequence (oldest
+    first) whose K/V have already been written; ``lengths`` counts valid
+    KV INCLUDING the window.  One KV stream per sequence serves the whole
+    window — the dispatch-amortization the speculative scheduler rides."""
+    interpret = _auto_interpret() if interpret is None else interpret
+    return paged_verify_attention_pallas(q, k_pages, v_pages, block_tables,
                                          lengths, window=window,
                                          interpret=interpret)
 

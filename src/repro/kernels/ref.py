@@ -75,6 +75,25 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     return decode_attention_ref(q, k, v, lengths, window=window, scale=scale)
 
 
+def paged_verify_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array, *,
+                               window: Optional[int] = None,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Oracle for the verify-window paged kernel: run the decode oracle
+    once per window position w with the causally-shrunk length
+    ``lengths - (W-1) + w``.  q: (B, W, H, hd); lengths include all W
+    window tokens' K/V -> (B, W, H, hd)."""
+    b, w_len = q.shape[0], q.shape[1]
+    outs = []
+    for w in range(w_len):
+        lens_w = lengths - (w_len - 1 - w)
+        outs.append(paged_decode_attention_ref(
+            q[:, w], k_pages, v_pages, block_tables, lens_w,
+            window=window, scale=scale))
+    return jnp.stack(outs, axis=1)
+
+
 def moe_gmm_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                 w_down: jax.Array) -> jax.Array:
     """x: (E,C,d) -> (E,C,d), fused SwiGLU per expert."""

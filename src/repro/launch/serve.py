@@ -112,7 +112,9 @@ def serve_real(args) -> None:
                  swap_in_budget=args.swap_in_budget,
                  decode_reserve=args.decode_reserve,
                  class_headroom=class_headroom_opt(args),
-                 packed=args.packed)
+                 packed=args.packed,
+                 spec_mode=args.spec, spec_k=args.spec_k,
+                 draft_config=args.draft_config)
     def _stream(rid, tok, t):
         print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
     on_token = _stream if args.stream else None
@@ -160,6 +162,19 @@ def serve_real(args) -> None:
           f"({eng.n_dispatches / max(eng.iteration, 1):.1f}/iter), "
           f"{eng.n_prefill_dispatches} prefill batches, "
           f"{eng.n_prefill_compiles} prefill executables")
+    if args.spec != "off":
+        acc = m["spec_acceptance_rate"]
+        tpd = (sum(r.n_generated for r in eng.requests.values())
+               / max(eng.n_dispatches, 1))
+        print(f"[serve] spec({args.spec}, k={args.spec_k}): "
+              f"{eng.n_spec_proposed} drafted, {eng.n_spec_accepted} "
+              f"accepted (rate {acc:.2f}); accepted len "
+              f"p50={m['accepted_len_p50']:.1f} "
+              f"p90={m['accepted_len_p90']:.1f}; "
+              f"{eng.n_verify_dispatches} verify + "
+              f"{eng.n_draft_dispatches} draft dispatches, "
+              f"{eng.n_verify_compiles} verify executables; "
+              f"{tpd:.2f} generated tokens/dispatch")
     if eng.alloc.n_host_pages:
         print(f"[serve] swap: {eng.n_swapped_out} out / "
               f"{eng.n_swapped_in} in; host pages high-water "
@@ -199,7 +214,9 @@ def serve_sim(args) -> None:
                     swap_in_budget=args.swap_in_budget,
                     decode_reserve=args.decode_reserve,
                     swap_overlap=not args.swap_serial,
-                    class_headroom=class_headroom_opt(args))
+                    class_headroom=class_headroom_opt(args),
+                    spec_mode=args.spec, spec_k=args.spec_k,
+                    spec_acceptance=args.spec_acceptance)
     res = sim.run(trace)
     slo = SLOConfig(args.ttft_slo, args.tbt_slo)
     m = request_metrics(res.requests, slo)
@@ -218,6 +235,12 @@ def serve_sim(args) -> None:
           f"high-water {res.pages_high_water}/{res.n_pool_pages}; "
           f"{res.n_preemptions} preemptions, "
           f"{res.recompute_tokens} recomputed tokens")
+    if args.spec != "off":
+        print(f"[serve-sim]   spec({args.spec})      "
+              f"{res.total_drafted} drafted / {res.total_accepted} accepted "
+              f"(rate {res.acceptance_rate:.2f}); accepted len "
+              f"p50={m['accepted_len_p50']:.1f} "
+              f"p90={m['accepted_len_p90']:.1f}")
     if res.n_host_pages:
         print(f"[serve-sim]   swap             "
               f"{res.n_swap_outs} out / {res.n_swap_ins} in; "
@@ -311,6 +334,23 @@ def main() -> None:
                     help="dropless MoE data path: ragged (sorted "
                          "tile-aligned buffer; traffic scales with routed "
                          "work) or dense (worst-case capacity buffer)")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative verify-k decoding: ngram (draft-free "
+                         "prompt/self-lookup) or draft (tiny draft model "
+                         "from --draft-config); greedy output streams are "
+                         "bit-identical to --spec off — speculation only "
+                         "changes tokens committed per dispatch")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max drafted tokens verified per request per "
+                         "iteration (draft mode adapts below this via the "
+                         "per-request acceptance EMA)")
+    ap.add_argument("--draft-config", default=None,
+                    help="config name whose smoke variant drafts for "
+                         "--spec draft (must share the target's vocab)")
+    ap.add_argument("--spec-acceptance", type=float, default=0.7,
+                    help="simulator only: per-token draft acceptance "
+                         "probability for the analytic verify-k model")
     ap.add_argument("--hw", default="h100x2", choices=["h100x2", "tpu_v5e"])
     ap.add_argument("--ttft-slo", type=float, default=10.0)
     ap.add_argument("--tbt-slo", type=float, default=0.125)

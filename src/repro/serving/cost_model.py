@@ -400,9 +400,19 @@ class CostModel:
         kv_bytes = 0.0
 
         n_dec = len(plan.decode_ids)
+        q_tokens = 0.0
         if n_dec:
-            tokens_per_block += n_dec
-            flops += n_dec * self._np_lin_cum[L]
+            # speculative verify-k widens the decode query per request to
+            # w_i = 1 + k_i tokens (plan.verify_len).  The acceptance
+            # amortization is structural: the extra query tokens join
+            # tokens_per_block, so each touched block's weight stream —
+            # and, for MoE, its expert coverage — is charged ONCE for the
+            # whole window instead of once per committed token.
+            ws = np.array([1.0 + plan.verify_len.get(r, 0)
+                           for r in plan.decode_ids], float)
+            q_tokens = float(ws.sum())
+            tokens_per_block += q_tokens
+            flops += q_tokens * self._np_lin_cum[L]
             # true KV length: the recompute prompt already contains the
             # n_folded generated tokens of any earlier preemption
             ctxs = np.array([requests[r].prompt_len + requests[r].n_generated
@@ -411,9 +421,11 @@ class CostModel:
             for w, prefix in self._attn_groups:
                 cnt = prefix[L]
                 eff = np.minimum(ctxs, w) if w else ctxs
+                # one KV pass per row regardless of window width (w_i <=
+                # k+1 << Q_TILE); attention flops scale with the width
                 total_eff = float(eff.sum())
                 kv_bytes += cnt * total_eff * self._kv_per_tok_block
-                flops += cnt * hd4 * total_eff
+                flops += cnt * hd4 * float((ws * eff).sum())
 
         act_bytes = 0.0
         for sl in plan.prefill:
@@ -463,7 +475,8 @@ class CostModel:
         emits = sum(1 for s_ in plan.prefill if s_.emits_first_token)
         if n_dec + emits > 0:
             weight_bytes += self._embed_bytes          # unembedding stream
-            flops += 2.0 * (n_dec + emits) * self._embed_bytes / self.bp
+            # every verify-window position is argmaxed, not just the last
+            flops += 2.0 * (q_tokens + emits) * self._embed_bytes / self.bp
 
         total_bytes = weight_bytes + kv_bytes + act_bytes
         t_compute = flops / self.hw.flops

@@ -59,6 +59,7 @@ from repro.models.model import DecoderModel
 from repro.serving.kvcache import PagedKVAllocator
 from repro.serving.runtime import (EngineExecutor, RunResult, ServingRuntime,
                                    TokenEvent, timestamp_events)
+from repro.serving.spec import NgramDrafter, accepted_prefix, build_draft_model
 
 Array = jax.Array
 
@@ -105,7 +106,11 @@ class Engine:
                  decode_reserve: Optional[int] = None,
                  class_headroom: Optional[Dict[str, int]] = None,
                  eos_token: Optional[int] = None, gmm_fn=None,
-                 moe_dispatch: str = "ragged", packed: bool = True):
+                 moe_dispatch: str = "ragged", packed: bool = True,
+                 spec_mode: str = "off", spec_k: int = 4,
+                 spec_adaptive: bool = True, spec_ngram_n: int = 3,
+                 draft_model: Optional[DecoderModel] = None,
+                 draft_params=None, draft_config: Optional[str] = None):
         """``moe_dispatch`` selects the dropless MoE data path: "ragged"
         (default — expert-sorted tile-aligned buffer, compute/traffic scale
         with the routed work) or "dense" (worst-case (E, T, d) capacity
@@ -129,7 +134,17 @@ class Engine:
         of the plan's prefill slices); ``packed=False`` executes every
         slice as its own batch of one — the reference path the
         equivalence tests and ``benchmarks/engine_iter_bench.py`` compare
-        against."""
+        against.
+
+        ``spec_mode`` enables speculative verify-k decoding ("ngram" =
+        draft-free prompt/self-lookup; "draft" = a tiny stateless draft
+        model — pass ``draft_model``/``draft_params`` directly or name a
+        registered config via ``draft_config``).  ``spec_k`` caps the
+        per-request draft budget; ``spec_adaptive`` lets a per-request
+        acceptance EMA shrink the draft-model budget.  Greedy token
+        streams are bit-identical to ``spec_mode="off"`` — speculation
+        only changes how many tokens each dispatch commits (DESIGN.md
+        §Speculative decode)."""
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -166,6 +181,32 @@ class Engine:
         self.max_len = max_len
         self.eos_token = eos_token
         self.gmm_fn = gmm_fn
+
+        # speculative verify-k decoding (DESIGN.md §Speculative decode)
+        if spec_mode not in ("off", "ngram", "draft"):
+            raise ValueError(f"unknown spec_mode {spec_mode!r}")
+        self.spec_mode = spec_mode
+        self.spec_k = spec_k
+        self.drafter = NgramDrafter(spec_ngram_n) \
+            if spec_mode == "ngram" else None
+        self.draft_model: Optional[DecoderModel] = None
+        self.draft_params = None
+        if spec_mode == "draft":
+            if draft_model is not None:
+                self.draft_model, self.draft_params = draft_model, \
+                    draft_params
+            elif draft_config is not None:
+                self.draft_model, self.draft_params = build_draft_model(
+                    draft_config, self.cfg.vocab_size)
+            else:
+                raise ValueError(
+                    "spec_mode='draft' needs draft_model/draft_params or a "
+                    "draft_config name")
+            if self.draft_model.cfg.vocab_size != self.cfg.vocab_size:
+                raise ValueError("draft model must share the target vocab")
+        if spec_mode != "off":
+            self.scheduler.configure_speculation(spec_mode, spec_k,
+                                                 adaptive=spec_adaptive)
         # physical slot rows (the contiguous per-request realization of the
         # logical block tables; see DESIGN.md §Hardware adaptation)
         self._free_slots = list(range(n_slots))[::-1]
@@ -205,6 +246,17 @@ class Engine:
         self.n_dispatches = 0
         self.n_prefill_dispatches = 0
         self.n_prefill_compiles = 0
+        # speculative-decode accounting: verify/draft executables live in
+        # the SAME bounded LRU as prefill executables (a growing family of
+        # k buckets must not grow live executables past the bound)
+        self.n_verify_dispatches = 0
+        self.n_verify_compiles = 0
+        self.n_draft_dispatches = 0
+        self.n_spec_proposed = 0
+        self.n_spec_accepted = 0
+        # per-iteration record of what was ACTUALLY verified (rid -> k_eff;
+        # may be smaller than plan.verify_len when a drafter found nothing)
+        self.last_verify_executed: Dict[int, int] = {}
 
         self._jit_embed = {}
         self._jit_prefill: OrderedDict = OrderedDict()   # LRU, bounded
@@ -326,6 +378,84 @@ class Engine:
             self._jit_embed["f"] = jax.jit(self._embed_impl)
         return self._jit_embed["f"]
 
+    def _verify_impl(self, params, cache, tokens, valid, slots, offset):
+        """Verify-k window for a cohort of drafting slots in ONE call:
+        ``tokens`` (B, P) holds per row [last_tok, d_1..d_k, pad...] fed at
+        positions offset..offset+P-1 through the FULL stack.  Row j of the
+        returned argmax grid is the target's greedy token AFTER window
+        position j — the host accepts the matching draft prefix.  KV for
+        the whole window is written through the donated-buffer path;
+        *rollback* past the first rejection is free: attention masks KV by
+        the committed offset (``kv_valid = pos < offset + s``), so the
+        stale tail beyond what the host commits is never read and is
+        overwritten by a later window.  Padding rows (slot id == n_slots,
+        valid all-False) are no-ops end to end."""
+        rows = gather_slot_rows(cache, slots)
+        positions = offset[:, None] + jnp.arange(tokens.shape[1],
+                                                 dtype=jnp.int32)[None]
+        hidden = self.model.embed(params, tokens, positions=positions)
+        x, rows, auxes = self.model.run_blocks(
+            params, hidden, 0, self.model.n_blocks,
+            positions=positions, offset=offset, cache=rows, valid=valid,
+            gmm_fn=self.gmm_fn, dropless=True,
+            moe_dispatch=self.moe_dispatch)
+        cache = scatter_slot_rows(cache, rows, slots)
+        loads = jnp.stack([a["expert_counts"] > 0 for a in auxes])
+        logits = self.model.logits(params, x)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B, P)
+        return cache, loads, toks
+
+    def _get_verify_fn(self, b: int, p: int):
+        """Verify executables join the prefill LRU under ("verify", B, P)
+        keys — bucketed k means adaptive speculation lengths reuse a small
+        executable family, and the shared PREFILL_CACHE_SIZE bound counts
+        them like any other live executable."""
+        key = ("verify", b, p)
+        if key in self._jit_prefill:
+            self._jit_prefill.move_to_end(key)
+        else:
+            self._jit_prefill[key] = jax.jit(self._verify_impl,
+                                             donate_argnums=(1,))
+            self.n_verify_compiles += 1
+            while len(self._jit_prefill) > PREFILL_CACHE_SIZE:
+                self._jit_prefill.popitem(last=False)
+        return self._jit_prefill[key]
+
+    def _draft_impl(self, k, params, tokens, lengths):
+        """Greedy k-step extension by the STATELESS draft model, one jitted
+        ``lax.scan``: each step re-runs the draft over the (padded) full
+        history — no draft KV cache exists, so preemption/fold/swap need
+        zero draft-side bookkeeping.  Proposals stay on device (the verify
+        window consumes them directly); their values ride the single
+        end-of-iteration fetch."""
+        n_pos = tokens.shape[1]
+
+        def step(state, _):
+            toks, lens = state
+            logits, _, _ = self.draft_model.forward(params, toks)
+            nxt = jnp.take_along_axis(logits, (lens - 1)[:, None, None],
+                                      axis=1)[:, 0]
+            tok = jnp.argmax(nxt, axis=-1).astype(jnp.int32)
+            toks = jnp.where(jnp.arange(n_pos, dtype=jnp.int32)[None]
+                             == lens[:, None], tok[:, None], toks)
+            return (toks, lens + 1), tok
+
+        (_, _), props = jax.lax.scan(step, (tokens, lengths), None, length=k)
+        return jnp.transpose(props)                              # (B, k)
+
+    def _get_draft_fn(self, k: int, b: int, p: int):
+        """Draft executables share the bounded prefill LRU too."""
+        key = ("draft", k, b, p)
+        if key in self._jit_prefill:
+            self._jit_prefill.move_to_end(key)
+        else:
+            self._jit_prefill[key] = jax.jit(
+                functools.partial(self._draft_impl, k))
+            self.n_verify_compiles += 1
+            while len(self._jit_prefill) > PREFILL_CACHE_SIZE:
+                self._jit_prefill.popitem(last=False)
+        return self._jit_prefill[key]
+
     # -------------------------------------------------------------- stepping
 
     def step(self) -> IterationPlan:
@@ -373,14 +503,25 @@ class Engine:
         launched = [self._launch_prefill_group(*g) for g in groups]
         prefill_tokens = sum(sl.n_tokens for sl in plan.prefill)
 
+        # speculative verify-k: draft + verify are LAUNCHED here (device
+        # arrays only); rows the drafter skipped fall through to the plain
+        # decode step below
+        spec_rows, spec_skipped, spec_fetch = [], [], None
+        if plan.verify_len and self.spec_mode != "off":
+            spec_rows, spec_skipped, spec_fetch = self._launch_verify(plan)
+        spec_rids = {rid for rid, _, _, _, _ in spec_rows}
+
         decode_slot_req = decode_out = None
-        if plan.decode_ids:
-            decode_slot_req, decode_out = self._launch_decode(plan.decode_ids)
+        plain_ids = [rid for rid in plan.decode_ids if rid not in spec_rids]
+        if plain_ids:
+            decode_slot_req, decode_out = self._launch_decode(plain_ids)
 
         # ---- the ONE host sync per iteration ----
-        if launched or decode_out is not None or swap_pending:
-            launched, decode_out, swap_rows = jax.device_get(
-                (launched, decode_out, [row for _, row in swap_pending]))
+        if launched or decode_out is not None or swap_pending \
+                or spec_fetch is not None:
+            launched, decode_out, spec_fetch, swap_rows = jax.device_get(
+                (launched, decode_out, spec_fetch,
+                 [row for _, row in swap_pending]))
             for (rid, _), row in zip(swap_pending, swap_rows):
                 self.host_kv[rid] = (row,) + self.host_kv[rid][1:]
 
@@ -389,6 +530,13 @@ class Engine:
             block_expert_union[start:end] |= loads
             for i, sl in enumerate(slices):
                 self._finish_prefill_slice(sl, int(toks[i]))
+        n_verify_tokens = n_spec_accepted = 0
+        self.last_verify_executed = {}
+        if spec_fetch is not None:
+            loads, toks, props = spec_fetch
+            block_expert_union |= loads
+            n_verify_tokens, n_spec_accepted = self._finish_verify(
+                spec_rows, toks, props)
         if decode_out is not None:
             next_tok, loads = decode_out
             block_expert_union |= loads
@@ -398,6 +546,11 @@ class Engine:
                 self.last_tok[slot] = tok
                 self._record_token(rid, tok, first=False)
                 self._maybe_finish(rid, tok)
+        for rid in spec_skipped:
+            # a 0-proposal commit releases the scheduler's page pre-charge
+            self.last_verify_executed[rid] = 0
+            self.scheduler.commit_speculation(rid, proposed=0, accepted=0,
+                                              extra=0)
 
         if self.cfg.moe.enabled:
             loaded = int(block_expert_union.sum())
@@ -414,6 +567,9 @@ class Engine:
             "n_swapped_out": len(plan.swapped_out_ids),
             "n_swapped_in": len(plan.swapped_in_ids),
             "n_dispatches": self.n_dispatches - dispatches0,
+            "n_verify_tokens": n_verify_tokens,
+            "n_spec_accepted": n_spec_accepted,
+            "n_spec_rows": len(spec_rows),
         })
         self.iteration += 1
         return self._step_events
@@ -612,6 +768,124 @@ class Engine:
             self._maybe_finish(rid, tok, after_first=True)
             if req.state == RequestState.DECODE:
                 self.decoding[slot] = True
+
+    def _history(self, rid: int) -> np.ndarray:
+        """Full token sequence so far (recompute prompt + the generated
+        tail not yet folded into it); its last element is last_tok and its
+        length is offsets[slot] + 1."""
+        req = self.requests[rid]
+        tail = self.outputs[rid][req.n_folded:]
+        return np.concatenate([self.prompts[rid],
+                               np.asarray(tail, np.int32)])
+
+    def _launch_verify(self, plan: IterationPlan):
+        """Launch the drafting cohort's verify window (plus, in draft mode,
+        the draft-model scan that feeds it); returns host row metadata
+        (rid, slot, offset, k_eff), the ids that fell back to plain decode
+        this iteration, and the device arrays for the one fetch.
+
+        Window safety: per-row KV writes cover offset..offset+P-1 (the
+        BUCKETED window — ``_write_cache`` clamps out-of-range starts, so a
+        window that would spill past max_len must not launch).  Rows where
+        the worst-case bucket does not fit fall back to plain decode."""
+        budgets = sorted(plan.verify_len.items())
+        p_worst = _bucket(self.spec_k + 1, minimum=2, cap=self.spec_k + 1)
+        rows: List[Tuple[int, int, int, int, Optional[np.ndarray]]] = []
+        skipped: List[int] = []
+        for rid, k in budgets:
+            slot = self._slot_of[rid]
+            off = int(self.offsets[slot])
+            if off + p_worst > self.max_len:
+                skipped.append(rid)
+                continue
+            if self.spec_mode == "ngram":
+                prop = self.drafter.propose(self._history(rid), k)
+                if len(prop) == 0:
+                    skipped.append(rid)
+                    continue
+                rows.append((rid, slot, off, len(prop),
+                             prop.astype(np.int32)))
+            else:
+                rows.append((rid, slot, off, k, None))
+        if not rows:
+            return [], skipped, None
+
+        k_max = max(k_eff for _, _, _, k_eff, _ in rows)
+        p = _bucket(k_max + 1, minimum=2, cap=self.spec_k + 1)
+        b_pad = _bucket(len(rows), minimum=1, cap=self.n_slots)
+        tokens = np.zeros((b_pad, p), np.int32)
+        valid = np.zeros((b_pad, p), bool)
+        slots = np.full(b_pad, self.n_slots, np.int32)  # OOB: writes dropped
+        offs = np.zeros(b_pad, np.int32)
+        for i, (rid, slot, off, k_eff, prop) in enumerate(rows):
+            tokens[i, 0] = self.last_tok[slot]
+            if prop is not None:
+                tokens[i, 1:1 + k_eff] = prop
+            valid[i, :k_eff + 1] = True
+            slots[i] = slot
+            offs[i] = off
+
+        props_dev = None
+        if self.spec_mode == "draft":
+            hists = [self._history(rid) for rid, _, _, _, _ in rows]
+            p_hist = _bucket(max(len(h) for h in hists) + k_max,
+                             cap=self.max_len + self.spec_k)
+            hist_toks = np.zeros((b_pad, p_hist), np.int32)
+            hist_lens = np.ones(b_pad, np.int32)
+            for i, h in enumerate(hists):
+                hist_toks[i, :len(h)] = h
+                hist_lens[i] = len(h)
+            draft_fn = self._get_draft_fn(k_max, b_pad, p_hist)
+            props_dev = draft_fn(self.draft_params, jnp.asarray(hist_toks),
+                                 jnp.asarray(hist_lens))
+            self.n_dispatches += 1
+            self.n_draft_dispatches += 1
+            # splice the device proposals into the window without a sync
+            tok_dev = jnp.asarray(tokens)
+            tok_dev = jax.lax.dynamic_update_slice(
+                tok_dev, props_dev.astype(jnp.int32), (0, 1))
+        else:
+            tok_dev = jnp.asarray(tokens)
+
+        fn = self._get_verify_fn(b_pad, p)
+        self.cache, loads, toks = fn(
+            self.params, self.cache, tok_dev, jnp.asarray(valid),
+            jnp.asarray(slots), jnp.asarray(offs))
+        self.n_dispatches += 1
+        self.n_verify_dispatches += 1
+        return rows, skipped, (loads, toks, props_dev)
+
+    def _finish_verify(self, rows, toks, props) -> Tuple[int, int]:
+        """Host bookkeeping for the fetched verify grid: accept the
+        matching draft prefix, emit accepted drafts plus the target's own
+        next token, advance the committed offset (the rollback — stale KV
+        past it is dead), and feed acceptance back to the scheduler."""
+        n_proposed = n_accepted = 0
+        for i, (rid, slot, off, k_eff, prop) in enumerate(rows):
+            if prop is None:
+                prop = np.asarray(props[i, :k_eff])
+            tgt = np.asarray(toks[i])
+            a = accepted_prefix(prop[:k_eff], tgt[:k_eff])
+            emitted = [int(t) for t in prop[:a]] + [int(tgt[a])]
+            if self.eos_token is not None:
+                for j, t in enumerate(emitted):
+                    if t == self.eos_token:
+                        emitted = emitted[:j + 1]
+                        break
+            self.offsets[slot] = off + len(emitted)
+            self.last_tok[slot] = emitted[-1]
+            for t in emitted:
+                self._record_token(rid, t, first=False)
+            n_proposed += k_eff
+            n_accepted += a
+            self.n_spec_proposed += k_eff
+            self.n_spec_accepted += a
+            self.last_verify_executed[rid] = k_eff
+            self.scheduler.commit_speculation(
+                rid, proposed=k_eff, accepted=a, extra=len(emitted) - 1,
+                committed_len=int(self.offsets[slot]))
+            self._maybe_finish(rid, emitted[-1])
+        return n_proposed, n_accepted
 
     def _launch_decode(self, decode_ids: List[int]):
         """Launch the full-pool decode step; returns the slot→request map

@@ -68,6 +68,8 @@ class PagedKVAllocator:
     _stash: Dict[int, List[int]] = field(default_factory=dict)   # req -> pages
     _host_free: List[int] = field(default_factory=list)
     _host_tables: Dict[int, List[int]] = field(default_factory=dict)
+    # speculative pre-charge: req -> table size before reserve_spec
+    _spec_base: Dict[int, int] = field(default_factory=dict)
     pages_high_water: int = 0
     host_pages_high_water: int = 0
     n_grow_allocs: int = 0
@@ -182,6 +184,49 @@ class PagedKVAllocator:
         self._free.extend(reversed(self._stash.pop(req_id, [])))
         self._stash[req_id] = []
 
+    # -- speculative decode reservations --------------------------------------
+    #
+    # Verify-k decoding may commit anywhere from 1 to 1+k tokens per
+    # iteration.  The scheduler pre-charges pages for the FULL window
+    # (``reserve_spec``) without recording a filled length — the length is
+    # only known post-verification — and the executor's commit trims the
+    # table back to the accepted length (``release_spec``), so a rejected
+    # draft leaves no page behind.  Speculation is opportunistic: it never
+    # evicts anybody, it just shrinks k when the pool is dry.
+
+    def reserve_spec(self, req_id: int, n_tokens: int) -> None:
+        """Pre-charge pages so the block table covers ``n_tokens`` WITHOUT
+        recording a filled length.  Remembers the pre-speculation table
+        size so ``release_spec`` can trim back exactly."""
+        assert req_id in self._tables, req_id
+        if req_id not in self._spec_base:
+            self._spec_base[req_id] = len(self._tables[req_id])
+        deficit = self.growth_deficit(req_id, n_tokens)
+        if deficit > len(self._free):
+            raise PagedPoolExhausted(
+                f"reserve_spec({req_id}, {n_tokens}): need {deficit} pages, "
+                f"{len(self._free)} free of {self.n_pages}")
+        for _ in range(deficit):
+            self._tables[req_id].append(self._free.pop())
+        if deficit:
+            self._bump_high_water()
+
+    def release_spec(self, req_id: int) -> None:
+        """Trim the speculative pre-charge back to what the committed
+        length (set via ``grow_to``/``set_length`` since) actually needs —
+        never below the pre-speculation table size.  No-op for requests
+        without an outstanding ``reserve_spec``."""
+        base = self._spec_base.pop(req_id, None)
+        if base is None or req_id not in self._tables:
+            return
+        keep = max(base, self.pages_for(self._lengths[req_id]))
+        table = self._tables[req_id]
+        while len(table) > keep:
+            self._free.append(table.pop())
+
+    def has_spec_reservation(self, req_id: int) -> bool:
+        return req_id in self._spec_base
+
     def free(self, req_id: int) -> None:
         """Return every page (KV + stash, HBM or host) of ``req_id``."""
         assert self.owns(req_id), req_id
@@ -189,6 +234,7 @@ class PagedKVAllocator:
         self._free.extend(reversed(self._stash.pop(req_id, [])))
         self._host_free.extend(reversed(self._host_tables.pop(req_id, [])))
         self._lengths.pop(req_id, None)
+        self._spec_base.pop(req_id, None)
 
     # -- swap-to-host ---------------------------------------------------------
 

@@ -81,6 +81,19 @@ def request_metrics(requests: Iterable[Request],
     out["restore_latency_mean"] = sum(restores) / len(restores) \
         if restores else float("nan")
     out["restore_latency_p99"] = percentile(restores, 99)
+    # speculative decode: acceptance rate over all drafted tokens, and the
+    # distribution of per-round accepted prefix lengths (0 when a round's
+    # first draft already missed)
+    n_drafted = sum(r.n_drafted for r in reqs)
+    n_accepted = sum(r.n_draft_accepted for r in reqs)
+    out["spec_drafted"] = float(n_drafted)
+    out["spec_acceptance_rate"] = n_accepted / n_drafted if n_drafted \
+        else float("nan")
+    acc_lens: List[float] = []
+    for r in reqs:
+        acc_lens.extend(float(a) for a in r.accepted_lens)
+    out["accepted_len_p50"] = percentile(acc_lens, 50)
+    out["accepted_len_p90"] = percentile(acc_lens, 90)
     if slo is not None:
         att = [slo.attained(r) for r in reqs]
         out["slo_attainment"] = sum(att) / len(att) if att else float("nan")

@@ -294,6 +294,8 @@ class SimExecutor:
         self.swap_bytes = 0.0
         self.swap_dma_time = 0.0       # host-link busy time, both directions
         self.swap_stall_time = 0.0     # the part compute could not hide
+        self.total_drafted = 0         # speculative decode accounting
+        self.total_accepted = 0
 
     def submit(self, tr: "TraceRequest", now: float) -> Request:
         req = Request(req_id=self._next_id, prompt_len=tr.prompt_len,
@@ -331,6 +333,20 @@ class SimExecutor:
         events = [TokenEvent(sl.req_id, None, first=True)
                   for sl in plan.prefill if sl.emits_first_token]
         events += [TokenEvent(rid, None) for rid in plan.decode_ids]
+        # speculative verify-k: analytic acceptance — a run of consecutive
+        # Bernoulli(spec_acceptance) successes capped at the budget (the
+        # simulator has no tokens to verify); deterministic given the
+        # simulator's seed and the sorted commit order.  Priced above via
+        # plan.verify_len; committed here AFTER pricing so the cost sees
+        # pre-commit context lengths, like the engine.
+        for rid in sorted(plan.verify_len):
+            k = plan.verify_len[rid]
+            a = sim.draw_accepted(k)
+            self.total_drafted += k
+            self.total_accepted += a
+            self.scheduler.commit_speculation(rid, proposed=k, accepted=a,
+                                              extra=a)
+            events += [TokenEvent(rid, None)] * a
         return StepOutcome(duration=cost["duration"] + stall, events=events)
 
     def idle(self, t: float, until: float) -> float:

@@ -21,6 +21,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.base import Scheduler, make_scheduler
 from repro.core.plan import Request
 from repro.models.config import ModelConfig
@@ -55,6 +57,14 @@ class SimResult:
     #                                serial model is selected)
     host_pages_high_water: int = 0
     n_host_pages: int = 0
+    # speculative decode accounting (analytic acceptance)
+    total_drafted: int = 0
+    total_accepted: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.total_accepted / self.total_drafted \
+            if self.total_drafted else float("nan")
 
     @property
     def total_tokens(self) -> int:
@@ -85,6 +95,9 @@ class Simulator:
                  decode_reserve: Optional[int] = None,
                  swap_overlap: bool = True,
                  class_headroom: Optional[Dict[str, int]] = None,
+                 spec_mode: str = "off", spec_k: int = 4,
+                 spec_adaptive: bool = True,
+                 spec_acceptance: float = 0.7, spec_seed: int = 0,
                  **sched_kw):
         """The simulator shares the scheduler's ``PagedKVAllocator`` so page
         occupancy, queueing delay, preemption counts and recompute/swap cost
@@ -99,7 +112,15 @@ class Simulator:
         DMA as overlappable with the iteration's compute (stall =
         max(0, dma - compute)); False restores the PR-3 fully-serial stall
         for comparison.  ``class_headroom`` reserves admission pages per
-        SLO class (see core.base.Scheduler.attach_kv)."""
+        SLO class (see core.base.Scheduler.attach_kv).
+
+        ``spec_mode``/``spec_k`` enable speculative verify-k decoding in
+        the planned iterations; the simulator has no tokens, so acceptance
+        is ANALYTIC — a run of consecutive Bernoulli(``spec_acceptance``)
+        successes per verify window, seeded by ``spec_seed`` (token
+        counts and durations are deterministic per seed).  The cost model
+        prices each window's extra decode-query tokens and the MoE
+        expert-load amortization they ride on."""
         self.cfg = cfg
         if isinstance(scheduler, str):
             scheduler = make_scheduler(scheduler, cfg.n_layers, **sched_kw)
@@ -123,6 +144,19 @@ class Simulator:
                                  swap_cost_fn=swap_cost_fn,
                                  class_headroom=class_headroom)
         self.swap_overlap = swap_overlap
+        if spec_mode != "off":
+            self.scheduler.configure_speculation(spec_mode, spec_k,
+                                                 adaptive=spec_adaptive)
+        self.spec_acceptance = spec_acceptance
+        self._spec_rng = np.random.default_rng(spec_seed)
+
+    def draw_accepted(self, k: int) -> int:
+        """Consecutive-success draw: each of the k drafts is accepted with
+        probability ``spec_acceptance`` GIVEN every earlier one was."""
+        a = 0
+        while a < k and self._spec_rng.random() < self.spec_acceptance:
+            a += 1
+        return a
 
     def run(self, trace: List[TraceRequest],
             max_iterations: int = 2_000_000, *,
@@ -155,4 +189,6 @@ class Simulator:
             swap_stall_time=ex.swap_stall_time,
             host_pages_high_water=self.kv.host_pages_high_water,
             n_host_pages=self.kv.n_host_pages,
+            total_drafted=ex.total_drafted,
+            total_accepted=ex.total_accepted,
         )

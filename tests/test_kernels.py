@@ -206,6 +206,79 @@ def test_paged_matches_contiguous_decode_via_allocator_tables():
                                atol=2e-5, rtol=2e-5)
 
 
+# ------------------------------------------------------ paged verify attn
+
+VERIFY_SWEEP = [
+    # (B, W, H, Hkv, hd, page_size, n_pages, max_pages)
+    (3, 3, 4, 2, 64, 16, 24, 6),
+    (2, 5, 8, 1, 32, 8, 40, 10),     # MQA, small pages, k=4 window
+    (1, 2, 4, 4, 128, 32, 8, 4),     # MHA, MXU-width head
+    (4, 4, 4, 2, 64, 16, 20, 4),     # tight pool, short sequences
+]
+
+
+def _verify_tables(rng, b, w, page_size, n_pages, max_pages):
+    """Like _ragged_block_tables but lengths always cover the W-token
+    window (the engine writes the window's K/V before verifying)."""
+    lengths = rng.integers(w, max_pages * page_size + 1, size=b)
+    bt = np.zeros((b, max_pages), np.int32)
+    perm = rng.permutation(n_pages)
+    k = 0
+    for i in range(b):
+        n = -(-int(lengths[i]) // page_size)
+        bt[i, :n] = perm[k:k + n]
+        k += n
+    assert k <= n_pages, "sweep entry overcommits the page pool"
+    return jnp.asarray(lengths, jnp.int32), jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,w,h,hkv,hd,page,npages,maxp", VERIFY_SWEEP)
+def test_paged_verify_attention(b, w, h, hkv, hd, page, npages, maxp, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(b * hd + w), 3)
+    q = _rand(ks[0], (b, w, h, hd), dtype)
+    kp = _rand(ks[1], (npages, page, hkv, hd), dtype)
+    vp = _rand(ks[2], (npages, page, hkv, hd), dtype)
+    lengths, bt = _verify_tables(
+        np.random.default_rng(b * page + w), b, w, page, npages, maxp)
+    got = ops.paged_verify_attention(q, kp, vp, bt, lengths, interpret=True)
+    want = ref.paged_verify_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_verify_window_one_matches_decode():
+    """W=1 degenerates to plain paged decode — same numbers, not merely
+    close: both kernels must agree bit-for-bit on the single-query path
+    (the spec-off equivalence the engine relies on)."""
+    b, h, hkv, hd, page, npages, maxp = 3, 4, 2, 64, 16, 24, 6
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = _rand(ks[0], (b, h, hd), jnp.float32)
+    kp = _rand(ks[1], (npages, page, hkv, hd), jnp.float32)
+    vp = _rand(ks[2], (npages, page, hkv, hd), jnp.float32)
+    lengths, bt = _ragged_block_tables(
+        np.random.default_rng(9), b, page, npages, maxp)
+    got = ops.paged_verify_attention(q[:, None], kp, vp, bt, lengths,
+                                     interpret=True)[:, 0]
+    want = ops.paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_verify_attention_windowed():
+    b, w, h, hkv, hd, page, npages, maxp = 2, 3, 4, 2, 64, 16, 16, 5
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = _rand(ks[0], (b, w, h, hd), jnp.float32)
+    kp = _rand(ks[1], (npages, page, hkv, hd), jnp.float32)
+    vp = _rand(ks[2], (npages, page, hkv, hd), jnp.float32)
+    lengths, bt = _verify_tables(
+        np.random.default_rng(6), b, w, page, npages, maxp)
+    got = ops.paged_verify_attention(q, kp, vp, bt, lengths, window=24,
+                                     interpret=True)
+    want = ref.paged_verify_attention_ref(q, kp, vp, bt, lengths, window=24)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ----------------------------------------------------------------- moe gmm
 
 GMM_SWEEP = [
