@@ -13,15 +13,24 @@ Schema v2 adds the DECODE path: speculative verify-k rows (spec off vs
 on, two traces) with generated tokens per device dispatch, mean accepted
 prefix length, and verify-executable compile counts — plus a cross-check
 that the cost model's acceptance-adjusted expert-load prediction tracks
-the engine's real ``iter_log`` expert-byte counters.  All v1 fields
-(columns, rows, checks, soft_checks, pass) are kept unchanged.
+the engine's real ``iter_log`` expert-byte counters.
+
+Schema v3 adds the PREFIX-CACHE path: open-loop replays of a
+shared-prefix trace (Zipf reuse over a handful of system prompts) and a
+zero-reuse control, cache on vs off, under both preemption flavours —
+reporting TTFT, prefill dispatches saved, iter_log expert-load bytes,
+and the token-weighted hit rate, plus a hit-aware cost-model cross-check
+(the model prices only the uncached prefill rectangles, same commit path
+as the fig3 sweeps).  All v1/v2 fields are kept unchanged.
 
 Emits a strict-JSON result in the BENCH-trajectory schema
-(``schema: "bench-trajectory-v2"`` — rows + columns + checks) so future
+(``schema: "bench-trajectory-v3"`` — rows + columns + checks) so future
 PRs can track the perf curve; CI's bench-smoke lane runs
 ``--smoke --spec ngram`` and fails if the packed path ever dispatches
-more executables than the per-slice path, or if speculation stops
-amortizing dispatches on the lookahead-friendly trace.
+more executables than the per-slice path, if speculation stops
+amortizing dispatches on the lookahead-friendly trace, if the
+shared-prefix trace stops hitting the cache, or if caching costs ANY
+extra prefill dispatch on the zero-reuse control.
 """
 
 from __future__ import annotations
@@ -39,6 +48,9 @@ from repro.models.config import ModelConfig, MoEConfig
 from repro.models.model import DecoderModel
 from repro.serving.cost_model import H100X2, CostModel
 from repro.serving.engine import Engine
+from repro.serving.metrics import request_metrics
+from repro.serving.runtime import EngineExecutor, ServingRuntime
+from repro.serving.traffic import attach_prompt_tokens, shared_prefix_trace
 
 N_SLOTS = 8
 MAX_LEN = 256
@@ -251,6 +263,124 @@ def run_cost_check(smoke: bool, spec: str) -> dict:
             "ratio": ratio}
 
 
+# ------------------------------------------------------------ prefix cache
+
+PREFIX_COLUMNS = ["config", "trace", "mode", "prefix_cache", "n_requests",
+                  "n_iterations", "ttft_mean", "prefill_tokens",
+                  "prefill_dispatches", "dispatches_saved", "expert_load_mb",
+                  "prefix_hit_rate", "cached_tokens", "n_preempted",
+                  "n_swapped_out"]
+
+PFX_PAGE = 16                  # KV page size for the prefix-cache rows
+
+
+def _cfg_moe_wide() -> ModelConfig:
+    """4-layer top-1-of-16 MoE: coverage stays token-count sensitive at
+    bench scale (16 experts, 1 routed draw per token), so skipping the
+    cached prefix tokens visibly cuts expert-load bytes — the regime the
+    paper's layered-prefill expert accounting cares about.  Four blocks
+    also give the layered scheduler a real group count to shrink: a cold
+    120-token prompt at quantum 16 prefills over 4 iterations, a cached
+    one over 1."""
+    return ModelConfig(
+        name="bench-moe-wide", family="moe", n_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+        max_seq_len=MAX_LEN,
+        moe=MoEConfig(n_experts=16, top_k=1, expert_d_ff=32)).validate()
+
+
+def _prefix_trace(kind: str, smoke: bool, seed: int = 3,
+                  output_len: int = 2, rate: float = 0.6,
+                  prefix_pages: int = 12):
+    """Shared-prefix workload (two system prompts of ``prefix_pages``
+    KV pages + 4 fresh suffix tokens => ~98% token reuse within a prefix
+    at the default 192+4) or the zero-reuse control with identical
+    arrivals and shapes but fresh random prompts ("unique" — the
+    no-regression baseline).  The default rate puts the COLD run right at
+    its service capacity so the cache's faster prefill also drains the
+    queue — the TTFT contrast production prefix reuse buys."""
+    trace = shared_prefix_trace(
+        16 if smoke else 28, n_prefixes=2,
+        prefix_len=prefix_pages * PFX_PAGE,
+        suffix_len=PFX_PAGE // 4, output_len=output_len, rate=rate,
+        zipf_alpha=1.0, vocab_size=200, seed=seed)
+    if kind == "unique":
+        trace = attach_prompt_tokens(trace, 200, seed=seed + 1)
+    return trace
+
+
+def run_prefix(cfg: ModelConfig, model, params, trace_name: str, trace,
+               cache_on: bool, mode: str, pages=None,
+               decode_reserve=None) -> dict:
+    """Open-loop replay (iteration clock — deterministic on CPU) of one
+    trace through a fresh engine; TTFT is in iterations, expert bytes sum
+    the real per-iteration ``iter_log`` counters."""
+    sched = make_scheduler("layered", model.n_blocks, n_slots=4,
+                           quantum=PFX_PAGE, token_budget=512)
+    eng = Engine(model, params, sched, n_slots=4, max_len=MAX_LEN,
+                 packed=True, pages=pages, page_size=PFX_PAGE,
+                 preemption=True, preemption_mode=mode,
+                 host_pages=4 * pages if pages and mode == "swap" else None,
+                 decode_reserve=decode_reserve,
+                 prefix_cache=cache_on)
+    runtime = ServingRuntime(EngineExecutor(eng), clock="iteration")
+    runtime.run(trace, max_iterations=20_000)
+    m = request_metrics(eng.requests.values())
+    return {
+        "config": cfg.name, "trace": trace_name, "mode": mode,
+        "prefix_cache": cache_on, "n_requests": len(trace),
+        "n_iterations": eng.iteration,
+        "ttft_mean": m["ttft_mean"],
+        "prefill_tokens": sum(r["prefill_tokens"] for r in eng.iter_log),
+        "prefill_dispatches": eng.n_prefill_dispatches,
+        "dispatches_saved": 0,     # filled against the cache-off pair row
+        "expert_load_mb": sum(r["expert_load_bytes"]
+                              for r in eng.iter_log) / 1e6,
+        "prefix_hit_rate": m["prefix_hit_rate"],
+        "cached_tokens": eng.alloc.n_prefix_tokens,
+        "n_preempted": eng.n_preempted,
+        "n_swapped_out": eng.n_swapped_out,
+        "_outputs": {int(r): list(v) for r, v in eng.outputs.items()},
+    }
+
+
+def run_prefix_cost_check(smoke: bool) -> dict:
+    """Hit-rate-aware cost model vs the real engine: drain a shared-prefix
+    burst with caching ON and price every executed plan through the same
+    ``iteration_cost`` commit path the fig3 sweeps use — cached prefix
+    tokens never appear in the plan's prefill rectangles, so the model
+    prices only the uncached tails.  Runs on the 4-expert top-2 config
+    where router coverage saturates at bench token counts, isolating the
+    hit-aware rectangle accounting from coverage-expectation noise: the
+    acceptance band is +/-5%."""
+    cfg = _cfg_moe(smoke)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=4,
+                           quantum=PFX_PAGE, token_budget=512)
+    eng = Engine(model, params, sched, n_slots=4, max_len=MAX_LEN,
+                 packed=True, page_size=PFX_PAGE, prefix_cache=True)
+    bp = eng._expert_bytes // max(cfg.expert_bytes(1), 1)
+    cm = CostModel(cfg, H100X2, bytes_per_param=bp, moe_dispatch="ragged")
+    for tr in _prefix_trace("shared", smoke):
+        eng.submit(list(tr.prompt_tokens), tr.output_len)
+    predicted = 0.0
+    while eng.scheduler.has_work():
+        plan = eng.scheduler.next_plan(now=float(eng.iteration))
+        snap = {r: copy.copy(eng.requests[r]) for r in plan.decode_ids}
+        eng.execute_plan(plan)
+        predicted += cm.iteration_cost(plan, snap)["expert_bytes"]
+    measured = float(sum(row["expert_load_bytes"] for row in eng.iter_log))
+    # allocator counters, not request_metrics: the closed-loop drain never
+    # stamps first_token_time (timestamps are the runtime's job)
+    admitted = sum(r.admitted_prompt_tokens for r in eng.requests.values())
+    hit_rate = eng.alloc.n_prefix_tokens / max(admitted, 1)
+    return {"config": cfg.name, "prefix_hit_rate": hit_rate,
+            "predicted_expert_mb": predicted / 1e6,
+            "measured_expert_mb": measured / 1e6,
+            "ratio": predicted / max(measured, 1.0)}
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -364,6 +494,65 @@ def main(argv=None) -> dict:
                 0.6 <= cost_check["ratio"] <= 1.5,
         })
 
+    # ---- prefix cache: shared-prefix reuse vs the zero-reuse control,
+    # cache on vs off, both preemption flavours (schema v3).  The swap
+    # rows run on a deliberately tight pool so eviction really fires.
+    cfg_p = _cfg_moe_wide()
+    model_p = DecoderModel(cfg_p)
+    params_p = model_p.init(jax.random.PRNGKey(0))
+    shared = _prefix_trace("shared", args.smoke)
+    unique = _prefix_trace("unique", args.smoke)
+    # the swap pair runs a longer-decode variant on a 20-page pool with no
+    # decode reserve, so decode growth exhausts the pool and eviction
+    # REALLY fires — the regime where shared pages must stay pinned
+    swappy = _prefix_trace("shared", args.smoke, output_len=24, rate=0.35,
+                           prefix_pages=7)
+    prefix_rows = []
+    for trace_name, trace, mode, pages, reserve in (
+            ("shared", shared, "recompute", None, None),
+            ("unique", unique, "recompute", None, None),
+            ("shared", swappy, "swap", 20, 0)):
+        for cache_on in (False, True):
+            prefix_rows.append(run_prefix(cfg_p, model_p, params_p,
+                                          trace_name, trace, cache_on,
+                                          mode, pages=pages,
+                                          decode_reserve=reserve))
+    prefix_cost = run_prefix_cost_check(args.smoke)
+
+    def prow(trace_name, mode, cache_on):
+        return next(r for r in prefix_rows if r["trace"] == trace_name
+                    and r["mode"] == mode and r["prefix_cache"] == cache_on)
+
+    sh_off = prow("shared", "recompute", False)
+    sh_on = prow("shared", "recompute", True)
+    un_off = prow("unique", "recompute", False)
+    un_on = prow("unique", "recompute", True)
+    sw_off = prow("shared", "swap", False)
+    sw_on = prow("shared", "swap", True)
+    for off, on in ((sh_off, sh_on), (un_off, un_on), (sw_off, sw_on)):
+        on["dispatches_saved"] = (off["prefill_dispatches"]
+                                  - on["prefill_dispatches"])
+    checks.update({
+        # the trace reuses >= 70% of its tokens; the cache must see it
+        "prefix_hit_on_shared": sh_on["prefix_hit_rate"] > 0,
+        # the acceptance bars: mean TTFT halves and iter_log expert-load
+        # bytes drop >= 30% on the reuse-heavy trace
+        "prefix_ttft_2x": 2 * sh_on["ttft_mean"] <= sh_off["ttft_mean"],
+        "prefix_expert_bytes_30pct":
+            sh_on["expert_load_mb"] <= 0.7 * sh_off["expert_load_mb"],
+        # zero-reuse control: lookup/registration must be dispatch-free
+        "prefix_no_dispatch_regression":
+            un_on["prefill_dispatches"] <= un_off["prefill_dispatches"],
+        # token streams bit-identical cache on vs off, BOTH eviction modes
+        "prefix_tokens_identical_recompute":
+            sh_on["_outputs"] == sh_off["_outputs"]
+            and un_on["_outputs"] == un_off["_outputs"],
+        "prefix_tokens_identical_swap":
+            sw_on["_outputs"] == sw_off["_outputs"],
+        # hit-aware cost model within 5% of the engine's expert counter
+        "prefix_cost_model_5pct": 0.95 <= prefix_cost["ratio"] <= 1.05,
+    })
+
     for r in rows:
         r.pop("_outputs"), r.pop("_outputs2")
     print(table(rows, COLUMNS, "Engine iteration hot path — packed "
@@ -376,10 +565,17 @@ def main(argv=None) -> dict:
                     "Decode path — speculative verify-k "
                     f"(drafter: {args.spec})"))
         print("\ncost-model cross-check:", cost_check)
+    for r in prefix_rows:
+        r.pop("_outputs")
+    print()
+    print(table(prefix_rows, PREFIX_COLUMNS,
+                "Prefix cache — shared-prefix reuse vs zero-reuse control "
+                "(open-loop, iteration clock)"))
+    print("\nprefix cost-model cross-check:", prefix_cost)
     print("\nchecks:", checks)
     print("soft checks (non-gating):", soft_checks)
     res = {
-        "schema": "bench-trajectory-v2",
+        "schema": "bench-trajectory-v3",
         "bench": "engine_iter_bench",
         "smoke": args.smoke,
         "columns": COLUMNS,
@@ -388,6 +584,9 @@ def main(argv=None) -> dict:
         "spec_columns": SPEC_COLUMNS,
         "spec_rows": spec_rows,
         "cost_model_check": cost_check,
+        "prefix_columns": PREFIX_COLUMNS,
+        "prefix_rows": prefix_rows,
+        "prefix_cost_check": prefix_cost,
         "checks": checks,
         "soft_checks": soft_checks,
         "pass": all(checks.values()),

@@ -22,6 +22,13 @@ vs layered × speculation off/on at sampled rates (analytic acceptance
 iteration counts, and no SLO loss from speculation.  With ``--spec`` set,
 the multi-tenant rows also run with speculation on and gain a per-class
 ``accept_rate`` column.
+
+``--prefix`` adds the automatic-prefix-caching frontier: a shared-prefix
+trace (K system prompts, Zipf reuse) swept chunked vs layered × cache
+off/on, with TTFT / SLO / hit-rate / expert-traffic columns — the
+"layered admission prices only the un-cached suffix" claim.  The
+multi-tenant rows always carry per-class ``hit_rate`` /
+``cached_tokens`` columns (each tenant class shares a system prompt).
 """
 
 from __future__ import annotations
@@ -29,8 +36,11 @@ from __future__ import annotations
 import argparse
 import math
 
+import numpy as np
+
 from benchmarks.common import SLOS, run_sim, run_sim_trace, save, table
-from repro.serving.traffic import DATASETS, ClassSpec, multi_class_trace
+from repro.serving.traffic import (DATASETS, ClassSpec, TraceRequest,
+                                   multi_class_trace, shared_prefix_trace)
 
 
 def _finite(x):
@@ -59,11 +69,29 @@ OVERSUB_COLUMNS = ("model", "dataset", "sched", "mode", "rate", "slo",
 
 # Per-class columns of the multi-tenant rows (same CI schema guard).
 # ``accept_rate`` is the per-class speculative acceptance (None when the
-# run is not speculating).
+# run is not speculating); ``hit_rate``/``cached_tokens`` are the
+# per-class prefix-cache metrics (each class shares a system prompt).
 MT_COLUMNS = ("model", "sched", "mode", "rate", "slo_class", "n_requests",
               "ttft_p50", "ttft_p99", "tbt_p50", "tbt_p99", "ttft_att",
               "tbt_att", "slo", "queue_delay_p99", "preemption_rate",
-              "swap_rate", "accept_rate")
+              "swap_rate", "accept_rate", "hit_rate", "cached_tokens")
+
+# Prefix-caching frontier rows (chunked vs layered x cache off/on over a
+# shared-prefix trace).
+PFX_COLUMNS = ("model", "sched", "cache", "rate", "n_requests", "ttft_mean",
+               "ttft_p99", "slo", "hit_rate", "cached_tokens",
+               "expert_bytes", "n_iterations")
+
+# Shared-prefix operating points: prompts are 1536 shared + 256 fresh
+# tokens (~86% reuse potential), rates chosen to straddle each model's
+# cache-off saturation so the capacity reclaimed by caching is visible.
+PFX_SWEEPS = {
+    "qwen3-30b-a3b": (4.4, 6.0),
+    "gpt-oss-20b": (6.2, 8.8),
+}
+PFX_PREFIX_LEN = 1536
+PFX_SUFFIX_LEN = 256
+PFX_OUTPUT_LEN = 128
 
 # Speculative verify-k frontier rows (chunked vs layered x spec off/on).
 SPEC_COLUMNS = ("model", "dataset", "sched", "spec", "rate", "slo",
@@ -256,6 +284,98 @@ def run_spec_frontier(n_requests: int, sweeps, spec: str,
             "checks": checks}
 
 
+def run_prefix_frontier(n_requests: int, models) -> dict:
+    """Chunked vs layered × prefix cache off/on over a shared-prefix trace
+    (4 system prompts, Zipf reuse).  With caching on, the cost model
+    prices only the un-cached suffix of each warm prompt and layered
+    admission starts its first layer-group rectangle past the cached
+    block boundary — TTFT and expert traffic both drop, and the layered
+    frontier is preserved on the warm path."""
+    rows = []
+    for model, rates in models.items():
+        slo = SLOS[(model, "sharegpt")]
+        for rate in rates:
+            trace = shared_prefix_trace(
+                n_requests, n_prefixes=4, prefix_len=PFX_PREFIX_LEN,
+                suffix_len=PFX_SUFFIX_LEN, output_len=PFX_OUTPUT_LEN,
+                rate=rate, zipf_alpha=1.2, vocab_size=50257, seed=1)
+            for sched in ("chunked", "layered"):
+                for cache_on in (False, True):
+                    m, res, _ = run_sim_trace(model, trace, sched, slo=slo,
+                                              prefix_cache=cache_on)
+                    rows.append({
+                        "model": model, "sched": sched,
+                        "cache": "on" if cache_on else "off", "rate": rate,
+                        "n_requests": m["n_requests"],
+                        "ttft_mean": _finite(m["ttft_mean"]),
+                        "ttft_p99": _finite(m["ttft_p99"]),
+                        "slo": _finite(m["slo_attainment"]),
+                        "hit_rate": m["prefix_hit_rate"],
+                        "cached_tokens": res.prefix_cached_tokens,
+                        "expert_bytes": m["expert_bytes_total"],
+                        "n_iterations": res.n_iterations,
+                    })
+    print(table(rows, ["model", "sched", "cache", "rate", "ttft_mean",
+                       "ttft_p99", "slo", "hit_rate", "cached_tokens",
+                       "expert_bytes", "n_iterations"],
+                "Fig 3 (prefix caching) — shared-prefix trace "
+                f"({PFX_PREFIX_LEN}+{PFX_SUFFIX_LEN} tokens), chunked vs "
+                "layered x cache off/on"))
+
+    def by(model, sched, rate, cache):
+        for r in rows:
+            if (r["model"], r["sched"], r["rate"], r["cache"]) == \
+                    (model, sched, rate, cache):
+                return r
+        raise KeyError
+
+    points = sorted({(r["model"], r["sched"], r["rate"]) for r in rows})
+    pairs = [(by(*p, "off"), by(*p, "on")) for p in points]
+    checks = {
+        # warm requests really hit (Zipf over 4 prefixes, ~86% reuse)
+        "pfx_hit_on": all(on["hit_rate"] >= 0.3 for _, on in pairs),
+        "pfx_off_cold": all(off["hit_rate"] == 0 for off, _ in pairs),
+        # pricing only the suffix can only shorten prefill queues
+        "pfx_ttft_improves": all(
+            (on["ttft_mean"] or 0) <= (off["ttft_mean"] or float("inf"))
+            for off, on in pairs),
+        # cached prompt blocks never re-load expert weights
+        "pfx_expert_bytes_drop": all(
+            on["expert_bytes"] < off["expert_bytes"] for off, on in pairs),
+        # the layered frontier survives the warm path
+        "pfx_layered_frontier": all(
+            (by(m_, "layered", r_, "on")["slo"] or 0)
+            >= (by(m_, "chunked", r_, "on")["slo"] or 0) - 0.05
+            for m_, _s, r_ in points if _s == "layered"),
+    }
+    print("checks:", checks)
+    return {"pfx_rows": rows, "pfx_columns": list(PFX_COLUMNS),
+            "checks": checks}
+
+
+def _attach_class_prefixes(trace, prefix_len: int = 256,
+                           vocab_size: int = 50257, seed: int = 0):
+    """Give each SLO class a shared system prompt: every request longer
+    than ``prefix_len`` carries its class prefix plus a fresh random tail
+    (lengths unchanged), so the multi-tenant rows exercise per-class
+    prefix caching instead of reporting all-zero hit rates."""
+    rng = np.random.default_rng(seed)
+    prefixes = {}
+    out = []
+    for tr in trace:
+        pfx = prefixes.setdefault(
+            tr.slo_class,
+            tuple(int(x) for x in rng.integers(1, vocab_size, prefix_len)))
+        n_fresh = max(tr.prompt_len - prefix_len, 0)
+        toks = (pfx[:tr.prompt_len]
+                + tuple(int(x) for x in
+                        rng.integers(1, vocab_size, n_fresh)))
+        out.append(TraceRequest(tr.arrival_time, tr.prompt_len,
+                                tr.output_len, slo_class=tr.slo_class,
+                                prompt_tokens=toks))
+    return out
+
+
 def _class_eviction_probe(mode: str) -> bool:
     """Deterministic 3-resident scenario proving the class-aware victim
     walk: interactive (earliest, protected by the forward-progress rule),
@@ -294,14 +414,14 @@ def run_multi_tenant(n_requests: int, models, spec_kw=None) -> dict:
                 "batch": SLOS[(model, "arxiv")]}
         for rate in rates:
             n_batch = max(1, int(round(n_requests * MT_BATCH_SHARE)))
-            trace = multi_class_trace([
+            trace = _attach_class_prefixes(multi_class_trace([
                 ClassSpec("interactive", DATASETS["sharegpt"],
                           rate * (1 - MT_BATCH_SHARE),
                           n_requests - n_batch),
                 ClassSpec("batch", DATASETS["arxiv"],
                           rate * MT_BATCH_SHARE, n_batch,
                           process="bursty"),
-            ])
+            ]))
             for sched in ("chunked", "layered"):
                 for mode in PREEMPTION_MODES:
                     m, res, per_cls = run_sim_trace(
@@ -326,12 +446,16 @@ def run_multi_tenant(n_requests: int, models, spec_kw=None) -> dict:
                             "swap_rate": _finite(cm["swap_rate"]),
                             "accept_rate":
                                 _finite(cm["spec_acceptance_rate"]),
+                            "hit_rate": cm["prefix_hit_rate"],
+                            "cached_tokens":
+                                _finite(cm["cached_prompt_tokens"]),
                         })
                         evictions[cls] += (cm["n_preemptions"]
                                            + cm["n_swaps"])
     print(table(rows, ["model", "sched", "mode", "rate", "slo_class",
                        "ttft_p50", "ttft_p99", "slo", "queue_delay_p99",
-                       "preemption_rate", "swap_rate", "accept_rate"],
+                       "preemption_rate", "swap_rate", "accept_rate",
+                       "hit_rate"],
                 "Fig 3 (multi-tenant) — interactive ShareGPT (Poisson) + "
                 "batch arXiv (bursty), oversubscribed pool"))
 
@@ -349,9 +473,12 @@ def run_multi_tenant(n_requests: int, models, spec_kw=None) -> dict:
          if (r["model"], r["sched"], r["mode"], r["rate"]) == p}
         == {"interactive", "batch"} for p in points)
     probe_ok = all(_class_eviction_probe(m) for m in PREEMPTION_MODES)
+    # every class shares a system prompt, so somebody must have hit
+    hits_ok = any(r["hit_rate"] > 0 for r in rows)
     checks = {"mt_schema": schema_ok,
               "mt_both_classes": classes_ok,
-              "mt_eviction_order_probe": probe_ok}
+              "mt_eviction_order_probe": probe_ok,
+              "mt_prefix_hits": hits_ok}
     print("per-class evictions (preempt+swap):", evictions)
     print("checks:", checks)
     return {"mt_rows": rows, "mt_columns": list(MT_COLUMNS),
@@ -360,7 +487,8 @@ def run_multi_tenant(n_requests: int, models, spec_kw=None) -> dict:
 
 def main(n_requests: int = 400, oversubscribed: bool = False,
          multi_tenant: bool = False, smoke: bool = False,
-         spec: str = "off", spec_acceptance: float = 0.7) -> dict:
+         spec: str = "off", spec_acceptance: float = 0.7,
+         prefix: bool = False) -> dict:
     sweeps = SWEEPS
     if smoke:
         # tiny CI-sized run: one model/dataset pair, two rates
@@ -382,6 +510,15 @@ def main(n_requests: int = 400, oversubscribed: bool = False,
         result["spec_rows"] = sf["spec_rows"]
         result["spec_columns"] = sf["spec_columns"]
         result["checks"].update(sf["checks"])
+    if prefix:
+        models = PFX_SWEEPS
+        if smoke:
+            key = "qwen3-30b-a3b"
+            models = {key: PFX_SWEEPS[key][:1]}
+        pf = run_prefix_frontier(n_requests, models)
+        result["pfx_rows"] = pf["pfx_rows"]
+        result["pfx_columns"] = pf["pfx_columns"]
+        result["checks"].update(pf["checks"])
     if multi_tenant:
         models = MT_SWEEPS
         if smoke:
@@ -416,9 +553,14 @@ if __name__ == "__main__":
     ap.add_argument("--spec-acceptance", type=float, default=0.7,
                     help="per-token draft acceptance probability for the "
                          "simulator's analytic verify-k")
+    ap.add_argument("--prefix", action="store_true",
+                    help="add the prefix-caching frontier (chunked vs "
+                         "layered x cache off/on over a shared-prefix "
+                         "trace) with TTFT/hit-rate/expert-traffic rows")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run (one sweep, <=24 requests)")
     args = ap.parse_args()
     main(n_requests=args.requests, oversubscribed=args.oversubscribed,
          multi_tenant=args.multi_tenant, smoke=args.smoke,
-         spec=args.spec, spec_acceptance=args.spec_acceptance)
+         spec=args.spec, spec_acceptance=args.spec_acceptance,
+         prefix=args.prefix)

@@ -285,7 +285,8 @@ class Scheduler:
         # reserved for other classes) would wait forever — surface it
         # instead of deadlocking the queue (queued requests have
         # n_generated == n_folded, so prompt_len + remaining generation is
-        # the true final sequence length)
+        # the true final sequence length).  The worst case is deliberately
+        # NOT prefix-aware: shared pages can be reclaimed under pressure.
         worst = r.prompt_len + (r.max_new_tokens - r.n_folded)
         if not self.kv.fits_pool(worst, stash, headroom_pages=headroom):
             reserved = f" minus {headroom} headroom pages" if headroom else ""
@@ -294,7 +295,14 @@ class Scheduler:
                 f"(+{stash} stash) but the pool holds only "
                 f"{self.kv.n_pages * self.kv.page_size} tokens{reserved}; "
                 f"enlarge --pages or shard the request")
-        return self.kv.can_admit(need, stash, headroom_pages=headroom)
+        # prefix-aware admission: matched prefix tokens are charged zero new
+        # pages (can_admit links, not allocates, shared pages) and the stash
+        # only ever carries the UNCACHED tail of the prompt
+        hit = self.kv.lookup_prefix(r.prompt_tokens)
+        stash = self.max_stash_tokens(
+            r, prompt_len=r.prompt_len - hit.cached_tokens)
+        return self.kv.can_admit(need, stash, headroom_pages=headroom,
+                                 prompt_tokens=r.prompt_tokens)
 
     def admit(self, now: float, limit: Optional[int] = None) -> List[int]:
         """FCFS admission, gated on BOTH a free slot and the page pool
@@ -316,8 +324,18 @@ class Scheduler:
                 break
             self.waiting.popleft()
             if self.kv is not None:
-                self.kv.reserve(rid, r.prompt_len + self.decode_reserve,
-                                self.max_stash_tokens(r))
+                hit = self.kv.lookup_prefix(r.prompt_tokens)
+                stash = self.max_stash_tokens(
+                    r, prompt_len=r.prompt_len - hit.cached_tokens)
+                hit = self.kv.reserve(rid, r.prompt_len + self.decode_reserve,
+                                      stash, prompt_tokens=r.prompt_tokens)
+                # matched prefix tokens are already computed: this prefill
+                # epoch starts past the cached boundary (every layer group
+                # skips them uniformly — per-group KV is complete for
+                # cached blocks)
+                r.tokens_done = hit.cached_tokens
+                r.cached_prompt_tokens += hit.cached_tokens
+            r.admitted_prompt_tokens += r.prompt_len
             r.state = RequestState.PREFILL
             if r.admit_time is None:        # queueing delay = FIRST admission
                 r.admit_time = now
@@ -556,6 +574,11 @@ class Scheduler:
                 if self.kv is not None and self.kv.owns(sl.req_id):
                     self.kv.set_length(sl.req_id, r.prompt_len)
                     self.kv.release_stash(sl.req_id)
+                    # publish the completed prompt's full pages into the
+                    # shared-prefix index (idempotent — the engine may have
+                    # registered already when snapshotting its KV row) so
+                    # later admissions can link them refcounted
+                    self.kv.register_prefix(sl.req_id, r.prompt_tokens)
                 r.state = RequestState.DECODE
                 r.n_generated += 1
                 if r.n_generated >= r.max_new_tokens:

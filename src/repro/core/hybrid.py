@@ -43,9 +43,9 @@ class HybridPrefillScheduler(Scheduler):
         if self._run is not None and self._run[0] == req_id:
             self._run = None
 
-    def _chunks(self, prompt_len: int) -> List[Tuple[int, int]]:
-        n = max(1, math.ceil(prompt_len / self.chunk_size))
-        out, start = [], 0
+    def _chunks(self, prompt_len: int, start: int = 0) -> List[Tuple[int, int]]:
+        n = max(1, math.ceil((prompt_len - start) / self.chunk_size))
+        out = []
         for i in range(n):
             end = min(start + self.chunk_size, prompt_len)
             out.append((start, end))
@@ -58,7 +58,9 @@ class HybridPrefillScheduler(Scheduler):
             return
         rid = admitted[0]
         r = self.requests[rid]
-        chunks = self._chunks(r.prompt_len)
+        # chunking starts past the prefix-cached boundary (tokens_done set by
+        # admit on a cache hit) — cached tokens are never prefilled
+        chunks = self._chunks(r.prompt_len, start=r.tokens_done)
         g = layer_groups.num_groups(chunks[0][1] - chunks[0][0],
                                     self.n_blocks, self.quantum)
         groups = layer_groups.partition(self.n_blocks, g)

@@ -60,7 +60,10 @@ class LayeredPrefillScheduler(Scheduler):
         admitted = self.admit(now, limit=limit)
         if not admitted:
             return
-        total_tokens = sum(self.requests[rid].prompt_len for rid in admitted)
+        # prefix-cached tokens (tokens_done > 0 straight out of admit) are
+        # never prefilled, so they don't count toward the group-count budget
+        total_tokens = sum(self.requests[rid].remaining_prompt
+                           for rid in admitted)
         g = layer_groups.num_groups(total_tokens, self.n_blocks, self.quantum)
         if self.block_costs is not None:
             groups = layer_groups.partition_weighted(self.block_costs, g)
@@ -83,8 +86,12 @@ class LayeredPrefillScheduler(Scheduler):
             last = gi == len(groups) - 1
             for rid in rids:
                 r = self.requests[rid]
+                # start past the cached block boundary: per-layer-group KV is
+                # complete for prefix-cache-hit blocks, so every group skips
+                # the same leading token range uniformly
                 plan.prefill.append(PrefillSlice(
-                    req_id=rid, token_start=0, token_end=r.prompt_len,
+                    req_id=rid, token_start=r.tokens_done,
+                    token_end=r.prompt_len,
                     block_start=b0, block_end=b1, emits_first_token=last))
                 if last:
                     r.tokens_done = r.prompt_len

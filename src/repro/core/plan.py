@@ -73,6 +73,11 @@ class Request:
     n_drafted: int = 0
     n_draft_accepted: int = 0
     accepted_lens: List[int] = field(default_factory=list)
+    # automatic prefix caching (cumulative over all admissions, including
+    # recompute epochs): prompt tokens served from shared KV pages vs
+    # prompt tokens this request would have prefilled cold
+    cached_prompt_tokens: int = 0
+    admitted_prompt_tokens: int = 0
     # metrics (filled by engine/simulator)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -82,6 +87,12 @@ class Request:
     @property
     def remaining_prompt(self) -> int:
         return self.prompt_len - self.tokens_done
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of this request's admitted prompt tokens served from
+        the shared prefix cache (0.0 before first admission)."""
+        return self.cached_prompt_tokens / max(self.admitted_prompt_tokens, 1)
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:

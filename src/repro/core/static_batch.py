@@ -26,7 +26,8 @@ class StaticBatchScheduler(Scheduler):
             for rid in plan.admitted_ids:
                 r = self.requests[rid]
                 plan.prefill.append(PrefillSlice(
-                    req_id=rid, token_start=0, token_end=r.prompt_len,
+                    req_id=rid, token_start=r.tokens_done,
+                    token_end=r.prompt_len,
                     block_start=0, block_end=self.n_blocks,
                     emits_first_token=True))
                 r.tokens_done = r.prompt_len

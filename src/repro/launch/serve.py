@@ -113,6 +113,8 @@ def serve_real(args) -> None:
                  decode_reserve=args.decode_reserve,
                  class_headroom=class_headroom_opt(args),
                  packed=args.packed,
+                 prefix_cache=args.prefix_cache,
+                 prefix_lru_pages=args.prefix_lru_pages,
                  spec_mode=args.spec, spec_k=args.spec_k,
                  draft_config=args.draft_config)
     def _stream(rid, tok, t):
@@ -175,6 +177,14 @@ def serve_real(args) -> None:
               f"{eng.n_draft_dispatches} draft dispatches, "
               f"{eng.n_verify_compiles} verify executables; "
               f"{tpd:.2f} generated tokens/dispatch")
+    if args.prefix_cache:
+        print(f"[serve] prefix cache: hit rate "
+              f"{m['prefix_hit_rate']:.2f} "
+              f"({eng.alloc.n_prefix_hits} hits, "
+              f"{eng.alloc.n_prefix_tokens} cached tokens, "
+              f"{eng.n_prefix_restores} row restores); "
+              f"{eng.alloc.n_shared_pages} shared pages live, "
+              f"{eng.alloc.n_prefix_evictions} LRU reclaims")
     if eng.alloc.n_host_pages:
         print(f"[serve] swap: {eng.n_swapped_out} out / "
               f"{eng.n_swapped_in} in; host pages high-water "
@@ -215,6 +225,8 @@ def serve_sim(args) -> None:
                     decode_reserve=args.decode_reserve,
                     swap_overlap=not args.swap_serial,
                     class_headroom=class_headroom_opt(args),
+                    prefix_cache=args.prefix_cache,
+                    prefix_lru_pages=args.prefix_lru_pages,
                     spec_mode=args.spec, spec_k=args.spec_k,
                     spec_acceptance=args.spec_acceptance)
     res = sim.run(trace)
@@ -235,6 +247,11 @@ def serve_sim(args) -> None:
           f"high-water {res.pages_high_water}/{res.n_pool_pages}; "
           f"{res.n_preemptions} preemptions, "
           f"{res.recompute_tokens} recomputed tokens")
+    if args.prefix_cache:
+        print(f"[serve-sim]   prefix cache     "
+              f"hit rate {res.prefix_hit_rate:.2f} "
+              f"({res.n_prefix_hits} hits, "
+              f"{res.prefix_cached_tokens} cached tokens)")
     if args.spec != "off":
         print(f"[serve-sim]   spec({args.spec})      "
               f"{res.total_drafted} drafted / {res.total_accepted} accepted "
@@ -329,6 +346,20 @@ def main() -> None:
                          "run as ONE jitted slot-vector batch per "
                          "iteration; --no-packed is the per-slice escape "
                          "hatch (one dispatch per slice)")
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="automatic prefix caching: completed prompts "
+                         "publish their full KV pages into a refcounted "
+                         "content-hash index; later prompts sharing a "
+                         "page-aligned prefix skip its prefill (every "
+                         "layer group starts past the cached boundary) "
+                         "and link the shared pages copy-on-write. "
+                         "--no-prefix-cache restores cold prefill")
+    ap.add_argument("--prefix-lru-pages", type=int, default=None,
+                    help="cap on retained refcount-0 cached pages "
+                         "(default: unbounded — idle cached pages still "
+                         "yield to any allocation before eviction kicks "
+                         "in, they are only pinned while referenced)")
     ap.add_argument("--moe-dispatch", default="ragged",
                     choices=["ragged", "dense"],
                     help="dropless MoE data path: ragged (sorted "

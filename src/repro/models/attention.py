@@ -238,29 +238,28 @@ def _masked_attention_flash(q, k, v, q_pos, kv_pos, kv_valid, *, causal,
 
 
 def _write_cache(buf: Array, new: Array, offset: Array,
-                 row_ok: Optional[Array] = None) -> Array:
+                 tok_ok: Optional[Array] = None) -> Array:
     """Write ``new`` (B,S,...) into ``buf`` (B,S_max,...) at per-row offsets.
-    Rows with ``row_ok == False`` keep their previous contents (the engine's
-    full-pool decode step and bucket-padded packed prefill batches must not
-    corrupt slots that are idle or mid-way through a layered prefill).
+    Tokens with ``tok_ok == False`` keep their previous buffer contents (the
+    engine's full-pool decode step and bucket-padded packed prefill batches
+    must not corrupt slots that are idle, mid-way through a layered
+    prefill, or merely padding inside a bucketed row).
 
-    Masking is applied at the WRITE WINDOW, not the whole buffer: a masked
-    row re-writes its own current S tokens (an identity write) instead of
-    selecting over all S_max positions — under donated cache buffers this
-    keeps the update O(B*S), so the decode step scales with the written
-    tokens rather than the pool size."""
+    Implemented as a per-token scatter with out-of-range indices DROPPED —
+    never a ``dynamic_update_slice``.  The slice form clamps the start
+    index, so a short row bucket-padded to a long window (prefix-cache
+    restore packed with a cold full-prompt row: offset ~ prompt_len,
+    S ~ prompt_len) would silently slide the write backwards and overwrite
+    live KV below ``offset``.  The scatter stays O(B*S): one index per new
+    token, masked tokens routed out of range."""
     new = new.astype(buf.dtype)
-    if row_ok is None:
-        def row(b, n, off):
-            idx = (off,) + (0,) * (b.ndim - 1)
-            return jax.lax.dynamic_update_slice(b, n, idx)
-        return jax.vmap(row)(buf, new, offset)
-
-    def row(b, n, off, ok):
-        idx = (off,) + (0,) * (b.ndim - 1)
-        cur = jax.lax.dynamic_slice(b, idx, n.shape)
-        return jax.lax.dynamic_update_slice(b, jnp.where(ok, n, cur), idx)
-    return jax.vmap(row)(buf, new, offset, row_ok)
+    b, s = new.shape[:2]
+    s_max = buf.shape[1]
+    pos = offset[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+    if tok_ok is not None:
+        pos = jnp.where(tok_ok, pos, s_max)        # masked -> OOB -> dropped
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    return buf.at[rows, pos].set(new, mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -298,9 +297,8 @@ def apply_gqa(cfg: ModelConfig, spec: BlockSpec, p, x: Array, *,
     skip = cache is None and spec.window is not None
     plan = None if skip else _attn_shard_plan(cfg, b, s)
     if cache is not None:
-        row_ok = valid.any(axis=-1) if valid is not None else None
-        kbuf = _write_cache(cache["k"], k, offset, row_ok)
-        vbuf = _write_cache(cache["v"], v, offset, row_ok)
+        kbuf = _write_cache(cache["k"], k, offset, valid)
+        vbuf = _write_cache(cache["v"], v, offset, valid)
         s_max = kbuf.shape[1]
         kv_pos = jnp.arange(s_max, dtype=jnp.int32)
         kv_valid = kv_pos[None, :] < (offset + s)[:, None]
@@ -445,9 +443,8 @@ def apply_mla(cfg: ModelConfig, spec: BlockSpec, p, x: Array, *,
     kr = layers.apply_rope(kr, positions, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None:
-        row_ok = valid.any(axis=-1) if valid is not None else None
-        ckv_buf = _write_cache(cache["ckv"], ckv, offset, row_ok)
-        kr_buf = _write_cache(cache["kr"], kr, offset, row_ok)
+        ckv_buf = _write_cache(cache["ckv"], ckv, offset, valid)
+        kr_buf = _write_cache(cache["kr"], kr, offset, valid)
         s_kv = ckv_buf.shape[1]
         kv_valid = (jnp.arange(s_kv, dtype=jnp.int32)[None, :]
                     < (offset + s)[:, None])

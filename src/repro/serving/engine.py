@@ -107,6 +107,8 @@ class Engine:
                  class_headroom: Optional[Dict[str, int]] = None,
                  eos_token: Optional[int] = None, gmm_fn=None,
                  moe_dispatch: str = "ragged", packed: bool = True,
+                 prefix_cache: bool = True,
+                 prefix_lru_pages: Optional[int] = None,
                  spec_mode: str = "off", spec_k: int = 4,
                  spec_adaptive: bool = True, spec_ngram_n: int = 3,
                  draft_model: Optional[DecoderModel] = None,
@@ -135,6 +137,15 @@ class Engine:
         slice as its own batch of one — the reference path the
         equivalence tests and ``benchmarks/engine_iter_bench.py`` compare
         against.
+
+        ``prefix_cache`` (default on) enables automatic prefix caching
+        (DESIGN.md §Prefix caching): completed prompts' full KV pages are
+        content-hashed into a refcounted shared index, admissions whose
+        prompt matches a cached chain skip the matched tokens entirely —
+        the engine restores the cached slot row and prefill starts past
+        the cached boundary, with tokens bit-identical to a cold run.
+        ``prefix_lru_pages`` caps the reclaimable (refcount-0) cached
+        pages kept resident (None = bounded only by pool pressure).
 
         ``spec_mode`` enables speculative verify-k decoding ("ngram" =
         draft-free prompt/self-lookup; "draft" = a tiny stateless draft
@@ -170,7 +181,18 @@ class Engine:
             host_pages = 4 * pages if preemption_mode != "recompute" else 0
         self.alloc = PagedKVAllocator(pages, page_size,
                                       stash_factor=stash_factor,
-                                      n_host_pages=host_pages)
+                                      n_host_pages=host_pages,
+                                      prefix_caching=prefix_cache,
+                                      prefix_lru_pages=prefix_lru_pages)
+        self.prefix_cache = prefix_cache
+        # digest -> (device KV row snapshot, usable tokens): the physical
+        # realization of the allocator's shared-prefix index.  Rows are
+        # sliced ONCE when a prompt's chains register and restored into a
+        # hitting request's slot at admission; the allocator's reclaim hook
+        # drops a row the moment its index entry dies.
+        self._prefix_rows: Dict[bytes, Tuple[object, int]] = {}
+        self.alloc.on_prefix_evict = \
+            lambda digest: self._prefix_rows.pop(digest, None)
         self.scheduler.attach_kv(self.alloc, decode_reserve=decode_reserve,
                                  preemption=preemption,
                                  mode=preemption_mode,
@@ -246,6 +268,12 @@ class Engine:
         self.n_dispatches = 0
         self.n_prefill_dispatches = 0
         self.n_prefill_compiles = 0
+        # prefix-cache accounting: restores = admissions that seeded their
+        # slot row from a cached prefix (the allocator counts hits/tokens).
+        # Hits are counted at plan-time reserve, so iter_log attribution
+        # tracks the allocator counters seen at the last append.
+        self.n_prefix_restores = 0
+        self._prefix_seen = (0, 0)          # (n_prefix_hits, n_prefix_tokens)
         # speculative-decode accounting: verify/draft executables live in
         # the SAME bounded LRU as prefill executables (a growing family of
         # k buckets must not grow live executables past the bound)
@@ -483,6 +511,7 @@ class Engine:
         runs on the fetched numpy values."""
         self._step_events: List[TokenEvent] = []
         dispatches0 = self.n_dispatches
+        prefix_hits0, prefix_toks0 = self._prefix_seen
         block_expert_union = np.zeros(
             (self.model.n_blocks, max(self.cfg.moe.n_experts, 1)), bool)
 
@@ -570,7 +599,12 @@ class Engine:
             "n_verify_tokens": n_verify_tokens,
             "n_spec_accepted": n_spec_accepted,
             "n_spec_rows": len(spec_rows),
+            "n_prefix_hits": self.alloc.n_prefix_hits - prefix_hits0,
+            "prefix_cached_tokens": (self.alloc.n_prefix_tokens
+                                     - prefix_toks0),
         })
+        self._prefix_seen = (self.alloc.n_prefix_hits,
+                             self.alloc.n_prefix_tokens)
         self.iteration += 1
         return self._step_events
 
@@ -636,6 +670,19 @@ class Engine:
         self._slot_of[rid] = slot
         self.offsets[slot] = 0
         self.decoding[slot] = False
+        hit = self.alloc.prefix_hit(rid)
+        if hit.cached_tokens:
+            # seed the slot row with the cached prefix KV: the snapshot
+            # row holds the registering request's KV for positions
+            # 0..usable-1 (usable >= cached_tokens; on a COW hit the tail
+            # page's extra positions are overwritten by the re-prefilled
+            # token or masked by the offset).  Same scatter machinery as
+            # swap-in — a device op, no host sync.
+            row, usable = self._prefix_rows[hit.leaf]
+            assert usable >= hit.cached_tokens, (rid, usable, hit)
+            self.cache = _scatter_cache(self.cache, row, slot)
+            self.offsets[slot] = hit.cached_tokens
+            self.n_prefix_restores += 1
         if rid in self.enc_frames:
             frames = jnp.asarray(self.enc_frames[rid])[None]
             _, xkv = self._jit_encode(self.params, frames)
@@ -760,6 +807,10 @@ class Engine:
             # tokens fully processed through the stack
             self.offsets[slot] = sl.token_end
         if sl.emits_first_token:
+            if self.prefix_cache:
+                # snapshot BEFORE _maybe_finish can free the allocator
+                # state of an instantly-done (EOS-on-first-token) request
+                self._snapshot_prefix_rows(rid, slot)
             self._record_token(rid, tok, first=True)
             self.offsets[slot] = req.prompt_len
             self.last_tok[slot] = tok
@@ -768,6 +819,23 @@ class Engine:
             self._maybe_finish(rid, tok, after_first=True)
             if req.state == RequestState.DECODE:
                 self.decoding[slot] = True
+
+    def _snapshot_prefix_rows(self, rid: int, slot: int) -> None:
+        """Slice the completed prompt's KV row once and file it under every
+        shared-index chain this request's own pages serve (registration
+        happened scheduler-side at plan time — ``owned_chains`` recovers
+        the digests).  The slice is an immutable device snapshot (later
+        donated calls build new cache buffers), so it stays valid for
+        restores arbitrarily many iterations later."""
+        chains = self.alloc.owned_chains(rid, self.prompts[rid])
+        missing = [(d, depth) for d, depth in chains
+                   if d not in self._prefix_rows]
+        if not missing:
+            return
+        row = _slice_cache(self.cache, slot)
+        ps = self.alloc.page_size
+        for d, depth in missing:
+            self._prefix_rows[d] = (row, depth * ps)
 
     def _history(self, rid: int) -> np.ndarray:
         """Full token sequence so far (recompute prompt + the generated
@@ -785,9 +853,10 @@ class Engine:
         this iteration, and the device arrays for the one fetch.
 
         Window safety: per-row KV writes cover offset..offset+P-1 (the
-        BUCKETED window — ``_write_cache`` clamps out-of-range starts, so a
-        window that would spill past max_len must not launch).  Rows where
-        the worst-case bucket does not fit fall back to plain decode."""
+        BUCKETED window — ``_write_cache`` drops out-of-range token writes,
+        but a window that would spill past max_len has nowhere to store
+        accepted tokens, so it must not launch).  Rows where the worst-case
+        bucket does not fit fall back to plain decode."""
         budgets = sorted(plan.verify_len.items())
         p_worst = _bucket(self.spec_k + 1, minimum=2, cap=self.spec_k + 1)
         rows: List[Tuple[int, int, int, int, Optional[np.ndarray]]] = []

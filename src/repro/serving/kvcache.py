@@ -31,6 +31,31 @@ HBM pages and releases the host copy, after which decode resumes with the
 KV intact (no recompute epoch).  Host pages are accounted exactly like HBM
 pages: a swapped request owns its host pages until swap-in or ``free``.
 
+**Automatic prefix caching** (``prefix_caching=True``, DESIGN.md §Prefix
+caching): every FULL page of a completed prompt can be registered in a
+content-addressed index keyed by a *chain digest* — the hash of the
+page's tokens folded together with the parent page's digest, so a page's
+identity includes its entire prefix.  A later admission whose prompt
+matches a chain links the shared pages into its block table (refcounted,
+zero new pages charged) and starts prefill past the cached boundary.
+Shared pages are read-only: the partial tail page of a prompt is never
+shared, and when a whole prompt is covered by cached full pages the last
+matched page is *copy-on-write* — it is dropped from the hit, the new
+request re-prefills its tokens into a private page (so it still computes
+its first logits), and the hit references only pages it links refcounted.
+Refcount-0 shared pages park in an LRU and count as free: they are
+reclaimed (oldest first, evicting their index entry) whenever the free
+list runs dry, so cached prefixes never block a cold admission.  Shared
+pages are excluded from swap: ``swap_out`` moves only a victim's private
+pages to host and pins the shared prefix in HBM.
+
+Every device-page release (free / evict / swap-out / spec trim / stash)
+funnels through ONE helper, ``_release_pages`` — the single choke point
+that makes refcount double-decrements structurally impossible —
+and ``check_invariants`` asserts that every physical page is in exactly
+one of {free list, LRU, a block table, a stash, pinned-shared} and that
+every refcount equals the number of referencing table positions.
+
 The allocator never decides WHO to evict — victim selection
 (latest-arrival-first) lives in ``core.base.Scheduler``; the allocator
 only enforces that nobody allocates pages it does not have.
@@ -38,9 +63,11 @@ only enforces that nobody allocates pages it does not have.
 
 from __future__ import annotations
 
+import hashlib
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 class PagedPoolExhausted(RuntimeError):
@@ -50,6 +77,33 @@ class PagedPoolExhausted(RuntimeError):
     scheduler checks ``can_admit``/``growth_deficit`` (and preempts) before
     any page is claimed.  It CAN surface when preemption is disabled and
     decode growth outruns the reservation."""
+
+
+def _page_digest(parent: bytes, tokens: Tuple[int, ...]) -> bytes:
+    """Chain digest of one full page: folds the PARENT page's digest into
+    the hash, so a block's identity includes its whole prefix."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(repr(tokens).encode())
+    return h.digest()
+
+
+@dataclass(frozen=True)
+class PrefixHit:
+    """Result of matching a prompt against the shared-prefix index.
+
+    ``pages`` are the physical page ids to link (read-only, refcounted);
+    ``leaf`` is the digest of the deepest LINKED page (``pages[-1]``) —
+    always a chain the engine holds a KV row snapshot for, and always
+    refcount-protected once the hit is reserved.  ``cow`` marks a
+    fully-covered prompt whose last matched page was dropped from the hit
+    (its tokens re-prefill into a private copy-on-write page)."""
+    cached_tokens: int = 0
+    pages: Tuple[int, ...] = ()
+    leaf: Optional[bytes] = None
+    cow: bool = False
+
+
+_NO_HIT = PrefixHit()
 
 
 @dataclass
@@ -62,6 +116,13 @@ class PagedKVAllocator:
     stash_factor: float = 1.0
     # host-side page pool for swap-to-host preemption (0 = swap disabled)
     n_host_pages: int = 0
+    # automatic prefix caching: content-hash full prompt pages into a
+    # refcounted read-only index (off by default — the raw allocator is
+    # also the substrate for caches that must not alias)
+    prefix_caching: bool = False
+    # cap on refcount-0 shared pages retained in the LRU (None = bounded
+    # only by pool pressure)
+    prefix_lru_pages: Optional[int] = None
     _free: List[int] = field(default_factory=list)
     _tables: Dict[int, List[int]] = field(default_factory=dict)  # req -> pages
     _lengths: Dict[int, int] = field(default_factory=dict)       # req -> toks
@@ -70,6 +131,21 @@ class PagedKVAllocator:
     _host_tables: Dict[int, List[int]] = field(default_factory=dict)
     # speculative pre-charge: req -> table size before reserve_spec
     _spec_base: Dict[int, int] = field(default_factory=dict)
+    # -- prefix-cache state --------------------------------------------------
+    _index: Dict[bytes, int] = field(default_factory=dict)    # digest -> page
+    _page_digests: Dict[int, bytes] = field(default_factory=dict)
+    _page_tokens: Dict[int, Tuple[int, ...]] = field(default_factory=dict)
+    _refs: Dict[int, int] = field(default_factory=dict)       # page -> refcount
+    _lru: "OrderedDict[int, None]" = field(default_factory=OrderedDict)
+    _hits: Dict[int, PrefixHit] = field(default_factory=dict)  # req -> hit
+    # shared prefix pages pinned in HBM while their owner is swapped out
+    _swapped_shared: Dict[int, List[int]] = field(default_factory=dict)
+    # tokens that crossed the host link in the request's LAST swap (shared
+    # pages stay pinned, so this can be less than length)
+    _swap_moved: Dict[int, int] = field(default_factory=dict)
+    # engine hook: called with the chain digest of every page evicted from
+    # the shared index, so cached KV row snapshots can be dropped with it
+    on_prefix_evict: Optional[Callable[[bytes], None]] = None
     pages_high_water: int = 0
     host_pages_high_water: int = 0
     n_grow_allocs: int = 0
@@ -78,6 +154,11 @@ class PagedKVAllocator:
     n_swap_ins: int = 0
     swapped_out_tokens: int = 0
     swapped_in_tokens: int = 0
+    # prefix-cache accounting (cumulative)
+    n_prefix_hits: int = 0
+    n_prefix_tokens: int = 0
+    n_prefix_cow: int = 0
+    n_prefix_evictions: int = 0
 
     def __post_init__(self):
         assert self.n_pages > 0 and self.page_size > 0
@@ -95,10 +176,12 @@ class PagedKVAllocator:
 
     @property
     def n_free_pages(self) -> int:
-        return len(self._free)
+        # refcount-0 shared pages are reclaimable on demand: they count as
+        # free so cached prefixes never shrink the pool's usable capacity
+        return len(self._free) + len(self._lru)
 
     def pages_in_use(self) -> int:
-        return self.n_pages - len(self._free)
+        return self.n_pages - self.n_free_pages
 
     @property
     def n_free_host_pages(self) -> int:
@@ -107,20 +190,142 @@ class PagedKVAllocator:
     def host_pages_in_use(self) -> int:
         return self.n_host_pages - len(self._host_free)
 
+    @property
+    def n_shared_pages(self) -> int:
+        """Pages currently registered in the shared-prefix index."""
+        return len(self._page_digests)
+
+    # -- prefix matching -----------------------------------------------------
+
+    def lookup_prefix(self, prompt_tokens: Optional[Sequence[int]]) \
+            -> PrefixHit:
+        """Walk the shared index along the prompt's full pages (chain
+        digests, token content verified page-by-page against collisions).
+        Non-mutating — safe for admissibility probes.  A fully-covered
+        prompt drops the LAST matched page from the hit (copy-on-write):
+        its tokens are re-prefilled into a private page so the request
+        still computes final logits, and — the real point — the hit then
+        only ever references pages it will LINK refcounted at reserve, so
+        no unpinned page can be LRU-reclaimed between the admission
+        decision and the engine's row restore."""
+        if not self.prefix_caching or prompt_tokens is None \
+                or len(prompt_tokens) == 0:
+            return _NO_HIT
+        ps = self.page_size
+        n = len(prompt_tokens)
+        pages: List[int] = []
+        digests: List[bytes] = []
+        parent = b""
+        for i in range(n // ps):
+            toks = tuple(int(t) for t in prompt_tokens[i * ps:(i + 1) * ps])
+            d = _page_digest(parent, toks)
+            pid = self._index.get(d)
+            if pid is None or self._page_tokens.get(pid) != toks:
+                break
+            pages.append(pid)
+            digests.append(d)
+            parent = d
+        cow = len(pages) * ps >= n
+        if cow:
+            pages, digests = pages[:-1], digests[:-1]
+        if not pages:
+            return _NO_HIT
+        return PrefixHit(cached_tokens=len(pages) * ps, pages=tuple(pages),
+                         leaf=digests[-1], cow=cow)
+
+    def prefix_hit(self, req_id: int) -> PrefixHit:
+        """The hit recorded when ``req_id`` was reserved (no-hit default)."""
+        return self._hits.get(req_id, _NO_HIT)
+
+    def register_prefix(self, req_id: int,
+                        prompt_tokens: Optional[Sequence[int]]) \
+            -> List[Tuple[bytes, int]]:
+        """Publish the FULL pages of a completed prompt into the shared
+        index (idempotent — pages already registered under the same chain
+        are skipped).  Registration stops at the first page whose chain
+        digest is already served by a DIFFERENT physical page (a cohort
+        mate won the race) — the remainder stays private and is released
+        normally.  Returns the newly registered ``(digest, depth)`` pairs
+        so the engine can snapshot KV rows for exactly those chains."""
+        if not self.prefix_caching or prompt_tokens is None \
+                or len(prompt_tokens) == 0:
+            return []
+        table = self._tables.get(req_id)
+        if table is None:
+            return []
+        ps = self.page_size
+        parent, new = b"", []
+        for i in range(min(len(prompt_tokens) // ps, len(table))):
+            toks = tuple(int(t) for t in prompt_tokens[i * ps:(i + 1) * ps])
+            d = _page_digest(parent, toks)
+            pid = table[i]
+            cur = self._index.get(d)
+            if cur == pid:
+                parent = d
+                continue
+            if cur is not None or pid in self._page_digests:
+                break
+            self._index[d] = pid
+            self._page_digests[pid] = d
+            self._page_tokens[pid] = toks
+            self._refs[pid] = 1          # the owner's table reference
+            new.append((d, i + 1))
+            parent = d
+        return new
+
+    def owned_chains(self, req_id: int,
+                     prompt_tokens: Optional[Sequence[int]]) \
+            -> List[Tuple[bytes, int]]:
+        """(digest, depth) pairs in the shared index currently served by
+        ``req_id``'s OWN block-table pages.  The engine snapshots its KV
+        row under exactly these digests after the prompt completes —
+        registration itself happens scheduler-side at plan time, before
+        the prefill has executed, so its return value cannot drive the
+        snapshot."""
+        table = self._tables.get(req_id)
+        if not self.prefix_caching or prompt_tokens is None \
+                or len(prompt_tokens) == 0 or table is None:
+            return []
+        ps = self.page_size
+        parent, out = b"", []
+        for i in range(min(len(prompt_tokens) // ps, len(table))):
+            toks = tuple(int(t) for t in prompt_tokens[i * ps:(i + 1) * ps])
+            d = _page_digest(parent, toks)
+            if self._index.get(d) != table[i]:
+                break
+            out.append((d, i + 1))
+            parent = d
+        return out
+
     # -- admission queries ---------------------------------------------------
 
+    def _avail_for(self, hit: PrefixHit) -> int:
+        """Pages claimable for NEW allocations once ``hit``'s shared pages
+        are linked: the free list plus the reclaimable LRU, minus matched
+        pages currently parked in the LRU (linking revives, not consumes,
+        them — but they stop being reclaimable)."""
+        parked = sum(1 for p in hit.pages if p in self._lru)
+        return len(self._free) + len(self._lru) - parked
+
     def can_admit(self, n_tokens: int, stash_tokens: int = 0,
-                  headroom_pages: int = 0) -> bool:
+                  headroom_pages: int = 0,
+                  prompt_tokens: Optional[Sequence[int]] = None) -> bool:
         """True iff a reservation for ``n_tokens`` of KV plus the stash
         charge fits the pool RIGHT NOW, leaving ``headroom_pages`` free
-        (the scheduler's per-SLO-class admission reserve)."""
-        need = self.pages_for(n_tokens) + self.stash_pages_for(stash_tokens)
-        return need + headroom_pages <= len(self._free)
+        (the scheduler's per-SLO-class admission reserve).  With
+        ``prompt_tokens`` the query is prefix-aware: matched shared pages
+        are charged zero new pages."""
+        hit = self.lookup_prefix(prompt_tokens)
+        need = (max(0, self.pages_for(n_tokens) - len(hit.pages))
+                + self.stash_pages_for(stash_tokens))
+        return need + headroom_pages <= self._avail_for(hit)
 
     def fits_pool(self, n_tokens: int, stash_tokens: int = 0,
                   headroom_pages: int = 0) -> bool:
         """True iff the request could EVER fit (empty pool minus the
-        caller's headroom reserve)."""
+        caller's headroom reserve).  Deliberately NOT prefix-aware: shared
+        pages can be evicted under pressure, so the worst case must fit
+        without cache credit."""
         need = self.pages_for(n_tokens) + self.stash_pages_for(stash_tokens)
         return need + headroom_pages <= self.n_pages
 
@@ -137,21 +342,41 @@ class PagedKVAllocator:
     def is_swapped(self, req_id: int) -> bool:
         return req_id in self._host_tables
 
-    def reserve(self, req_id: int, n_tokens: int,
-                stash_tokens: int = 0) -> None:
+    def reserve(self, req_id: int, n_tokens: int, stash_tokens: int = 0,
+                prompt_tokens: Optional[Sequence[int]] = None) -> PrefixHit:
         """Admission-time reservation: claims pages for ``n_tokens`` of KV
-        (prompt + decode reservation) and the stash charge."""
+        (prompt + decode reservation) and the stash charge.  With
+        ``prompt_tokens``, matched shared prefix pages are LINKED at the
+        head of the block table (refcount bumped, revived from the LRU)
+        and only the uncached remainder allocates new pages.  Records the
+        filled length as the cached token count and returns the hit."""
         assert req_id not in self._tables, req_id
+        hit = self.lookup_prefix(prompt_tokens)
         need_kv = self.pages_for(n_tokens)
+        assert len(hit.pages) <= need_kv, (req_id, hit, n_tokens)
+        need_new = need_kv - len(hit.pages)
         need_stash = self.stash_pages_for(stash_tokens)
-        if need_kv + need_stash > len(self._free):
+        if need_new + need_stash > self._avail_for(hit):
             raise PagedPoolExhausted(
-                f"reserve({req_id}): need {need_kv + need_stash} pages, "
-                f"{len(self._free)} free of {self.n_pages}")
-        self._tables[req_id] = [self._free.pop() for _ in range(need_kv)]
-        self._stash[req_id] = [self._free.pop() for _ in range(need_stash)]
-        self._lengths[req_id] = 0
+                f"reserve({req_id}): need {need_new + need_stash} pages, "
+                f"{self.n_free_pages} free of {self.n_pages}")
+        table = []
+        for pid in hit.pages:
+            self._refs[pid] += 1
+            self._lru.pop(pid, None)
+            table.append(pid)
+        for _ in range(need_new):
+            table.append(self._take_page())
+        self._tables[req_id] = table
+        self._stash[req_id] = [self._take_page() for _ in range(need_stash)]
+        self._lengths[req_id] = hit.cached_tokens
+        if hit.cached_tokens:
+            self._hits[req_id] = hit
+            self.n_prefix_hits += 1
+            self.n_prefix_tokens += hit.cached_tokens
+            self.n_prefix_cow += int(hit.cow)
         self._bump_high_water()
+        return hit
 
     def set_length(self, req_id: int, n_tokens: int) -> None:
         """Record the filled KV length (monotone); never allocates."""
@@ -169,19 +394,19 @@ class PagedKVAllocator:
         ``n_tokens``.  Raises PagedPoolExhausted when the pool is dry — the
         scheduler's pressure pass preempts before letting that happen."""
         deficit = self.growth_deficit(req_id, n_tokens)
-        if deficit > len(self._free):
+        if deficit > self.n_free_pages:
             raise PagedPoolExhausted(
                 f"grow_to({req_id}, {n_tokens}): need {deficit} pages, "
-                f"{len(self._free)} free of {self.n_pages}")
+                f"{self.n_free_pages} free of {self.n_pages}")
         for _ in range(deficit):
-            self._tables[req_id].append(self._free.pop())
+            self._tables[req_id].append(self._take_page())
             self.n_grow_allocs += 1
         self._lengths[req_id] = max(self._lengths[req_id], n_tokens)
         if deficit:
             self._bump_high_water()
 
     def release_stash(self, req_id: int) -> None:
-        self._free.extend(reversed(self._stash.pop(req_id, [])))
+        self._release_pages(self._stash.pop(req_id, []))
         self._stash[req_id] = []
 
     # -- speculative decode reservations --------------------------------------
@@ -202,12 +427,12 @@ class PagedKVAllocator:
         if req_id not in self._spec_base:
             self._spec_base[req_id] = len(self._tables[req_id])
         deficit = self.growth_deficit(req_id, n_tokens)
-        if deficit > len(self._free):
+        if deficit > self.n_free_pages:
             raise PagedPoolExhausted(
                 f"reserve_spec({req_id}, {n_tokens}): need {deficit} pages, "
-                f"{len(self._free)} free of {self.n_pages}")
+                f"{self.n_free_pages} free of {self.n_pages}")
         for _ in range(deficit):
-            self._tables[req_id].append(self._free.pop())
+            self._tables[req_id].append(self._take_page())
         if deficit:
             self._bump_high_water()
 
@@ -215,51 +440,77 @@ class PagedKVAllocator:
         """Trim the speculative pre-charge back to what the committed
         length (set via ``grow_to``/``set_length`` since) actually needs —
         never below the pre-speculation table size.  No-op for requests
-        without an outstanding ``reserve_spec``."""
+        without an outstanding ``reserve_spec``.  Trimmed pages are always
+        the private tail (the base covers the whole prompt, so shared
+        prefix pages sit strictly below it)."""
         base = self._spec_base.pop(req_id, None)
         if base is None or req_id not in self._tables:
             return
         keep = max(base, self.pages_for(self._lengths[req_id]))
         table = self._tables[req_id]
         while len(table) > keep:
-            self._free.append(table.pop())
+            self._release_pages([table.pop()])
 
     def has_spec_reservation(self, req_id: int) -> bool:
         return req_id in self._spec_base
 
     def free(self, req_id: int) -> None:
-        """Return every page (KV + stash, HBM or host) of ``req_id``."""
+        """Return every page (KV + stash, HBM or host) of ``req_id``.
+        Shared prefix pages are decref'd, not freed — at refcount 0 they
+        park in the reclaimable LRU with their cached content intact."""
         assert self.owns(req_id), req_id
-        self._free.extend(reversed(self._tables.pop(req_id, [])))
-        self._free.extend(reversed(self._stash.pop(req_id, [])))
+        self._release_pages(self._tables.pop(req_id, []))
+        self._release_pages(self._stash.pop(req_id, []))
+        self._release_pages(self._swapped_shared.pop(req_id, []))
         self._host_free.extend(reversed(self._host_tables.pop(req_id, [])))
         self._lengths.pop(req_id, None)
         self._spec_base.pop(req_id, None)
+        self._hits.pop(req_id, None)
+        self._swap_moved.pop(req_id, None)
 
     # -- swap-to-host ---------------------------------------------------------
 
+    def _split_shared(self, table: List[int]) -> Tuple[List[int], List[int]]:
+        """Partition a block table into (shared, private) pages, order
+        preserved.  Shared pages always occupy a leading run (linked at
+        reserve or registered over the prompt's leading full pages)."""
+        shared = [p for p in table if p in self._page_digests]
+        private = [p for p in table if p not in self._page_digests]
+        return shared, private
+
     def can_swap_out(self, req_id: int) -> bool:
-        """True iff the host pool can hold ``req_id``'s KV pages right now.
-        A mid-prefill request (live stash) is never swappable — boundary
+        """True iff the host pool can hold ``req_id``'s PRIVATE KV pages
+        right now (shared prefix pages stay pinned in HBM — they are
+        read-only and other requests may be attached to them).  A
+        mid-prefill request (live stash) is never swappable — boundary
         activations are execution state, not KV; such victims fold to
         recompute instead."""
         if not self.is_resident(req_id) or self._stash.get(req_id):
             return False
-        return len(self._tables[req_id]) <= len(self._host_free)
+        _, private = self._split_shared(self._tables[req_id])
+        if not private:
+            # a fully-shared victim would be a zero-progress swap (nothing
+            # leaves HBM); recompute-eviction at least parks its shared
+            # pages in the reclaimable LRU
+            return False
+        return len(private) <= len(self._host_free)
 
     def swap_out(self, req_id: int) -> int:
-        """Move every KV page of ``req_id`` to the host pool; the block
-        table is remembered host-side in logical order.  Returns the number
-        of KV tokens moved (the DMA traffic the executor must price)."""
+        """Move the PRIVATE KV pages of ``req_id`` to the host pool (the
+        block table is remembered host-side in logical order); shared
+        prefix pages keep their refcount and stay pinned in HBM.  Returns
+        the number of KV tokens that actually cross the host link."""
         assert self.can_swap_out(req_id), req_id
-        n_pages = len(self._tables[req_id])
-        self._free.extend(reversed(self._tables.pop(req_id)))
+        shared, private = self._split_shared(self._tables.pop(req_id))
+        self._release_pages(private)
         self._stash.pop(req_id, None)       # empty by the can_swap_out guard
+        self._swapped_shared[req_id] = shared
         self._host_tables[req_id] = [self._host_free.pop()
-                                     for _ in range(n_pages)]
+                                     for _ in range(len(private))]
         self.host_pages_high_water = max(self.host_pages_high_water,
                                          self.host_pages_in_use())
-        moved = self._lengths[req_id]
+        moved = max(0, self._lengths[req_id] - len(shared) * self.page_size)
+        self._swap_moved[req_id] = moved
         self.n_swap_outs += 1
         self.swapped_out_tokens += moved
         return moved
@@ -267,20 +518,30 @@ class PagedKVAllocator:
     def swapped_pages(self, req_id: int) -> int:
         return len(self._host_tables[req_id])
 
+    def last_swap_tokens(self, req_id: int) -> int:
+        """KV tokens moved by ``req_id``'s most recent swap (either
+        direction) — the DMA traffic an executor prices.  Shared prefix
+        pages never move, so this can be less than ``length``."""
+        return self._swap_moved.get(req_id, 0)
+
     def can_swap_in(self, req_id: int) -> bool:
         return (self.is_swapped(req_id)
-                and len(self._host_tables[req_id]) <= len(self._free))
+                and len(self._host_tables[req_id]) <= self.n_free_pages)
 
     def swap_in(self, req_id: int) -> int:
-        """DMA-back: claim fresh HBM pages for the swapped KV and release
-        the host copy.  Returns the number of KV tokens moved."""
+        """DMA-back: claim fresh HBM pages for the swapped private KV,
+        re-attach the pinned shared prefix, and release the host copy.
+        Returns the number of KV tokens moved."""
         assert self.can_swap_in(req_id), req_id
-        n_pages = len(self._host_tables[req_id])
+        n_private = len(self._host_tables[req_id])
         self._host_free.extend(reversed(self._host_tables.pop(req_id)))
-        self._tables[req_id] = [self._free.pop() for _ in range(n_pages)]
+        shared = self._swapped_shared.pop(req_id, [])
+        self._tables[req_id] = shared + [self._take_page()
+                                         for _ in range(n_private)]
         self._stash[req_id] = []
         self._bump_high_water()
-        moved = self._lengths[req_id]
+        moved = max(0, self._lengths[req_id] - len(shared) * self.page_size)
+        self._swap_moved[req_id] = moved
         self.n_swap_ins += 1
         self.swapped_in_tokens += moved
         return moved
@@ -297,6 +558,90 @@ class PagedKVAllocator:
 
     # -- internals -----------------------------------------------------------
 
+    def _take_page(self) -> int:
+        """Claim one physical page: the free list first, then reclaim the
+        oldest refcount-0 shared page (evicting its index entry)."""
+        if self._free:
+            return self._free.pop()
+        pid, _ = self._lru.popitem(last=False)
+        self._unregister(pid)
+        return pid
+
+    def _release_pages(self, pages: List[int]) -> None:
+        """THE single release choke point for device pages (free / evict /
+        swap-out / spec trim / stash all funnel here): shared pages decref
+        and park in the reclaimable LRU at refcount 0 with content intact;
+        private pages return to the free list."""
+        for pid in reversed(pages):
+            if pid not in self._page_digests:
+                self._free.append(pid)
+                continue
+            self._refs[pid] -= 1
+            assert self._refs[pid] >= 0, pid
+            if self._refs[pid] == 0:
+                self._lru[pid] = None
+                self._enforce_lru_cap()
+
+    def _enforce_lru_cap(self) -> None:
+        cap = self.prefix_lru_pages
+        while cap is not None and len(self._lru) > cap:
+            pid, _ = self._lru.popitem(last=False)
+            self._unregister(pid)
+            self._free.append(pid)
+
+    def _unregister(self, pid: int) -> None:
+        """Drop one page from the shared index (LRU reclaim), notifying
+        the engine so its cached KV row snapshots die with the entry."""
+        d = self._page_digests.pop(pid)
+        self._index.pop(d, None)
+        self._page_tokens.pop(pid, None)
+        self._refs.pop(pid, None)
+        self.n_prefix_evictions += 1
+        if self.on_prefix_evict is not None:
+            self.on_prefix_evict(d)
+
     def _bump_high_water(self) -> None:
         self.pages_high_water = max(self.pages_high_water,
                                     self.pages_in_use())
+
+    # -- debug invariant ------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Assert global page conservation: every device page is in exactly
+        one of {free list, LRU, a block table, a stash, pinned-shared},
+        shared refcounts equal the number of referencing positions, and
+        every host page is in exactly one of {host free list, host table}.
+        O(pool) — for tests and debugging, never on the serving path."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page in free list"
+        lru = set(self._lru)
+        assert not free & lru, "page both free and LRU-parked"
+        refs: Dict[int, int] = {}
+        private_placed: List[int] = []
+        holders = (list(self._tables.values()) + list(self._stash.values())
+                   + list(self._swapped_shared.values()))
+        for t in holders:
+            for p in t:
+                if p in self._page_digests:
+                    refs[p] = refs.get(p, 0) + 1
+                else:
+                    private_placed.append(p)
+        assert len(private_placed) == len(set(private_placed)), \
+            "private page referenced by two tables"
+        assert not set(private_placed) & (free | lru), \
+            "placed private page also free/LRU"
+        for pid, d in self._page_digests.items():
+            assert self._index.get(d) == pid, (pid, "index out of sync")
+            assert self._refs[pid] == refs.get(pid, 0), \
+                (pid, self._refs[pid], refs.get(pid, 0))
+            assert (pid in lru) == (self._refs[pid] == 0), (pid, "LRU sync")
+            assert pid not in free, (pid, "shared page on free list")
+        for pid in lru:
+            assert pid in self._page_digests, (pid, "LRU page unregistered")
+        pinned = sum(1 for p in self._page_digests if self._refs[p] > 0)
+        assert (len(free) + len(lru) + len(private_placed) + pinned
+                == self.n_pages), "device page conservation violated"
+        host = list(self._host_free) + [p for t in self._host_tables.values()
+                                        for p in t]
+        assert sorted(host) == list(range(self.n_host_pages)), \
+            "host page conservation violated"

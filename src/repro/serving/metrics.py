@@ -94,6 +94,14 @@ def request_metrics(requests: Iterable[Request],
         acc_lens.extend(float(a) for a in r.accepted_lens)
     out["accepted_len_p50"] = percentile(acc_lens, 50)
     out["accepted_len_p90"] = percentile(acc_lens, 90)
+    # automatic prefix caching: token-weighted hit rate (cached prompt
+    # tokens over all admitted prompt tokens, recompute re-admissions
+    # included) and the mean cached tokens per request
+    cached = sum(r.cached_prompt_tokens for r in reqs)
+    admitted = sum(r.admitted_prompt_tokens for r in reqs)
+    out["prefix_hit_rate"] = cached / admitted if admitted else 0.0
+    out["cached_prompt_tokens"] = cached / len(reqs) if reqs \
+        else float("nan")
     if slo is not None:
         att = [slo.attained(r) for r in reqs]
         out["slo_attainment"] = sum(att) / len(att) if att else float("nan")

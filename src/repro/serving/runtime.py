@@ -36,6 +36,8 @@ import time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Callable, List, Optional, Protocol, Sequence
 
+import numpy as np
+
 from repro.core.plan import IterationPlan, Request, RequestState
 
 if TYPE_CHECKING:  # typing only — runtime must not import its backends
@@ -298,10 +300,16 @@ class SimExecutor:
         self.total_accepted = 0
 
     def submit(self, tr: "TraceRequest", now: float) -> Request:
+        # prompt_tokens (when the trace carries them) make the analytic
+        # backend prefix-cache-aware: the shared scheduler code hashes and
+        # matches exactly as it does under the engine, so cross-backend
+        # plan streams stay identical with caching enabled
         req = Request(req_id=self._next_id, prompt_len=tr.prompt_len,
                       max_new_tokens=tr.output_len,
                       arrival_time=tr.arrival_time,
-                      slo_class=tr.slo_class)
+                      slo_class=tr.slo_class,
+                      prompt_tokens=None if tr.prompt_tokens is None
+                      else np.asarray(tr.prompt_tokens, np.int32))
         self._next_id += 1
         self.scheduler.submit(req)
         return req
@@ -310,9 +318,9 @@ class SimExecutor:
         sim = self.sim
         dma = 0.0
         if plan.swapped_out_ids or plan.swapped_in_ids:
-            # swap DMA: lengths survive the swap so both directions price
-            # the victim's true filled KV
-            moved = sum(sim.kv.length(rid) for rid in
+            # swap DMA: tokens that actually crossed the host link (shared
+            # prefix pages stay pinned in HBM and move in neither direction)
+            moved = sum(sim.kv.last_swap_tokens(rid) for rid in
                         plan.swapped_out_ids + plan.swapped_in_ids)
             xfer = sim.cost.swap_transfer(moved)
             dma = xfer["duration"]

@@ -60,6 +60,16 @@ class SimResult:
     # speculative decode accounting (analytic acceptance)
     total_drafted: int = 0
     total_accepted: int = 0
+    # automatic prefix caching (traces must carry prompt_tokens to hit)
+    n_prefix_hits: int = 0
+    prefix_cached_tokens: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Token-weighted: cached prompt tokens over all admitted prompt
+        tokens (recompute re-admissions included)."""
+        admitted = sum(r.admitted_prompt_tokens for r in self.requests)
+        return self.prefix_cached_tokens / admitted if admitted else 0.0
 
     @property
     def acceptance_rate(self) -> float:
@@ -95,6 +105,8 @@ class Simulator:
                  decode_reserve: Optional[int] = None,
                  swap_overlap: bool = True,
                  class_headroom: Optional[Dict[str, int]] = None,
+                 prefix_cache: bool = True,
+                 prefix_lru_pages: Optional[int] = None,
                  spec_mode: str = "off", spec_k: int = 4,
                  spec_adaptive: bool = True,
                  spec_acceptance: float = 0.7, spec_seed: int = 0,
@@ -114,6 +126,13 @@ class Simulator:
         for comparison.  ``class_headroom`` reserves admission pages per
         SLO class (see core.base.Scheduler.attach_kv).
 
+        ``prefix_cache`` (default on) enables automatic prefix caching on
+        the shared allocator; hits need traces that carry
+        ``prompt_tokens`` (see traffic.attach_prompt_tokens /
+        shared_prefix_trace) — the cost model then prices only the
+        uncached prefill rectangles, mirroring the engine.
+        ``prefix_lru_pages`` caps retained refcount-0 cached pages.
+
         ``spec_mode``/``spec_k`` enable speculative verify-k decoding in
         the planned iterations; the simulator has no tokens, so acceptance
         is ANALYTIC — a run of consecutive Bernoulli(``spec_acceptance``)
@@ -132,7 +151,9 @@ class Simulator:
             host_pages = 4 * n_pages if preemption_mode != "recompute" else 0
         self.kv = PagedKVAllocator(n_pages, page_size,
                                    stash_factor=cfg.stash_token_factor(),
-                                   n_host_pages=host_pages)
+                                   n_host_pages=host_pages,
+                                   prefix_caching=prefix_cache,
+                                   prefix_lru_pages=prefix_lru_pages)
         swap_cost_fn = None
         if preemption_mode == "auto":
             swap_cost_fn = lambda r: self.cost.swap_beats_recompute(  # noqa: E731
@@ -191,4 +212,6 @@ class Simulator:
             n_host_pages=self.kv.n_host_pages,
             total_drafted=ex.total_drafted,
             total_accepted=ex.total_accepted,
+            n_prefix_hits=self.kv.n_prefix_hits,
+            prefix_cached_tokens=self.kv.n_prefix_tokens,
         )

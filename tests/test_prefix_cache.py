@@ -1,0 +1,323 @@
+"""Automatic prefix caching (DESIGN.md §Prefix caching): the refcounted
+shared-page index on the allocator, and the engine acceptance bar — token
+streams bit-identical cache-on vs cache-off under BOTH preemption modes,
+with no page leaked and every refcount back to zero at drain.
+
+The allocator property test interleaves admit / decode-growth / spec
+reserve / swap / free over shared-prefix prompts with
+``check_invariants`` after every step; the engine tests replay small
+shared-prefix workloads (including the mixed-cohort packed regression:
+a warm restored request admitted into the same layered cohort as a cold
+full prompt, the shape that exposed ``_write_cache``'s clamped
+dynamic-update-slice).
+"""
+
+from __future__ import annotations
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # degrade to a deterministic seeded sweep
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from conftest import tiny_dense, tiny_moe
+from repro.core.base import make_scheduler
+from repro.models.model import DecoderModel
+from repro.serving.kvcache import PagedKVAllocator, PagedPoolExhausted
+from repro.serving.engine import Engine
+
+PS = 4        # allocator-test page size
+
+
+def _alloc(n_pages=24, **kw):
+    base = dict(n_pages=n_pages, page_size=PS, prefix_caching=True)
+    base.update(kw)
+    return PagedKVAllocator(**base)
+
+
+def _prompt(rng, prefix, n_suffix):
+    return list(prefix) + [int(x) for x in rng.integers(1, 97, n_suffix)]
+
+
+def _admit_and_register(alloc, rid, prompt, decode=PS):
+    hit = alloc.reserve(rid, len(prompt) + decode, prompt_tokens=prompt)
+    alloc.set_length(rid, len(prompt))
+    alloc.register_prefix(rid, prompt)
+    return hit
+
+
+# -- allocator unit tests ----------------------------------------------------
+
+
+def test_chain_match_is_content_verified_and_page_aligned():
+    alloc = _alloc()
+    prompt = list(range(1, 11))               # 10 tokens: 2 full pages + 2
+    _admit_and_register(alloc, 0, prompt)
+    # longer prompt sharing both full pages hits exactly the full pages
+    hit = alloc.lookup_prefix(prompt[:8] + [55, 56, 57, 58, 59])
+    assert hit.cached_tokens == 8 and len(hit.pages) == 2 and not hit.cow
+    # diverging inside the SECOND page only matches the first
+    hit = alloc.lookup_prefix(prompt[:4] + [99] * 8)
+    assert hit.cached_tokens == 4 and len(hit.pages) == 1
+    # diverging in the first page misses entirely
+    assert alloc.lookup_prefix([99] * 12).cached_tokens == 0
+
+
+def test_fully_covered_prompt_drops_last_page_cow():
+    alloc = _alloc()
+    prompt = list(range(1, 9))                # exactly 2 full pages
+    _admit_and_register(alloc, 0, prompt)
+    hit = alloc.lookup_prefix(prompt)
+    # the last matched page is dropped: its tokens re-prefill into a
+    # private copy so the request still computes final logits, and the
+    # hit only references pages that will be refcount-linked
+    assert hit.cow and hit.cached_tokens == 4 and len(hit.pages) == 1
+    assert hit.leaf is not None
+
+
+def test_refcounts_link_park_and_revive():
+    alloc = _alloc()
+    prompt = list(range(1, 9)) + [20, 21]     # 2 full pages + tail
+    _admit_and_register(alloc, 0, prompt)
+    shared = [p for p in alloc.block_table(0) if p in alloc._page_digests]
+    assert len(shared) == 2
+    hit = alloc.reserve(1, len(prompt) + PS, prompt_tokens=prompt)
+    assert hit.cached_tokens == 8
+    assert all(alloc._refs[p] == 2 for p in shared)
+    alloc.free(0)
+    assert all(alloc._refs[p] == 1 for p in shared)
+    alloc.free(1)
+    # refcount 0: parked in the reclaimable LRU, still counted free
+    assert all(alloc._refs[p] == 0 for p in shared)
+    assert alloc.pages_in_use() == 0 and alloc.n_shared_pages == 2
+    # a new hit revives the parked pages instead of reallocating
+    hit = alloc.reserve(2, len(prompt) + PS, prompt_tokens=prompt)
+    assert set(hit.pages) == set(shared)
+    alloc.check_invariants()
+
+
+def test_pool_pressure_reclaims_lru_and_notifies_engine():
+    evicted = []
+    alloc = _alloc(n_pages=6)
+    alloc.on_prefix_evict = evicted.append
+    prompt = list(range(1, 9))                # 2 shared pages once freed
+    _admit_and_register(alloc, 0, prompt, decode=0)
+    alloc.free(0)
+    assert alloc.n_shared_pages == 2 and alloc.n_free_pages == 6
+    # a cold reservation needing the whole pool must reclaim the LRU
+    alloc.reserve(1, 6 * PS)
+    assert alloc.n_shared_pages == 0 and len(evicted) == 2
+    assert alloc.n_prefix_evictions == 2
+    alloc.check_invariants()
+
+
+def test_prefix_lru_pages_caps_retained_pages():
+    evicted = []
+    alloc = _alloc(prefix_lru_pages=1)
+    alloc.on_prefix_evict = evicted.append
+    prompt = list(range(1, 13))               # 3 full pages
+    _admit_and_register(alloc, 0, prompt, decode=0)
+    alloc.free(0)
+    assert alloc.n_shared_pages == 1 and len(evicted) == 2
+    alloc.check_invariants()
+
+
+def test_register_is_idempotent_and_race_safe():
+    alloc = _alloc()
+    prompt = list(range(1, 9))
+    alloc.reserve(0, len(prompt), prompt_tokens=prompt)
+    alloc.set_length(0, len(prompt))
+    first = alloc.register_prefix(0, prompt)
+    assert [d for d, _ in first] and alloc.register_prefix(0, prompt) == []
+    # a cohort mate that prefilled the same prompt privately loses the
+    # race: its pages stay private, the index still serves request 0's
+    alloc.reserve(1, len(prompt))
+    alloc.set_length(1, len(prompt))
+    assert alloc.register_prefix(1, prompt) == []
+    before = dict(alloc._index)
+    alloc.free(1)
+    assert alloc._index == before
+    alloc.check_invariants()
+
+
+def test_swap_pins_shared_pages_in_hbm():
+    alloc = _alloc(n_host_pages=24)
+    prompt = list(range(1, 9)) + [30, 31]
+    _admit_and_register(alloc, 0, prompt)
+    hit = alloc.reserve(1, len(prompt) + PS, prompt_tokens=prompt)
+    alloc.set_length(1, len(prompt))
+    assert alloc.can_swap_out(1)
+    moved = alloc.swap_out(1)
+    # shared prefix pages never cross the host link: only private tokens
+    assert moved == len(prompt) - hit.cached_tokens
+    assert all(alloc._refs[p] >= 1 for p in hit.pages)
+    alloc.check_invariants()
+    alloc.swap_in(1)
+    assert alloc.block_table(1)[:len(hit.pages)] == list(hit.pages)
+    alloc.check_invariants()
+    alloc.free(1)
+    alloc.free(0)
+    assert alloc.pages_in_use() == 0 and alloc.host_pages_in_use() == 0
+
+
+# -- allocator property test -------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_interleaved_lifecycle_never_leaks(seed):
+    """Random admit/grow/spec/swap/free interleavings over shared-prefix
+    prompts: page conservation holds after every operation, and at drain
+    every refcount is zero with the whole pool reclaimable."""
+    rng = np.random.default_rng(seed)
+    pyrng = random.Random(seed)
+    alloc = _alloc(n_pages=int(rng.integers(16, 40)),
+                   n_host_pages=24, stash_factor=0.5,
+                   prefix_lru_pages=pyrng.choice([None, 2, 6]))
+    prefixes = [[int(x) for x in rng.integers(1, 97, 8)] for _ in range(3)]
+    live, registered, next_rid = {}, set(), 0
+    for _ in range(60):
+        op = pyrng.choice(["admit", "grow", "spec", "swap_out",
+                           "swap_in", "free"])
+        try:
+            if op == "admit":
+                prompt = _prompt(rng, pyrng.choice(prefixes),
+                                 int(rng.integers(0, 6)))
+                rid, next_rid = next_rid, next_rid + 1
+                alloc.reserve(rid, len(prompt) + PS,
+                              stash_tokens=len(prompt) // 2,
+                              prompt_tokens=prompt)
+                alloc.set_length(rid, len(prompt))
+                live[rid] = prompt
+            elif op == "grow" and live:
+                rid = pyrng.choice(sorted(live))
+                if alloc.is_resident(rid):
+                    alloc.grow_to(rid, alloc.length(rid) + 1)
+                    if rid not in registered:
+                        alloc.release_stash(rid)
+                        alloc.register_prefix(rid, live[rid])
+                        registered.add(rid)
+            elif op == "spec" and live:
+                rid = pyrng.choice(sorted(live))
+                if alloc.is_resident(rid):
+                    alloc.reserve_spec(rid, alloc.length(rid)
+                                       + int(rng.integers(1, 2 * PS)))
+                    alloc.release_spec(rid)
+            elif op == "swap_out" and live:
+                rid = pyrng.choice(sorted(live))
+                if alloc.can_swap_out(rid):
+                    alloc.swap_out(rid)
+            elif op == "swap_in" and live:
+                rid = pyrng.choice(sorted(live))
+                if alloc.is_swapped(rid) and alloc.can_swap_in(rid):
+                    alloc.swap_in(rid)
+            elif op == "free" and live:
+                rid = pyrng.choice(sorted(live))
+                alloc.free(rid)
+                live.pop(rid)
+                registered.discard(rid)
+        except PagedPoolExhausted:
+            pass
+        alloc.check_invariants()
+    for rid in sorted(live):
+        alloc.free(rid)
+    alloc.check_invariants()
+    assert alloc.pages_in_use() == 0
+    assert all(r == 0 for r in alloc._refs.values())
+    assert alloc.host_pages_in_use() == 0
+
+
+# -- engine bit-identity -----------------------------------------------------
+
+
+def _shared_jobs(seed, n=6, prefix_len=24, suffix=4, out=4):
+    rng = np.random.default_rng(seed)
+    prefixes = [list(rng.integers(1, 97, prefix_len)) for _ in range(2)]
+    return [(list(map(int, prefixes[int(rng.integers(2))]))
+             + [int(x) for x in rng.integers(1, 97, suffix)], out)
+            for _ in range(n)]
+
+
+def _run_engine(cfg, jobs, **eng_kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=4, quantum=8,
+                           token_budget=64)
+    eng = Engine(model, params, sched, n_slots=4, max_len=64, page_size=4,
+                 **eng_kw)
+    for prompt, max_new in jobs:
+        eng.submit(prompt, max_new)
+    eng.run(max_iterations=100_000)
+    return eng
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_tokens_identical_cache_on_vs_off(mode):
+    """The acceptance bar: identical greedy streams with caching on, in
+    both preemption modes, with the cache actually hitting and the
+    allocator fully drained (no leak, refcounts zero) at the end."""
+    cfg = tiny_dense()
+    jobs = _shared_jobs(0)
+    kw = dict(pages=40, preemption=True, preemption_mode=mode,
+              host_pages=160 if mode == "swap" else None, decode_reserve=0)
+    off = _run_engine(cfg, jobs, prefix_cache=False, **kw)
+    on = _run_engine(cfg, jobs, prefix_cache=True, **kw)
+    assert {r: list(v) for r, v in on.outputs.items()} == \
+           {r: list(v) for r, v in off.outputs.items()}
+    assert on.alloc.n_prefix_hits > 0 and on.alloc.n_prefix_tokens > 0
+    on.alloc.check_invariants()
+    assert on.alloc.pages_in_use() == 0
+    assert all(r == 0 for r in on.alloc._refs.values())
+
+
+def test_mixed_cohort_packed_regression():
+    """A warm restored request admitted into the SAME layered cohort as a
+    cold full prompt: the warm row is bucket-padded to the cold row's
+    window, so its KV write would slide below its offset under a clamped
+    dynamic-update-slice and corrupt the restored prefix.  Guards the
+    per-token scatter in models/attention._write_cache."""
+    cfg = tiny_dense()
+    rng = np.random.default_rng(7)
+    pfx = [int(x) for x in rng.integers(1, 97, 24)]
+    cold = [int(x) for x in rng.integers(1, 97, 28)]
+    warm_sfx = [int(x) for x in rng.integers(1, 97, 4)]
+
+    def run(cache_on):
+        model = DecoderModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        sched = make_scheduler("layered", model.n_blocks, n_slots=4,
+                               quantum=8, token_budget=64)
+        eng = Engine(model, params, sched, n_slots=4, max_len=64,
+                     page_size=4, packed=True, prefix_cache=cache_on)
+        eng.submit(pfx + [int(x) for x in rng.integers(1, 97, 4)], 2)
+        eng.run(max_iterations=10_000)       # registers the prefix
+        eng.submit(cold, 2)                  # cold: other prompt
+        eng.submit(pfx + warm_sfx, 2)        # warm: same cohort as cold
+        eng.run(max_iterations=10_000)
+        return {r: list(v) for r, v in eng.outputs.items()}
+
+    rng_state = rng.bit_generator.state
+    base = run(False)
+    rng.bit_generator.state = rng_state      # same first-job suffix
+    assert run(True) == base
+
+
+def test_spec_decode_rides_shared_prefixes():
+    """Speculative verify-k over a warm shared-prefix workload: streams
+    stay identical to the non-speculating cache-off run (spec and prefix
+    caching are both lossless, composed)."""
+    cfg = tiny_moe()
+    jobs = _shared_jobs(1, n=6, out=8)
+    off = _run_engine(cfg, jobs, prefix_cache=False, spec_mode="off")
+    on = _run_engine(cfg, jobs, prefix_cache=True, spec_mode="ngram",
+                     spec_k=3)
+    assert {r: list(v) for r, v in on.outputs.items()} == \
+           {r: list(v) for r, v in off.outputs.items()}
+    assert on.alloc.n_prefix_hits > 0
+    on.alloc.check_invariants()
+    assert all(r == 0 for r in on.alloc._refs.values())
