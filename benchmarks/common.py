@@ -10,6 +10,7 @@ import time
 from typing import Dict, List
 
 from repro.configs import get_config
+from repro.launch.config import ServeConfig
 from repro.serving.cost_model import H100X2
 from repro.serving.metrics import SLOConfig, per_class_metrics, request_metrics
 from repro.serving.simulator import Simulator
@@ -65,13 +66,20 @@ def run_sim_trace(model: str, trace, scheduler: str, slo=None, **sched_kw):
     or a per-class dict; returns (aggregate metrics, SimResult,
     per-class metrics)."""
     cfg = get_config(model)
-    defaults = dict(token_budget=512, quantum=512)
+    # the standard configuration is ONE ServeConfig (launch/config.py) —
+    # the same defaults serve.py and the load generator run under —
+    # specialized only by the paper's benchmark batch shape; per-point
+    # overrides then layer on top in the Simulator kwarg namespace
+    base = ServeConfig(arch=model, scheduler=scheduler, simulate=True,
+                       slots=N_SLOTS, token_budget=512,
+                       quantum=512).validate()
+    defaults = base.sim_kwargs()
     defaults.update(sched_kw)
     if defaults.pop("oversubscribed", False):
         defaults.setdefault(
             "n_pages", oversubscribed_pages(
                 model, trace, defaults.get("page_size", 16)))
-    sim = Simulator(cfg, scheduler, H100X2, n_slots=N_SLOTS, **defaults)
+    sim = Simulator(cfg, scheduler, H100X2, **defaults)
     res = sim.run(trace)
     agg_slo = None if isinstance(slo, dict) else slo
     m = request_metrics(res.requests, agg_slo)

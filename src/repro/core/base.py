@@ -173,7 +173,8 @@ class Scheduler:
             return {}
         budgets: Dict[int, int] = {}
         decodes = sorted((r for r in self.requests.values()
-                          if r.state == RequestState.DECODE),
+                          if r.state == RequestState.DECODE
+                          and r.use_speculation),
                          key=lambda r: r.req_id)
         for r in decodes:
             k = self._spec_budget(r)
@@ -298,11 +299,11 @@ class Scheduler:
         # prefix-aware admission: matched prefix tokens are charged zero new
         # pages (can_admit links, not allocates, shared pages) and the stash
         # only ever carries the UNCACHED tail of the prompt
-        hit = self.kv.lookup_prefix(r.prompt_tokens)
+        hit = self.kv.lookup_prefix(r.cacheable_prompt)
         stash = self.max_stash_tokens(
             r, prompt_len=r.prompt_len - hit.cached_tokens)
         return self.kv.can_admit(need, stash, headroom_pages=headroom,
-                                 prompt_tokens=r.prompt_tokens)
+                                 prompt_tokens=r.cacheable_prompt)
 
     def admit(self, now: float, limit: Optional[int] = None) -> List[int]:
         """FCFS admission, gated on BOTH a free slot and the page pool
@@ -324,11 +325,11 @@ class Scheduler:
                 break
             self.waiting.popleft()
             if self.kv is not None:
-                hit = self.kv.lookup_prefix(r.prompt_tokens)
+                hit = self.kv.lookup_prefix(r.cacheable_prompt)
                 stash = self.max_stash_tokens(
                     r, prompt_len=r.prompt_len - hit.cached_tokens)
                 hit = self.kv.reserve(rid, r.prompt_len + self.decode_reserve,
-                                      stash, prompt_tokens=r.prompt_tokens)
+                                      stash, prompt_tokens=r.cacheable_prompt)
                 # matched prefix tokens are already computed: this prefill
                 # epoch starts past the cached boundary (every layer group
                 # skips them uniformly — per-group KV is complete for
@@ -578,7 +579,7 @@ class Scheduler:
                     # shared-prefix index (idempotent — the engine may have
                     # registered already when snapshotting its KV row) so
                     # later admissions can link them refcounted
-                    self.kv.register_prefix(sl.req_id, r.prompt_tokens)
+                    self.kv.register_prefix(sl.req_id, r.cacheable_prompt)
                 r.state = RequestState.DECODE
                 r.n_generated += 1
                 if r.n_generated >= r.max_new_tokens:

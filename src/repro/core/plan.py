@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 
 class RequestState(enum.Enum):
@@ -39,6 +39,59 @@ class RequestState(enum.Enum):
     DONE = "done"
 
 
+@dataclass(frozen=True)
+class SubmitSpec:
+    """THE request-ingestion record.  Every path that creates a serving
+    request — HTTP POST /v1/generate, open-loop trace replay, closed-loop
+    benchmark drains, the load generator — builds one of these and hands
+    it to ``Executor.submit`` / ``Engine.submit_spec``; there is no other
+    door.  Frozen so a spec can sit in a cross-thread queue, be retried
+    after a 429, or be replayed offline without aliasing surprises.
+
+    ``prompt_tokens`` carries real token ids (required by the engine;
+    analytic backends may run from ``prompt_len`` alone).  ``arrival_time``
+    is the trace timestamp for replay; None means "stamp me when the
+    serving loop first sees me" — the live-traffic case.  ``tenant`` is
+    the rate-limiting identity used by the HTTP front-end (per-tenant
+    token buckets); it defaults to the SLO class when unset so single-
+    tenant setups need no extra field."""
+    max_new_tokens: int
+    prompt_tokens: Optional[Tuple[int, ...]] = None
+    prompt_len: Optional[int] = None
+    slo_class: str = "interactive"
+    arrival_time: Optional[float] = None
+    tenant: Optional[str] = None
+    # engine-only extras: encoder frames for enc-dec models (kept opaque
+    # here — the engine validates shape), opt-outs for the shared-prefix
+    # cache and speculative decoding on a per-request basis
+    enc_frames: Optional[object] = None
+    prefix_cache: bool = True
+    speculative: bool = True
+
+    def __post_init__(self):
+        if self.prompt_tokens is None and self.prompt_len is None:
+            raise ValueError(
+                "SubmitSpec needs prompt_tokens (engine) or prompt_len "
+                "(analytic backends)")
+        if self.prompt_tokens is not None:
+            toks = tuple(int(t) for t in self.prompt_tokens)
+            object.__setattr__(self, "prompt_tokens", toks)
+            if self.prompt_len is None:
+                object.__setattr__(self, "prompt_len", len(toks))
+            elif self.prompt_len != len(toks):
+                raise ValueError(
+                    f"prompt_len {self.prompt_len} != "
+                    f"len(prompt_tokens) {len(toks)}")
+        if self.prompt_len <= 0:
+            raise ValueError(f"prompt_len must be positive, "
+                             f"got {self.prompt_len}")
+        if self.max_new_tokens <= 0:
+            raise ValueError(f"max_new_tokens must be positive, "
+                             f"got {self.max_new_tokens}")
+        if self.tenant is None:
+            object.__setattr__(self, "tenant", self.slo_class)
+
+
 @dataclass
 class Request:
     req_id: int
@@ -51,6 +104,12 @@ class Request:
     slo_class: str = "interactive"
     # engine-only: actual token ids (None in the simulator)
     prompt_tokens: Optional[object] = None
+    # rate-limiting identity (SubmitSpec.tenant); per-request opt-outs for
+    # the shared-prefix cache (neither match nor publish) and speculative
+    # decoding (never drafted for) — SubmitSpec carries both end to end
+    tenant: str = "interactive"
+    use_prefix_cache: bool = True
+    use_speculation: bool = True
     state: RequestState = RequestState.WAITING
     # prefill progress. After a preemption, prompt_len is the RECOMPUTE
     # length (original prompt + tokens generated before eviction) and these
@@ -89,10 +148,36 @@ class Request:
         return self.prompt_len - self.tokens_done
 
     @property
+    def cacheable_prompt(self) -> Optional[object]:
+        """Prompt tokens as seen by the shared-prefix machinery: None when
+        this request opted out, so every lookup/register site uniformly
+        sees a miss without sprinkling flag checks."""
+        return self.prompt_tokens if self.use_prefix_cache else None
+
+    @property
     def prefix_hit_rate(self) -> float:
         """Fraction of this request's admitted prompt tokens served from
         the shared prefix cache (0.0 before first admission)."""
         return self.cached_prompt_tokens / max(self.admitted_prompt_tokens, 1)
+
+    @classmethod
+    def from_spec(cls, spec: "SubmitSpec", req_id: int, *,
+                  arrival_time: float,
+                  prompt_tokens: Optional[object] = None) -> "Request":
+        """Build the mutable serving Request from an ingestion spec — the
+        one place spec fields map onto request fields, shared by the
+        engine and the analytic backends.  ``prompt_tokens`` lets the
+        caller pass its backend-native array form (the engine's int32
+        ndarray); defaults to the spec's tuple."""
+        return cls(req_id=req_id, prompt_len=spec.prompt_len,
+                   max_new_tokens=spec.max_new_tokens,
+                   arrival_time=arrival_time,
+                   slo_class=spec.slo_class,
+                   prompt_tokens=spec.prompt_tokens
+                   if prompt_tokens is None else prompt_tokens,
+                   tenant=spec.tenant,
+                   use_prefix_cache=spec.prefix_cache,
+                   use_speculation=spec.speculative)
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:

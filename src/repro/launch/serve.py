@@ -4,7 +4,13 @@ discrete-event simulator at full model scale.  Both run the SAME
 ServingRuntime loop (serving/runtime.py): closed-loop drain by default,
 open-loop timed-trace replay with ``--open-loop`` (engine) or
 ``--simulate`` (always open-loop), optional per-token streaming via
-``--stream`` and multi-tenant class mixes via ``--batch-fraction``.
+``--stream``, multi-tenant class mixes via ``--batch-fraction`` — and,
+with ``--http``, a live asyncio HTTP/SSE front-end (serving/server.py)
+ingesting POST /v1/generate concurrently with the engine loop.
+
+Every flag lives on ``ServeConfig`` (launch/config.py) — the same typed
+configuration the benchmarks and the load generator consume, with
+``to_json``/``from_json`` round-trips for recording exactly what ran.
 
 Usage:
   # real engine, reduced model, layered prefill, closed loop:
@@ -14,6 +20,13 @@ Usage:
   # real engine, open-loop Poisson replay with streamed tokens:
   PYTHONPATH=src python -m repro.launch.serve --smoke --open-loop \
       --rate 0.5 --requests 8 --stream
+
+  # live HTTP/SSE service on port 8000 (per-tenant rate limit 4 req/s,
+  # 429 backpressure past the queue/pool watermarks, /metrics scrape):
+  PYTHONPATH=src python -m repro.launch.serve --smoke --http :8000 \
+      --ratelimit-rate 4
+  curl -N localhost:8000/v1/generate \
+      -d '{"prompt_tokens": [1,2,3], "max_new_tokens": 8}'
 
   # full-scale simulation of the paper's serving scenario, 30% batch-class
   # bursty background traffic, 64 pages held back for interactive:
@@ -26,38 +39,32 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 
 import jax
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config, list_configs
-from repro.core.base import SCHEDULERS, make_scheduler
+from repro.configs import get_config, get_smoke_config
+from repro.core.base import make_scheduler
+from repro.launch.config import ServeConfig
 from repro.models.model import DecoderModel
 from repro.serving.cost_model import H100X2, TPU_V5E
 from repro.serving.engine import Engine
-from repro.serving.metrics import (SLOConfig, per_class_metrics,
-                                   request_metrics)
+from repro.serving.metrics import per_class_metrics, request_metrics
 from repro.serving.runtime import EngineExecutor, ServingRuntime
+from repro.serving.server import ServingServer
 from repro.serving.simulator import Simulator
 from repro.serving.traffic import (ARRIVAL_PROCESSES, DATASETS, ClassSpec,
-                                   DatasetModel, LengthModel,
-                                   attach_prompt_tokens, multi_class_trace)
+                                   multi_class_trace)
 
 
-def preemption_opts(args):
-    """Map --preemption {on,off,recompute,swap,auto} onto the scheduler's
-    (enabled, mode) pair: "on" is a legacy alias for "recompute"; "off"
-    disables eviction entirely (queueing-only admission)."""
-    enabled = args.preemption != "off"
-    mode = args.preemption if args.preemption in ("swap", "auto") \
-        else "recompute"
-    return enabled, mode
-
-
-def class_headroom_opt(args):
-    """--class-headroom N reserves N pages for interactive admissions."""
-    return {"interactive": args.class_headroom} if args.class_headroom \
-        else None
+def _f(v, spec: str = ".2f") -> str:
+    """NaN/None-safe number formatting for the per-class report lines:
+    a class with zero completed requests has NaN percentiles, and "-" is
+    the honest column value (format() would happily print "nan")."""
+    if v is None or (isinstance(v, float) and math.isnan(v)):
+        return "-"
+    return format(v, spec)
 
 
 def _print_per_class(tag, requests, slo=None) -> None:
@@ -65,80 +72,60 @@ def _print_per_class(tag, requests, slo=None) -> None:
     if len(per) < 2:
         return
     for cls, m in per.items():
-        att = f" slo={m['slo_attainment']:.2f}" if "slo_attainment" in m \
+        att = f" slo={_f(m['slo_attainment'])}" if "slo_attainment" in m \
             else ""
         print(f"[{tag}]   class {cls:<12} n={m['n_requests']:.0f} "
-              f"ttft mean={m['ttft_mean']:.2f} p99={m['ttft_p99']:.2f}; "
-              f"preempt rate {m['preemption_rate']:.2f}/req; "
-              f"swap rate {m['swap_rate']:.2f}/req{att}")
+              f"ttft mean={_f(m['ttft_mean'])} p99={_f(m['ttft_p99'])}; "
+              f"preempt rate {_f(m['preemption_rate'])}/req; "
+              f"swap rate {_f(m['swap_rate'])}/req{att}")
 
 
-def _engine_trace(args, cfg):
-    """Open-loop trace for the smoke-scale engine, built with the SAME
-    traffic generators as the simulator (``--arrival`` selects the
-    process, ``--batch-fraction`` the class mix) but with a length model
-    shrunk to the engine's max_len, and real token ids attached for
-    replay.  ``--rate`` is requests per unit of the selected clock."""
-    smoke = DatasetModel(
-        name="engine-smoke",
-        input_len=LengthModel(mean=args.max_len // 6, std=args.max_len // 8,
-                              lo=16, hi=args.max_len // 2),
-        output_len=LengthModel(mean=9, std=4, lo=4, hi=15))
-    n_batch = int(round(args.requests * args.batch_fraction))
-    specs = [ClassSpec("batch", smoke, args.rate * args.batch_fraction,
-                       n_batch, process=args.arrival)] if n_batch else []
-    if args.requests - n_batch:
-        specs.append(ClassSpec(
-            "interactive", smoke, args.rate * (1 - args.batch_fraction),
-            args.requests - n_batch,
-            process=args.arrival if not n_batch else "poisson"))
-    trace = multi_class_trace(specs, seed=args.seed)
-    return attach_prompt_tokens(trace, cfg.vocab_size, seed=args.seed)
-
-
-def serve_real(args) -> None:
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+def build_engine(sc: ServeConfig) -> Engine:
+    """The one engine constructor every real-execution mode shares
+    (closed loop, open-loop replay, HTTP service, load_gen verification)."""
+    cfg = get_smoke_config(sc.arch) if sc.smoke else get_config(sc.arch)
     model = DecoderModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    sched = make_scheduler(args.scheduler, model.n_blocks,
-                           n_slots=args.slots, quantum=args.quantum,
-                           token_budget=args.token_budget)
-    enabled, mode = preemption_opts(args)
-    eng = Engine(model, params, sched, n_slots=args.slots,
-                 max_len=args.max_len, moe_dispatch=args.moe_dispatch,
-                 pages=args.pages, page_size=args.page_size,
-                 preemption=enabled, preemption_mode=mode,
-                 host_pages=args.host_pages,
-                 swap_in_budget=args.swap_in_budget,
-                 decode_reserve=args.decode_reserve,
-                 class_headroom=class_headroom_opt(args),
-                 packed=args.packed,
-                 prefix_cache=args.prefix_cache,
-                 prefix_lru_pages=args.prefix_lru_pages,
-                 spec_mode=args.spec, spec_k=args.spec_k,
-                 draft_config=args.draft_config)
+    sched = make_scheduler(sc.scheduler, model.n_blocks,
+                           **sc.scheduler_kwargs())
+    return Engine(model, params, sched, **sc.engine_kwargs())
+
+
+def serve_http(sc: ServeConfig) -> None:
+    """Live HTTP/SSE service: the engine iteration loop runs on a
+    background thread in wall-clock mode while asyncio ingests requests
+    concurrently (serving/server.py)."""
+    eng = build_engine(sc)
+    server = ServingServer(eng, **sc.server_kwargs())
+    server.serve_forever()
+
+
+def serve_real(sc: ServeConfig) -> None:
+    eng = build_engine(sc)
+    cfg = eng.cfg
+
     def _stream(rid, tok, t):
         print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
-    on_token = _stream if args.stream else None
-    if args.open_loop:
+    on_token = _stream if sc.stream else None
+    if sc.open_loop:
         # open-loop timed replay through the shared runtime: requests are
         # injected at their arrival times, the engine idles through gaps
-        trace = _engine_trace(args, cfg)
-        wall = args.clock == "wall"
+        trace = sc.engine_trace(cfg.vocab_size)
+        wall = sc.clock == "wall"
         runtime = ServingRuntime(
             EngineExecutor(eng, wall=wall), on_token=on_token,
             clock="executor" if wall else "iteration")
         runtime.run(trace, max_iterations=100_000)
         unit = "s" if wall else "iters"
     else:
-        rng = np.random.default_rng(args.seed)
-        for _ in range(args.requests):
-            n = int(rng.integers(16, args.max_len // 2))
+        rng = np.random.default_rng(sc.seed)
+        for _ in range(sc.requests):
+            n = int(rng.integers(16, sc.max_len // 2))
             enc = None
             if cfg.encoder.enabled:
                 enc = np.zeros((cfg.encoder.n_frames, cfg.d_model),
                                np.float32)
-            cls = "batch" if rng.random() < args.batch_fraction \
+            cls = "batch" if rng.random() < sc.batch_fraction \
                 else "interactive"
             eng.submit(rng.integers(1, cfg.vocab_size, n).tolist(),
                        max_new_tokens=int(rng.integers(4, 16)),
@@ -148,36 +135,36 @@ def serve_real(args) -> None:
         runtime.run((), max_iterations=100_000)
         unit = "iters"
     m = request_metrics(eng.requests.values())
-    loop = "open-loop" if args.open_loop else "closed-loop"
-    print(f"[serve] {cfg.name} x {args.scheduler} ({loop}): "
-          f"{args.requests} requests in {eng.iteration} iterations")
-    print(f"[serve] ttft({unit}) mean={m['ttft_mean']:.1f} "
-          f"p99={m['ttft_p99']:.1f}; expert-load "
+    loop = "open-loop" if sc.open_loop else "closed-loop"
+    print(f"[serve] {cfg.name} x {sc.scheduler} ({loop}): "
+          f"{sc.requests} requests in {eng.iteration} iterations")
+    print(f"[serve] ttft({unit}) mean={_f(m['ttft_mean'], '.1f')} "
+          f"p99={_f(m['ttft_p99'], '.1f')}; expert-load "
           f"{eng.expert_load_bytes / 1e6:.1f} MB")
     print(f"[serve] kv pages high-water {eng.alloc.pages_high_water}"
           f"/{eng.alloc.n_pages}; queue delay mean "
-          f"{m['queue_delay_mean']:.1f} {unit}; "
+          f"{_f(m['queue_delay_mean'], '.1f')} {unit}; "
           f"preemptions {eng.n_preempted} "
-          f"(rate {m['preemption_rate']:.2f}/req)")
-    print(f"[serve] hot path: {'packed' if args.packed else 'per-slice'}; "
+          f"(rate {_f(m['preemption_rate'])}/req)")
+    print(f"[serve] hot path: {'packed' if sc.packed else 'per-slice'}; "
           f"{eng.n_dispatches} device launches "
           f"({eng.n_dispatches / max(eng.iteration, 1):.1f}/iter), "
           f"{eng.n_prefill_dispatches} prefill batches, "
           f"{eng.n_prefill_compiles} prefill executables")
-    if args.spec != "off":
+    if sc.spec != "off":
         acc = m["spec_acceptance_rate"]
         tpd = (sum(r.n_generated for r in eng.requests.values())
                / max(eng.n_dispatches, 1))
-        print(f"[serve] spec({args.spec}, k={args.spec_k}): "
+        print(f"[serve] spec({sc.spec}, k={sc.spec_k}): "
               f"{eng.n_spec_proposed} drafted, {eng.n_spec_accepted} "
-              f"accepted (rate {acc:.2f}); accepted len "
-              f"p50={m['accepted_len_p50']:.1f} "
-              f"p90={m['accepted_len_p90']:.1f}; "
+              f"accepted (rate {_f(acc)}); accepted len "
+              f"p50={_f(m['accepted_len_p50'], '.1f')} "
+              f"p90={_f(m['accepted_len_p90'], '.1f')}; "
               f"{eng.n_verify_dispatches} verify + "
               f"{eng.n_draft_dispatches} draft dispatches, "
               f"{eng.n_verify_compiles} verify executables; "
               f"{tpd:.2f} generated tokens/dispatch")
-    if args.prefix_cache:
+    if sc.prefix_cache:
         print(f"[serve] prefix cache: hit rate "
               f"{m['prefix_hit_rate']:.2f} "
               f"({eng.alloc.n_prefix_hits} hits, "
@@ -188,57 +175,43 @@ def serve_real(args) -> None:
     if eng.alloc.n_host_pages:
         print(f"[serve] swap: {eng.n_swapped_out} out / "
               f"{eng.n_swapped_in} in; host pages high-water "
-              f"{eng.alloc.host_pages_high_water}/{eng.alloc.n_host_pages}; "
-              f"restore latency mean {m['restore_latency_mean']:.1f} {unit}")
+              f"{eng.alloc.host_pages_high_water}/{eng.alloc.n_host_pages};"
+              f" restore latency mean "
+              f"{_f(m['restore_latency_mean'], '.1f')} {unit}")
     _print_per_class("serve", eng.requests.values())
 
 
-def serve_sim(args) -> None:
-    cfg = get_config(args.arch)
-    hw = H100X2 if args.hw == "h100x2" else TPU_V5E
-    if args.host_bw is not None:
-        hw = dataclasses.replace(hw, host_bw=args.host_bw * 1e9)
-    if args.batch_fraction > 0:
+def serve_sim(sc: ServeConfig) -> None:
+    cfg = get_config(sc.arch)
+    hw = H100X2 if sc.hw == "h100x2" else TPU_V5E
+    if sc.host_bw is not None:
+        hw = dataclasses.replace(hw, host_bw=sc.host_bw * 1e9)
+    if sc.batch_fraction > 0:
         # multi-tenant mix: interactive foreground on the chosen dataset,
         # batch-class arXiv background on the selected arrival process
-        n_batch = int(round(args.requests * args.batch_fraction))
+        n_batch = int(round(sc.requests * sc.batch_fraction))
         trace = multi_class_trace([
-            ClassSpec("interactive", DATASETS[args.dataset],
-                      args.rate * (1 - args.batch_fraction),
-                      args.requests - n_batch),
+            ClassSpec("interactive", DATASETS[sc.dataset],
+                      sc.rate * (1 - sc.batch_fraction),
+                      sc.requests - n_batch),
             ClassSpec("batch", DATASETS["arxiv"],
-                      args.rate * args.batch_fraction, n_batch,
-                      process=args.arrival),
-        ], seed=args.seed)
+                      sc.rate * sc.batch_fraction, n_batch,
+                      process=sc.arrival),
+        ], seed=sc.seed)
     else:
-        trace = ARRIVAL_PROCESSES[args.arrival](
-            DATASETS[args.dataset], args.rate, args.requests,
-            seed=args.seed)
-    enabled, mode = preemption_opts(args)
-    sim = Simulator(cfg, args.scheduler, hw, n_slots=args.slots,
-                    quantum=args.quantum, token_budget=args.token_budget,
-                    moe_dispatch=args.moe_dispatch, n_pages=args.pages,
-                    page_size=args.page_size,
-                    preemption=enabled, preemption_mode=mode,
-                    host_pages=args.host_pages,
-                    swap_in_budget=args.swap_in_budget,
-                    decode_reserve=args.decode_reserve,
-                    swap_overlap=not args.swap_serial,
-                    class_headroom=class_headroom_opt(args),
-                    prefix_cache=args.prefix_cache,
-                    prefix_lru_pages=args.prefix_lru_pages,
-                    spec_mode=args.spec, spec_k=args.spec_k,
-                    spec_acceptance=args.spec_acceptance)
+        trace = ARRIVAL_PROCESSES[sc.arrival](
+            DATASETS[sc.dataset], sc.rate, sc.requests, seed=sc.seed)
+    sim = Simulator(cfg, sc.scheduler, hw, **sc.sim_kwargs())
     res = sim.run(trace)
-    slo = SLOConfig(args.ttft_slo, args.tbt_slo)
+    slo = sc.slo()
     m = request_metrics(res.requests, slo)
-    print(f"[serve-sim] {cfg.name} x {args.scheduler} on {args.dataset} "
-          f"@{args.rate} req/s ({hw.name}; "
+    print(f"[serve-sim] {cfg.name} x {sc.scheduler} on {sc.dataset} "
+          f"@{sc.rate} req/s ({hw.name}; "
           f"{sim.kv.n_pages} x {sim.kv.page_size}-token pages)")
     for k in ("ttft_mean", "ttft_p99", "tbt_mean", "tbt_p99",
               "slo_attainment", "e2e_mean", "queue_delay_mean",
               "queue_delay_p99", "preemption_rate"):
-        print(f"[serve-sim]   {k:<16} {m[k]:.3f}")
+        print(f"[serve-sim]   {k:<16} {_f(m[k], '.3f')}")
     print(f"[serve-sim]   energy/token     "
           f"{res.energy_per_token * 1e3:.1f} mJ")
     print(f"[serve-sim]   expert traffic   "
@@ -247,155 +220,45 @@ def serve_sim(args) -> None:
           f"high-water {res.pages_high_water}/{res.n_pool_pages}; "
           f"{res.n_preemptions} preemptions, "
           f"{res.recompute_tokens} recomputed tokens")
-    if args.prefix_cache:
+    if sc.prefix_cache:
         print(f"[serve-sim]   prefix cache     "
               f"hit rate {res.prefix_hit_rate:.2f} "
               f"({res.n_prefix_hits} hits, "
               f"{res.prefix_cached_tokens} cached tokens)")
-    if args.spec != "off":
-        print(f"[serve-sim]   spec({args.spec})      "
-              f"{res.total_drafted} drafted / {res.total_accepted} accepted "
-              f"(rate {res.acceptance_rate:.2f}); accepted len "
-              f"p50={m['accepted_len_p50']:.1f} "
-              f"p90={m['accepted_len_p90']:.1f}")
+    if sc.spec != "off":
+        print(f"[serve-sim]   spec({sc.spec})      "
+              f"{res.total_drafted} drafted / {res.total_accepted} "
+              f"accepted (rate {_f(res.acceptance_rate)}); accepted len "
+              f"p50={_f(m['accepted_len_p50'], '.1f')} "
+              f"p90={_f(m['accepted_len_p90'], '.1f')}")
     if res.n_host_pages:
         print(f"[serve-sim]   swap             "
               f"{res.n_swap_outs} out / {res.n_swap_ins} in; "
               f"{res.swap_bytes / 1e9:.2f} GB over host link, "
-              f"{res.swap_dma_time:.3f} s DMA ({res.swap_stall_time:.3f} s "
-              f"unhidden stall); host pages "
-              f"high-water {res.host_pages_high_water}/{res.n_host_pages}; "
-              f"restore latency mean {m['restore_latency_mean']:.3f} s")
+              f"{res.swap_dma_time:.3f} s DMA ({res.swap_stall_time:.3f} s"
+              f" unhidden stall); host pages "
+              f"high-water {res.host_pages_high_water}/{res.n_host_pages};"
+              f" restore latency mean "
+              f"{_f(m['restore_latency_mean'], '.3f')} s")
     _print_per_class("serve-sim", res.requests, slo)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-30b-a3b", choices=list_configs())
-    ap.add_argument("--scheduler", default="layered",
-                    choices=sorted(SCHEDULERS))
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--simulate", action="store_true")
-    ap.add_argument("--open-loop", action="store_true",
-                    help="real engine: replay a timed Poisson trace "
-                         "through the shared ServingRuntime (requests "
-                         "injected at their arrival times) instead of the "
-                         "closed-loop submit-everything drain")
-    ap.add_argument("--clock", default="virtual",
-                    choices=["virtual", "wall"],
-                    help="open-loop engine clock: virtual (1 unit per "
-                         "iteration, deterministic) or wall (arrival "
-                         "times in real seconds; idles really sleep)")
-    ap.add_argument("--stream", action="store_true",
-                    help="print every generated token as it is emitted "
-                         "(the incremental-output API; engine streams "
-                         "real ids, the simulator streams placeholders)")
-    ap.add_argument("--dataset", default="arxiv", choices=list(DATASETS))
-    ap.add_argument("--arrival", default="poisson",
-                    choices=sorted(ARRIVAL_PROCESSES),
-                    help="arrival process (bursty = on/off modulated "
-                         "Poisson with the same long-run rate)")
-    ap.add_argument("--rate", type=float, default=1.3)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch-fraction", type=float, default=0.0,
-                    help="fraction of requests tagged slo_class=batch "
-                         "(evicted before interactive under memory "
-                         "pressure); the simulator draws their lengths "
-                         "from arXiv and their arrivals from --arrival")
-    ap.add_argument("--class-headroom", type=int, default=0,
-                    help="pages reserved for interactive admissions: "
-                         "batch requests must leave this many pages free")
-    ap.add_argument("--slots", type=int, default=64)
-    ap.add_argument("--quantum", type=int, default=512)
-    ap.add_argument("--token-budget", type=int, default=512)
-    ap.add_argument("--max-len", type=int, default=256)
-    ap.add_argument("--pages", type=int, default=None,
-                    help="paged KV pool size in pages (default: engine "
-                         "fills every slot row; simulator sizes from the "
-                         "hardware's HBM capacity minus weights)")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="KV tokens per page")
-    ap.add_argument("--preemption", default="on",
-                    choices=["on", "off", "recompute", "swap", "auto"],
-                    help="memory-pressure eviction mode: recompute (= on; "
-                         "fold + re-prefill victims), swap (KV pages to the "
-                         "host pool, DMA-back restore), auto (per-victim "
-                         "cost crossover), off (queueing-only admission)")
-    ap.add_argument("--host-pages", type=int, default=None,
-                    help="host-side swap pool size in pages (default: 4x "
-                         "the device pool when swap/auto is selected)")
-    ap.add_argument("--host-bw", type=float, default=None,
-                    help="host<->HBM DMA bandwidth in GB/s (simulator "
-                         "only; overrides the hardware spec's PCIe term)")
-    ap.add_argument("--swap-serial", action="store_true",
-                    help="charge swap DMA as a fully serial stall "
-                         "(simulator only; default overlaps it with the "
-                         "iteration's compute)")
-    ap.add_argument("--swap-in-budget", type=int, default=None,
-                    help="max KV tokens DMA'd back from host per iteration "
-                         "(default: unlimited; at least one restore per "
-                         "iteration is always allowed)")
-    ap.add_argument("--decode-reserve", type=int, default=None,
-                    help="per-request decode KV reservation in tokens "
-                         "(default: one page; 0 = admit on prompt KV only "
-                         "and rely on preemption for decode growth)")
-    ap.add_argument("--packed", default=True,
-                    action=argparse.BooleanOptionalAction,
-                    help="packed layer-group execution: all prefill "
-                         "slices sharing a (block-range, emit) rectangle "
-                         "run as ONE jitted slot-vector batch per "
-                         "iteration; --no-packed is the per-slice escape "
-                         "hatch (one dispatch per slice)")
-    ap.add_argument("--prefix-cache", default=True,
-                    action=argparse.BooleanOptionalAction,
-                    help="automatic prefix caching: completed prompts "
-                         "publish their full KV pages into a refcounted "
-                         "content-hash index; later prompts sharing a "
-                         "page-aligned prefix skip its prefill (every "
-                         "layer group starts past the cached boundary) "
-                         "and link the shared pages copy-on-write. "
-                         "--no-prefix-cache restores cold prefill")
-    ap.add_argument("--prefix-lru-pages", type=int, default=None,
-                    help="cap on retained refcount-0 cached pages "
-                         "(default: unbounded — idle cached pages still "
-                         "yield to any allocation before eviction kicks "
-                         "in, they are only pinned while referenced)")
-    ap.add_argument("--moe-dispatch", default="ragged",
-                    choices=["ragged", "dense"],
-                    help="dropless MoE data path: ragged (sorted "
-                         "tile-aligned buffer; traffic scales with routed "
-                         "work) or dense (worst-case capacity buffer)")
-    ap.add_argument("--spec", default="off",
-                    choices=["off", "ngram", "draft"],
-                    help="speculative verify-k decoding: ngram (draft-free "
-                         "prompt/self-lookup) or draft (tiny draft model "
-                         "from --draft-config); greedy output streams are "
-                         "bit-identical to --spec off — speculation only "
-                         "changes tokens committed per dispatch")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="max drafted tokens verified per request per "
-                         "iteration (draft mode adapts below this via the "
-                         "per-request acceptance EMA)")
-    ap.add_argument("--draft-config", default=None,
-                    help="config name whose smoke variant drafts for "
-                         "--spec draft (must share the target's vocab)")
-    ap.add_argument("--spec-acceptance", type=float, default=0.7,
-                    help="simulator only: per-token draft acceptance "
-                         "probability for the analytic verify-k model")
-    ap.add_argument("--hw", default="h100x2", choices=["h100x2", "tpu_v5e"])
-    ap.add_argument("--ttft-slo", type=float, default=10.0)
-    ap.add_argument("--tbt-slo", type=float, default=0.125)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-    if args.simulate:
-        serve_sim(args)
+    ServeConfig.add_arguments(ap)
+    sc = ServeConfig.from_args(ap.parse_args())
+    if sc.simulate:
+        serve_sim(sc)
+        return
+    if not sc.smoke:
+        sc.smoke = True
+        print("[serve] full-scale real execution needs TPU; using "
+              "--smoke model (use --simulate for full-scale numbers)")
+    sc.slots = min(sc.slots, 8)
+    if sc.http is not None:
+        serve_http(sc)
     else:
-        if not args.smoke:
-            args.smoke = True
-            print("[serve] full-scale real execution needs TPU; using "
-                  "--smoke model (use --simulate for full-scale numbers)")
-        args.slots = min(args.slots, 8)
-        serve_real(args)
+        serve_real(sc)
 
 
 if __name__ == "__main__":

@@ -52,7 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.base import Scheduler, make_scheduler
-from repro.core.plan import IterationPlan, PrefillSlice, Request, RequestState
+from repro.core.plan import (IterationPlan, PrefillSlice, Request,
+                             RequestState, SubmitSpec)
 from repro.kernels.ops import gather_slot_rows, scatter_slot_rows
 from repro.models.config import dtype_bytes
 from repro.models.model import DecoderModel
@@ -296,31 +297,48 @@ class Engine:
 
     # ------------------------------------------------------------------ API
 
-    def submit(self, prompt_tokens, max_new_tokens: int,
-               enc_frames=None, *, slo_class: str = "interactive",
-               arrival_time: Optional[float] = None) -> int:
+    def submit_spec(self, spec: SubmitSpec) -> Request:
+        """THE ingestion door (core/plan.py): every submission path — HTTP
+        front-end, trace replay, closed-loop drains — lands here with one
+        frozen ``SubmitSpec``.  A spec without ``arrival_time`` is stamped
+        at the engine's current iteration (live traffic on the iteration
+        clock; wall-mode executors stamp before calling)."""
+        if spec.prompt_tokens is None:
+            raise ValueError(
+                "engine submission needs real token ids — build the "
+                "SubmitSpec with prompt_tokens (see "
+                "traffic.attach_prompt_tokens for simulator-shaped traces)")
         rid = self._next_id
         self._next_id += 1
-        prompt = np.asarray(prompt_tokens, np.int32)
-        if len(prompt) + max_new_tokens > self.max_len:
+        prompt = np.asarray(spec.prompt_tokens, np.int32)
+        if len(prompt) + spec.max_new_tokens > self.max_len:
             # the bound also caps the recompute prompt after a preemption
             # (prompt + generated-so-far never exceeds prompt + max_new)
             raise ValueError(
                 f"request {rid}: prompt {len(prompt)} + max_new "
-                f"{max_new_tokens} exceeds max_len {self.max_len}")
-        req = Request(req_id=rid, prompt_len=len(prompt),
-                      max_new_tokens=max_new_tokens,
-                      arrival_time=float(self.iteration)
-                      if arrival_time is None else arrival_time,
-                      slo_class=slo_class,
-                      prompt_tokens=prompt)
+                f"{spec.max_new_tokens} exceeds max_len {self.max_len}")
+        req = Request.from_spec(
+            spec, rid,
+            arrival_time=float(self.iteration)
+            if spec.arrival_time is None else spec.arrival_time,
+            prompt_tokens=prompt)
         self.requests[rid] = req
         self.prompts[rid] = prompt
         self.outputs[rid] = []
-        if enc_frames is not None:
-            self.enc_frames[rid] = np.asarray(enc_frames)
+        if spec.enc_frames is not None:
+            self.enc_frames[rid] = np.asarray(spec.enc_frames)
         self.scheduler.submit(req)
-        return rid
+        return req
+
+    def submit(self, prompt_tokens, max_new_tokens: int,
+               enc_frames=None, *, slo_class: str = "interactive",
+               arrival_time: Optional[float] = None) -> int:
+        """Positional convenience wrapper over ``submit_spec`` (kept for
+        closed-loop callers and tests); returns the request id."""
+        return self.submit_spec(SubmitSpec(
+            max_new_tokens=max_new_tokens, prompt_tokens=prompt_tokens,
+            slo_class=slo_class, arrival_time=arrival_time,
+            enc_frames=enc_frames)).req_id
 
     def run(self, max_iterations: int = 10_000) -> "RunResult":
         """Closed-loop drain of everything already submitted, through the
@@ -827,7 +845,8 @@ class Engine:
         the digests).  The slice is an immutable device snapshot (later
         donated calls build new cache buffers), so it stays valid for
         restores arbitrarily many iterations later."""
-        chains = self.alloc.owned_chains(rid, self.prompts[rid])
+        chains = self.alloc.owned_chains(
+            rid, self.requests[rid].cacheable_prompt)
         missing = [(d, depth) for d, depth in chains
                    if d not in self._prefix_rows]
         if not missing:

@@ -127,3 +127,98 @@ def per_class_metrics(
         out[cls] = request_metrics(
             [r for r in reqs if r.slo_class == cls], cls_slo)
     return out
+
+
+# ---------------------------------------------------------------- exporters
+
+def _finite(v) -> bool:
+    return isinstance(v, (int, float)) and math.isfinite(v)
+
+
+def prometheus_text(requests: Iterable[Request],
+                    slo: Union[SLOConfig, Dict[str, SLOConfig], None] = None,
+                    counters: Optional[Dict[str, float]] = None,
+                    labeled: Optional[Dict[str, Dict[str, float]]] = None,
+                    prefix: str = "repro") -> str:
+    """Render the serving metrics in Prometheus text exposition format
+    (the /metrics payload of serving/server.py).
+
+    Emits TTFT/TBT p50/p90/p99 + means as quantile-labeled gauges,
+    per-SLO-class attainment/latency/preemption breakdowns
+    (``slo_class`` label), prefix-cache hit rate, and preemption/swap
+    counters — all derived from the SAME ``request_metrics`` /
+    ``per_class_metrics`` the offline reports print, so live scrapes and
+    trace-replay summaries can never disagree on definitions.
+
+    ``counters`` adds flat ``{prefix}_<name> value`` lines (server-level:
+    http request totals, queue depth, pool occupancy); ``labeled`` adds
+    one family per entry with a ``{key="..."}`` label per sample, e.g.
+    ``{"http_responses_total|status": {"200": 31, "429": 4}}`` — the part
+    after ``|`` names the label key.  Time-valued metrics are in the
+    serving clock's unit (wall seconds under the HTTP front-end).
+    NaN samples (e.g. percentiles over zero completed requests) are
+    DROPPED rather than exported — scrapers choke on them and a missing
+    sample is the honest statement."""
+    reqs = list(requests)
+    m = request_metrics(reqs, None if isinstance(slo, dict) else slo)
+    per = per_class_metrics(reqs, slo)
+    lines: List[str] = []
+
+    def gauge(name: str, value, labels: str = "",
+              help_text: str = "") -> None:
+        if not _finite(value):
+            return
+        full = f"{prefix}_{name}"
+        if help_text and not any(ln.startswith(f"# TYPE {full} ")
+                                 for ln in lines):
+            lines.append(f"# HELP {full} {help_text}")
+            lines.append(f"# TYPE {full} gauge")
+        lines.append(f"{full}{labels} {value:.9g}")
+
+    gauge("requests_completed", m["n_requests"],
+          help_text="requests with at least one emitted token")
+    for base, help_text in (
+            ("ttft", "time to first token (serving clock units)"),
+            ("tbt", "time between tokens (serving clock units)")):
+        for q in ("50", "90", "99"):
+            gauge(base, m[f"{base}_p{q}"],
+                  labels=f'{{quantile="0.{q}"}}', help_text=help_text)
+        gauge(f"{base}_mean", m[f"{base}_mean"])
+    gauge("queue_delay_mean", m["queue_delay_mean"],
+          help_text="arrival to first admission")
+    gauge("queue_delay", m["queue_delay_p99"], labels='{quantile="0.99"}')
+    gauge("preemptions_total", m["n_preemptions"],
+          help_text="memory-pressure evictions executed")
+    gauge("swaps_total", m["n_swaps"],
+          help_text="swap-to-host evictions executed")
+    gauge("prefix_hit_rate", m["prefix_hit_rate"],
+          help_text="cached / admitted prompt tokens")
+    if _finite(m.get("spec_acceptance_rate")):
+        gauge("spec_acceptance_rate", m["spec_acceptance_rate"],
+              help_text="accepted / drafted speculative tokens")
+    if "slo_attainment" in m:
+        gauge("slo_attainment", m["slo_attainment"],
+              help_text="fraction meeting TTFT and every TBT SLO")
+    for cls, cm in per.items():
+        lab = f'{{slo_class="{cls}"}}'
+        gauge("class_requests_completed", cm["n_requests"], lab,
+              help_text="completed requests per SLO class")
+        for q in ("50", "99"):
+            gauge("class_ttft", cm[f"ttft_p{q}"],
+                  f'{{slo_class="{cls}",quantile="0.{q}"}}',
+                  help_text="per-class time to first token")
+            gauge("class_tbt", cm[f"tbt_p{q}"],
+                  f'{{slo_class="{cls}",quantile="0.{q}"}}',
+                  help_text="per-class time between tokens")
+        gauge("class_preemption_rate", cm["preemption_rate"], lab)
+        gauge("class_prefix_hit_rate", cm["prefix_hit_rate"], lab)
+        if "slo_attainment" in cm:
+            gauge("class_slo_attainment", cm["slo_attainment"], lab,
+                  help_text="per-class SLO attainment")
+    for name, value in (counters or {}).items():
+        gauge(name, value)
+    for family, samples in (labeled or {}).items():
+        name, _, key = family.partition("|")
+        for label_value, value in samples.items():
+            gauge(name, value, f'{{{key or "label"}="{label_value}"}}')
+    return "\n".join(lines) + "\n"

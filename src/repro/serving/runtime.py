@@ -32,13 +32,17 @@ what makes cross-backend trace-replay equivalence exactly testable.
 
 from __future__ import annotations
 
+import dataclasses
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Callable, List, Optional, Protocol, Sequence
+from typing import (TYPE_CHECKING, Callable, List, Optional, Protocol,
+                    Sequence, Union)
 
 import numpy as np
 
-from repro.core.plan import IterationPlan, Request, RequestState
+from repro.core.plan import IterationPlan, Request, RequestState, SubmitSpec
 
 if TYPE_CHECKING:  # typing only — runtime must not import its backends
     from repro.core.base import Scheduler
@@ -96,8 +100,11 @@ class Executor(Protocol):
     directly — it schedules, clocks and timestamps; the executor runs."""
     scheduler: "Scheduler"
 
-    def submit(self, tr: "TraceRequest", now: float) -> Request:
-        """Create + submit the request for an arriving TraceRequest."""
+    def submit(self, spec: SubmitSpec, now: float) -> Request:
+        """Create + submit the request for an arriving SubmitSpec (the
+        unified ingestion record — trace items convert via
+        ``TraceRequest.to_spec``).  A spec without an arrival time is
+        stamped at ``now`` in the executor's clock unit."""
         ...
 
     def execute(self, plan: IterationPlan, now: float) -> StepOutcome:
@@ -109,6 +116,13 @@ class Executor(Protocol):
         resident (wall executors sleep); returns the new clock value."""
         ...
 
+    def poll_clock(self, t: float) -> float:
+        """The executor's CURRENT clock reading given the loop's last value
+        ``t`` — wall executors re-read the monotonic clock (live-feed
+        idling advances time without an ``idle`` target), virtual clocks
+        return ``t`` unchanged."""
+        ...
+
     def initial_clock(self) -> float:
         """Where this run's clock starts.  The engine's iteration clock
         resumes from its persistent iteration counter so a second run()
@@ -116,6 +130,104 @@ class Executor(Protocol):
         first (TTFT stays positive across incremental submit/run
         cycles); fresh backends start at 0."""
         ...
+
+
+class SubmitTicket:
+    """One live submission in flight through a ``SubmitQueue``: the serving
+    loop resolves it (engine thread) when the spec is actually submitted,
+    after which ``request`` is the backend's live Request.  ``on_submit``
+    fires synchronously IN the serving-loop thread right after submission
+    and strictly before any of the request's tokens are emitted — the HTTP
+    front-end registers its per-request token stream there, so no token
+    can race past an unregistered stream."""
+
+    __slots__ = ("spec", "on_submit", "on_fail", "request", "error", "_done")
+
+    def __init__(self, spec: SubmitSpec,
+                 on_submit: Optional[Callable[[Request], None]] = None,
+                 on_fail: Optional[Callable[[BaseException], None]] = None):
+        self.spec = spec
+        self.on_submit = on_submit
+        self.on_fail = on_fail
+        self.request: Optional[Request] = None
+        self.error: Optional[BaseException] = None
+        self._done = threading.Event()
+
+    def _resolve(self, request: Request) -> None:
+        self.request = request
+        if self.on_submit is not None:
+            self.on_submit(request)
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self.error = exc
+        if self.on_fail is not None:
+            self.on_fail(exc)
+        self._done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> Request:
+        """Block until the serving loop picked this spec up; re-raise its
+        submission error (bad request) in the waiting thread."""
+        if not self._done.wait(timeout):
+            raise TimeoutError("submission not picked up by serving loop")
+        if self.error is not None:
+            raise self.error
+        return self.request
+
+
+class SubmitQueue:
+    """Thread-safe live-ingestion channel bridging concurrent producers
+    (HTTP handler threads / asyncio callbacks) into the single-threaded
+    serving loop: producers ``put`` SubmitSpecs, the loop drains them at
+    every iteration boundary and blocks on ``wait`` while idle instead of
+    spinning.  ``close`` ends the stream — the loop finishes whatever is
+    already queued or resident, then returns."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: deque = deque()
+        self._wake = threading.Event()
+        self._closed = False
+
+    def put(self, spec: SubmitSpec,
+            on_submit: Optional[Callable[[Request], None]] = None,
+            on_fail: Optional[Callable[[BaseException], None]] = None) \
+            -> SubmitTicket:
+        ticket = SubmitTicket(spec, on_submit, on_fail)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("submit queue is closed")
+            self._items.append(ticket)
+            self._wake.set()
+        return ticket
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._wake.set()
+
+    @property
+    def backlog(self) -> int:
+        return len(self._items)
+
+    @property
+    def exhausted(self) -> bool:
+        """True once closed AND fully drained — the loop's stop signal."""
+        with self._lock:
+            return self._closed and not self._items
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until an item arrives or the queue closes (the serving
+        loop's idle wakeup).  Returns True if something may be pending."""
+        return self._wake.wait(timeout)
+
+    def drain(self) -> List[SubmitTicket]:
+        with self._lock:
+            items = list(self._items)
+            self._items.clear()
+            if not self._closed:
+                self._wake.clear()
+            return items
 
 
 @dataclass
@@ -146,12 +258,22 @@ class ServingRuntime:
         self.record_plans = record_plans
         self.plans: List[IterationPlan] = []
 
-    def run(self, trace: Sequence["TraceRequest"] = (),
-            max_iterations: int = 10_000) -> RunResult:
+    def run(self, trace: Sequence[Union["TraceRequest", SubmitSpec]] = (),
+            max_iterations: int = 10_000, *,
+            feed: Optional[SubmitQueue] = None,
+            idle_poll: float = 0.05) -> RunResult:
         """Replay ``trace`` open-loop (requests injected at their arrival
         times; the loop idles to the next arrival when the pool drains)
         and drain everything already submitted to the scheduler.  An empty
-        trace is the closed-loop drain the engine's legacy ``run`` was."""
+        trace is the closed-loop drain the engine's legacy ``run`` was.
+
+        ``feed`` attaches a live ``SubmitQueue``: specs arriving from
+        other threads are injected at every iteration boundary (arrival
+        stamped at the current clock when the spec carries none), and when
+        the pool drains the loop BLOCKS on the queue (granularity
+        ``idle_poll`` seconds) instead of exiting — the serving loop of
+        the HTTP front-end.  The run returns once the feed is closed and
+        drained and no work remains."""
         x = self.executor
         sched = x.scheduler
         res = RunResult(
@@ -165,12 +287,36 @@ class ServingRuntime:
             nonlocal i_arr
             while i_arr < len(pending) \
                     and pending[i_arr].arrival_time <= now:
-                res.requests.append(x.submit(pending[i_arr], now))
+                tr = pending[i_arr]
+                spec = tr.to_spec() if hasattr(tr, "to_spec") else tr
+                res.requests.append(x.submit(spec, now))
                 i_arr += 1
+            if feed is not None:
+                for ticket in feed.drain():
+                    try:
+                        req = x.submit(ticket.spec, now)
+                    except Exception as e:     # bad spec: report, keep going
+                        ticket._fail(e)
+                        continue
+                    res.requests.append(req)
+                    ticket._resolve(req)
 
-        while i_arr < len(pending) or sched.has_work():
+        def live() -> bool:
+            return feed is not None and not feed.exhausted
+
+        while i_arr < len(pending) or sched.has_work() or live():
             inject(t)
             if not sched.has_work():
+                if live():
+                    # live idle: block on the feed (bounded so wall clocks
+                    # stay responsive to close/shutdown), then re-read the
+                    # executor clock — arrivals are stamped at real idle
+                    # time, not at the last iteration's end
+                    feed.wait(idle_poll)
+                    t = max(t, x.poll_clock(t))
+                    continue
+                if i_arr >= len(pending):
+                    break          # feed closed + drained, nothing pending
                 # open-loop idle: fast-forward (or, on a wall clock, sleep)
                 # to the next arrival instead of raising "did not drain"
                 nxt = pending[i_arr].arrival_time
@@ -230,16 +376,10 @@ class EngineExecutor:
         self.wall = wall
         self._t0 = time.monotonic()      # re-anchored by initial_clock()
 
-    def submit(self, tr: "TraceRequest", now: float) -> Request:
-        if tr.prompt_tokens is None:
-            raise ValueError(
-                f"trace request arriving at t={tr.arrival_time} carries no "
-                "prompt_tokens; real-engine replay needs token ids — see "
-                "traffic.attach_prompt_tokens")
-        rid = self.engine.submit(list(tr.prompt_tokens), tr.output_len,
-                                 slo_class=tr.slo_class,
-                                 arrival_time=tr.arrival_time)
-        return self.engine.requests[rid]
+    def submit(self, spec: SubmitSpec, now: float) -> Request:
+        if spec.arrival_time is None:
+            spec = dataclasses.replace(spec, arrival_time=now)
+        return self.engine.submit_spec(spec)
 
     def execute(self, plan: IterationPlan, now: float) -> StepOutcome:
         before = self.engine.n_dispatches
@@ -265,6 +405,9 @@ class EngineExecutor:
                 break
             time.sleep(min(remaining, 0.05))
         return time.monotonic() - self._t0
+
+    def poll_clock(self, t: float) -> float:
+        return time.monotonic() - self._t0 if self.wall else t
 
     def initial_clock(self) -> float:
         # the iteration clock resumes from the engine's persistent
@@ -299,17 +442,17 @@ class SimExecutor:
         self.total_drafted = 0         # speculative decode accounting
         self.total_accepted = 0
 
-    def submit(self, tr: "TraceRequest", now: float) -> Request:
-        # prompt_tokens (when the trace carries them) make the analytic
+    def submit(self, spec: SubmitSpec, now: float) -> Request:
+        # prompt_tokens (when the spec carries them) make the analytic
         # backend prefix-cache-aware: the shared scheduler code hashes and
         # matches exactly as it does under the engine, so cross-backend
         # plan streams stay identical with caching enabled
-        req = Request(req_id=self._next_id, prompt_len=tr.prompt_len,
-                      max_new_tokens=tr.output_len,
-                      arrival_time=tr.arrival_time,
-                      slo_class=tr.slo_class,
-                      prompt_tokens=None if tr.prompt_tokens is None
-                      else np.asarray(tr.prompt_tokens, np.int32))
+        req = Request.from_spec(
+            spec, self._next_id,
+            arrival_time=now if spec.arrival_time is None
+            else spec.arrival_time,
+            prompt_tokens=None if spec.prompt_tokens is None
+            else np.asarray(spec.prompt_tokens, np.int32))
         self._next_id += 1
         self.scheduler.submit(req)
         return req
@@ -359,6 +502,9 @@ class SimExecutor:
 
     def idle(self, t: float, until: float) -> float:
         return until
+
+    def poll_clock(self, t: float) -> float:
+        return t
 
     def initial_clock(self) -> float:
         return 0.0

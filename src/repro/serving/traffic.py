@@ -17,6 +17,8 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.plan import SubmitSpec
+
 
 @dataclass(frozen=True)
 class LengthModel:
@@ -71,6 +73,16 @@ class TraceRequest:
     # actual token ids for real-engine replay (None in the simulator);
     # a tuple so the frozen dataclass stays hashable/comparable
     prompt_tokens: Optional[Tuple[int, ...]] = None
+
+    def to_spec(self) -> SubmitSpec:
+        """The one ingestion conversion: trace replay submits through the
+        same ``SubmitSpec`` record as the HTTP front-end and benchmarks
+        (core/plan.py) — executors never see a raw TraceRequest."""
+        return SubmitSpec(max_new_tokens=self.output_len,
+                          prompt_tokens=self.prompt_tokens,
+                          prompt_len=self.prompt_len,
+                          slo_class=self.slo_class,
+                          arrival_time=self.arrival_time)
 
 
 def poisson_trace(dataset: DatasetModel, rate: float, n_requests: int,
