@@ -98,6 +98,22 @@ SPEC_COLUMNS = ("model", "dataset", "sched", "spec", "rate", "slo",
                 "ttft_att", "tbt_att", "acceptance_rate", "n_iterations",
                 "total_generated")
 
+# Disaggregated-serving frontier rows (chunked vs layered x stream/whole
+# KV handoff between the prefill and decode pools; same CI schema guard).
+DISAGG_COLUMNS = ("model", "dataset", "sched", "handoff", "rate", "slo",
+                  "ttft_mean", "tbt_mean", "decode_tbt_mean",
+                  "n_migrations", "n_returns", "link_bytes",
+                  "link_stall_time", "handoff_wait_time",
+                  "migration_queue_peak", "decode_prefill_slices")
+
+# Long-prompt operating points: the arXiv prompts (~8k tokens) make the
+# KV the link actually has to move big enough that streaming-vs-whole
+# separates cleanly.
+DISAGG_SWEEPS = {
+    ("qwen3-30b-a3b", "arxiv"): (1.3, 2.1),
+    ("gpt-oss-20b", "arxiv"): (2.1, 3.3),
+}
+
 # Multi-tenant operating points: total offered rate is split 70/30 between
 # the interactive ShareGPT foreground and the bursty batch arXiv
 # background (arXiv prompts are the memory hogs, so the batch class is
@@ -353,6 +369,99 @@ def run_prefix_frontier(n_requests: int, models) -> dict:
             "checks": checks}
 
 
+def run_disagg_frontier(n_requests: int, sweeps) -> dict:
+    """Chunked vs layered × stream/whole KV handoff over the two-pool
+    simulator.  Layered prefill completes each layer group's KV early, so
+    group-granular streaming overlaps the link with the remaining groups'
+    compute; whole-prompt handoff ships everything after the last group
+    and eats the transfer as exposed stall.  Chunked prefill's final
+    chunk covers every block, so its stream mode degenerates to whole —
+    only the layered schedule can exploit the link overlap."""
+    from repro.configs import get_config
+    from repro.launch.config import ServeConfig
+    from repro.serving.cost_model import H100X2
+    from repro.serving.metrics import request_metrics
+    from repro.serving.simulator import DisaggSimulator
+    from repro.serving.traffic import poisson_trace
+    rows = []
+    for (model, dataset), rates in sweeps.items():
+        cfg = get_config(model)
+        slo = SLOS[(model, dataset)]
+        base = ServeConfig(arch=model, simulate=True, slots=128,
+                           token_budget=512, quantum=512).validate()
+        for rate in rates:
+            trace = poisson_trace(DATASETS[dataset], rate, n_requests,
+                                  seed=0)
+            for sched in ("chunked", "layered"):
+                for handoff in ("stream", "whole"):
+                    sim = DisaggSimulator(cfg, sched, H100X2,
+                                          handoff=handoff,
+                                          **base.sim_kwargs())
+                    res = sim.run(trace)
+                    m = request_metrics(res.requests, slo)
+                    rows.append({
+                        "model": model, "dataset": dataset, "sched": sched,
+                        "handoff": handoff, "rate": rate,
+                        "slo": _finite(m["slo_attainment"]),
+                        "ttft_mean": _finite(m["ttft_mean"]),
+                        "tbt_mean": _finite(m["tbt_mean"]),
+                        "decode_tbt_mean":
+                            _finite(res.decode_pool_tbt_mean),
+                        "n_migrations": res.n_migrations,
+                        "n_returns": res.n_returns,
+                        "link_bytes": res.link_bytes,
+                        "link_stall_time": res.link_stall_time,
+                        "handoff_wait_time": res.handoff_wait_time,
+                        "migration_queue_peak": res.migration_queue_peak,
+                        "decode_prefill_slices": res.decode_prefill_slices,
+                        "_finished": all(r.finish_time is not None
+                                         for r in res.requests),
+                    })
+    print(table(rows, ["model", "dataset", "sched", "handoff", "rate",
+                       "slo", "ttft_mean", "decode_tbt_mean",
+                       "n_migrations", "link_bytes", "link_stall_time",
+                       "migration_queue_peak"],
+                "Fig 3 (disaggregated) — prefill/decode pools, "
+                "group-granular streaming vs whole-prompt KV handoff"))
+
+    def by(model, dataset, sched, rate, handoff):
+        for r in rows:
+            if (r["model"], r["dataset"], r["sched"], r["rate"],
+                    r["handoff"]) == (model, dataset, sched, rate, handoff):
+                return r
+        raise KeyError
+
+    points = sorted({(r["model"], r["dataset"], r["sched"], r["rate"])
+                     for r in rows})
+    pairs = [(by(*p, "stream"), by(*p, "whole")) for p in points]
+    lay_pairs = [(s, w) for s, w in pairs if s["sched"] == "layered"]
+    checks = {
+        "disagg_schema": all(all(c in r for c in DISAGG_COLUMNS)
+                             for r in rows),
+        # the zero-prefill-stall gate: the decode pool's iteration clock
+        # NEVER contains prefill work, so every decode-pool TBT sample is
+        # prefill-free by construction
+        "disagg_decode_prefill_free": all(
+            r["decode_prefill_slices"] == 0 for r in rows),
+        # streaming never exposes more link stall than whole-prompt...
+        "disagg_stream_never_worse": all(
+            s["link_stall_time"] <= w["link_stall_time"] + 1e-9
+            for s, w in pairs),
+        # ...and under the layered schedule it is STRICTLY better — the
+        # overlap claim the disaggregation argument rests on (chunked
+        # degenerates to whole, so it cannot separate)
+        "disagg_stream_dominates_whole": all(
+            s["link_stall_time"] < w["link_stall_time"]
+            for s, w in lay_pairs) and bool(lay_pairs),
+        "disagg_all_complete": all(r.pop("_finished") for r in rows),
+        "disagg_every_request_crosses": all(
+            r["n_migrations"] >= n_requests for r in rows),
+    }
+    print("checks:", checks)
+    return {"disagg_rows": rows, "disagg_columns": list(DISAGG_COLUMNS),
+            "checks": checks}
+
+
 def _attach_class_prefixes(trace, prefix_len: int = 256,
                            vocab_size: int = 50257, seed: int = 0):
     """Give each SLO class a shared system prompt: every request longer
@@ -488,7 +597,7 @@ def run_multi_tenant(n_requests: int, models, spec_kw=None) -> dict:
 def main(n_requests: int = 400, oversubscribed: bool = False,
          multi_tenant: bool = False, smoke: bool = False,
          spec: str = "off", spec_acceptance: float = 0.7,
-         prefix: bool = False) -> dict:
+         prefix: bool = False, disagg: bool = False) -> dict:
     sweeps = SWEEPS
     if smoke:
         # tiny CI-sized run: one model/dataset pair, two rates
@@ -519,6 +628,15 @@ def main(n_requests: int = 400, oversubscribed: bool = False,
         result["pfx_rows"] = pf["pfx_rows"]
         result["pfx_columns"] = pf["pfx_columns"]
         result["checks"].update(pf["checks"])
+    if disagg:
+        dsweeps = DISAGG_SWEEPS
+        if smoke:
+            key = ("qwen3-30b-a3b", "arxiv")
+            dsweeps = {key: DISAGG_SWEEPS[key][:1]}
+        dg = run_disagg_frontier(n_requests, dsweeps)
+        result["disagg_rows"] = dg["disagg_rows"]
+        result["disagg_columns"] = dg["disagg_columns"]
+        result["checks"].update(dg["checks"])
     if multi_tenant:
         models = MT_SWEEPS
         if smoke:
@@ -557,10 +675,15 @@ if __name__ == "__main__":
                     help="add the prefix-caching frontier (chunked vs "
                          "layered x cache off/on over a shared-prefix "
                          "trace) with TTFT/hit-rate/expert-traffic rows")
+    ap.add_argument("--disagg", action="store_true",
+                    help="add the disaggregated-serving frontier (chunked "
+                         "vs layered x stream/whole KV handoff between "
+                         "the prefill and decode pools) with link-stall "
+                         "and decode-pool TBT rows")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI-sized run (one sweep, <=24 requests)")
     args = ap.parse_args()
     main(n_requests=args.requests, oversubscribed=args.oversubscribed,
          multi_tenant=args.multi_tenant, smoke=args.smoke,
          spec=args.spec, spec_acceptance=args.spec_acceptance,
-         prefix=args.prefix)
+         prefix=args.prefix, disagg=args.disagg)

@@ -258,6 +258,46 @@ class Scheduler:
         if self.kv is not None and self.kv.owns(req_id):
             self.kv.free(req_id)
 
+    # -- inter-pool migration (disaggregated serving) --------------------------
+
+    def can_adopt(self, req: Request) -> bool:
+        """True iff an imported request (KV already landed on this
+        scheduler's allocator) can join the resident set right now."""
+        return self.n_active < self.n_slots
+
+    def adopt(self, req: Request) -> None:
+        """Place a migrated request directly into DECODE.  The caller has
+        already materialized its KV on this scheduler's allocator
+        (``import_pages``) — adoption is pure bookkeeping; the next plan
+        decodes it under invariant I1 like any other resident."""
+        assert req.req_id not in self.requests, req.req_id
+        assert self.kv is None or self.kv.is_resident(req.req_id), req.req_id
+        req.state = RequestState.DECODE
+        self.requests[req.req_id] = req
+
+    def pop_request(self, req_id: int) -> Request:
+        """Remove a request from this scheduler entirely (migration out).
+        Its KV, if any, must already have been exported/freed — this drops
+        only control state.  The mirror of ``adopt``/``submit``."""
+        r = self.requests.pop(req_id)
+        try:
+            self.waiting.remove(req_id)
+        except ValueError:
+            pass
+        self._spec_ema.pop(req_id, None)
+        return r
+
+    def readmit(self, req: Request) -> None:
+        """Accept a recompute victim routed back from another pool (the
+        decode pool cannot prefill, so its fold-to-recompute victims return
+        here).  The fold already ran on the evicting scheduler; requeue at
+        the HEAD exactly like a local preemption so the victim is not
+        starved behind never-admitted arrivals."""
+        assert req.req_id not in self.requests, req.req_id
+        assert req.state == RequestState.PREEMPTED, req.state
+        self.requests[req.req_id] = req
+        self.waiting.appendleft(req.req_id)
+
     @property
     def active(self) -> List[Request]:
         return [r for r in self.requests.values()
@@ -452,8 +492,16 @@ class Scheduler:
             # (swap: host-pool room; recompute: the post-fold footprint
             # still fits an empty pool).  The earliest-arrival resident is
             # never evicted: admission guarantees a lone request always
-            # fits, so keeping it guarantees forward progress.
-            earliest = min(self.active,
+            # fits, so keeping it guarantees forward progress.  The guard
+            # is CLASS-AWARE: protect the earliest within the highest-
+            # priority class present — a batch-class earliest resident
+            # must not shield itself while interactive requests starve.
+            residents = self.active
+            best_rank = min(CLASS_EVICT_RANK.get(r.slo_class, 0)
+                            for r in residents)
+            earliest = min((r for r in residents
+                            if CLASS_EVICT_RANK.get(r.slo_class, 0)
+                            == best_rank),
                            key=lambda r: (r.arrival_time, r.req_id))
             # walk candidates class-rank-first (batch victims before
             # interactive — CLASS_EVICT_RANK), latest-arrival within a
@@ -471,6 +519,14 @@ class Scheduler:
                     victim = r
                     break
             if victim is None:
+                # every resident is shielded: the pool must be pinned by
+                # SWAPPED requests' shared prefix pages.  Demote one to a
+                # recompute victim (releasing its pin + host copy) before
+                # declaring the pool undersized.
+                demoted = self._demote_swapped(exclude=swapped)
+                if demoted is not None:
+                    preempted.append(demoted)
+                    continue
                 raise RuntimeError(
                     "paged KV pool cannot cover decode growth and no "
                     "evictable resident remains — enlarge the pool")
@@ -484,6 +540,39 @@ class Scheduler:
             self.kv.grow_to(r.req_id,
                             r.prompt_len + r.n_generated - r.n_folded)
         return preempted, swapped
+
+    def _demote_swapped(self, exclude: List[int] = ()) -> Optional[int]:
+        """Pressure valve for the swap-pin deadlock: a SWAPPED request's
+        shared prefix pages stay pinned in HBM, so enough swapped victims
+        can starve the lone protected resident's decode growth with no
+        resident evictable (acute on a disaggregated decode pool, whose
+        imports register every prompt page as shared).  Fold the lowest-
+        priority latest-arrival swapped request to a recompute victim —
+        the only transition that unpins without a swap-in.  It is already
+        queued at the head from its swap-out; only the state and the
+        pages change.  ``exclude`` holds THIS iteration's swap victims
+        (demoting one would undo the swap it just paid for).  Returns
+        the demoted id, or None if no swapped request qualifies."""
+        cands = [r for r in self.requests.values()
+                 if r.state == RequestState.SWAPPED
+                 and r.req_id not in exclude and self._evictable(r)]
+        if not cands:
+            return None
+        victim = max(cands,
+                     key=lambda r: (CLASS_EVICT_RANK.get(r.slo_class, 0),
+                                    r.arrival_time, r.req_id))
+        rid = victim.req_id
+        self.kv.free(rid)
+        if victim.orig_prompt_len is None:
+            victim.orig_prompt_len = victim.prompt_len
+        victim.prompt_len += victim.n_generated - victim.n_folded
+        victim.n_folded = victim.n_generated
+        victim.tokens_done = 0
+        victim.blocks_done = 0
+        victim.n_preemptions += 1
+        victim.state = RequestState.PREEMPTED
+        self.n_preemptions += 1
+        return rid
 
     def _readmit_swapped(self, now: float,
                          exclude: List[int] = ()) -> List[int]:
@@ -591,13 +680,44 @@ class Scheduler:
 
 SCHEDULERS: Dict[str, type] = {}
 
+# Schedulers resolvable by make_scheduler but absent from the public
+# SCHEDULERS enumeration (CLI choices, invariant sweeps): pool-internal
+# roles that are not standalone serving policies.
+_INTERNAL_SCHEDULERS: Dict[str, type] = {}
+
 
 def register(cls):
     SCHEDULERS[cls.name] = cls
     return cls
 
 
+def register_internal(cls):
+    _INTERNAL_SCHEDULERS[cls.name] = cls
+    return cls
+
+
 def make_scheduler(name: str, n_blocks: int, **kw) -> Scheduler:
-    if name not in SCHEDULERS:
+    cls = SCHEDULERS.get(name) or _INTERNAL_SCHEDULERS.get(name)
+    if cls is None:
         raise KeyError(f"unknown scheduler {name!r}; known: {list(SCHEDULERS)}")
-    return SCHEDULERS[name](n_blocks, **kw)
+    return cls(n_blocks, **kw)
+
+
+@register_internal
+class DecodeOnlyScheduler(Scheduler):
+    """The decode pool's scheduler in disaggregated serving: residents
+    arrive exclusively via ``adopt`` (KV imported from the prefill pool),
+    so ``_plan`` never admits and never emits prefill slices — the pool's
+    iteration clock contains ONLY decode work, which is what makes the
+    decode pool's TBT provably prefill-free.  Memory pressure still runs:
+    decode growth can evict (swap victims restore locally through
+    ``_readmit_swapped``; recompute victims fold and are routed BACK to
+    the prefill pool by the disaggregated runtime)."""
+
+    name = "decode"
+
+    def _plan(self, now: float = 0.0) -> IterationPlan:
+        plan = IterationPlan()
+        plan.decode_ids = self.decode_ids()
+        self._finish_decode_bookkeeping(plan)
+        return plan

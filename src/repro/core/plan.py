@@ -137,6 +137,16 @@ class Request:
     # prompt tokens this request would have prefilled cold
     cached_prompt_tokens: int = 0
     admitted_prompt_tokens: int = 0
+    # disaggregated prefill→decode handoff bookkeeping (cumulative over
+    # migrations — a recompute victim routed back to the prefill pool
+    # migrates again): streamed layer-group chunks, tokens whose payload
+    # crossed the inter-pool link vs tokens linked to pages already warm
+    # on the decode pool, and the migration completion timestamp
+    n_handoffs: int = 0
+    n_handoff_chunks: int = 0
+    handoff_moved_tokens: int = 0
+    handoff_linked_tokens: int = 0
+    handoff_time: Optional[float] = None
     # metrics (filled by engine/simulator)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None

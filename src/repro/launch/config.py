@@ -76,6 +76,11 @@ class ServeConfig:
     # prefix cache
     prefix_cache: bool = True
     prefix_lru_pages: Optional[int] = None
+    # disaggregated prefill/decode pools
+    disagg: bool = False
+    handoff: str = "stream"             # stream | whole
+    decode_pages: Optional[int] = None
+    decode_watermark: int = 0
     # MoE / speculation
     moe_dispatch: str = "ragged"
     spec: str = "off"                   # off|ngram|draft
@@ -92,6 +97,7 @@ class ServeConfig:
     pool_watermark: float = 0.125
     ratelimit_rate: Optional[float] = None
     ratelimit_burst: float = 8.0
+    keepalive_timeout: float = 5.0
 
     # ------------------------------------------------------------ validation
 
@@ -106,6 +112,7 @@ class ServeConfig:
             "moe_dispatch": ("ragged", "dense"),
             "spec": ("off", "ngram", "draft"),
             "hw": ("h100x2", "tpu_v5e"),
+            "handoff": ("stream", "whole"),
         }
         for name, opts in choices.items():
             if getattr(self, name) not in opts:
@@ -113,13 +120,15 @@ class ServeConfig:
                                  f"not one of {opts}")
         positive = ["rate", "requests", "slots", "quantum", "token_budget",
                     "max_len", "page_size", "spec_k", "ttft_slo", "tbt_slo",
-                    "queue_watermark", "ratelimit_burst"]
+                    "queue_watermark", "ratelimit_burst",
+                    "keepalive_timeout"]
         for name in positive:
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be positive "
                                  f"(got {getattr(self, name)})")
         for name in ("pages", "host_pages", "swap_in_budget",
-                     "prefix_lru_pages", "host_bw", "ratelimit_rate"):
+                     "prefix_lru_pages", "host_bw", "ratelimit_rate",
+                     "decode_pages"):
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be positive or None "
@@ -134,6 +143,12 @@ class ServeConfig:
         if self.class_headroom < 0 or self.decode_reserve is not None \
                 and self.decode_reserve < 0:
             raise ValueError("class_headroom/decode_reserve must be >= 0")
+        if self.decode_watermark < 0:
+            raise ValueError(f"decode_watermark must be >= 0 "
+                             f"(got {self.decode_watermark})")
+        if self.disagg and self.http is not None:
+            raise ValueError("--disagg runs the two-pool trace drivers; "
+                             "it cannot be combined with --http")
         if self.spec == "draft" and not self.draft_config:
             raise ValueError("spec='draft' needs draft_config")
         if self.http is not None:
@@ -246,6 +261,24 @@ class ServeConfig:
                         default=d.prefix_lru_pages,
                         help="cap on retained refcount-0 cached pages "
                              "(default: unbounded)")
+        ap.add_argument("--disagg", action="store_true",
+                        help="disaggregated serving: a prefill pool and a "
+                             "decode pool under one clock, with KV handed "
+                             "off over a modelled interconnect")
+        ap.add_argument("--handoff", default=d.handoff,
+                        choices=["stream", "whole"],
+                        help="KV handoff granularity: stream each layer "
+                             "group's pages as its prefill completes "
+                             "(overlapping the link with the remaining "
+                             "groups' compute) or ship the whole prompt "
+                             "after the last group")
+        ap.add_argument("--decode-pages", type=int, default=d.decode_pages,
+                        help="decode-pool KV pages (default: same as the "
+                             "prefill pool)")
+        ap.add_argument("--decode-watermark", type=int,
+                        default=d.decode_watermark,
+                        help="hold migrations while decode-pool free "
+                             "pages are at or below this watermark")
         ap.add_argument("--moe-dispatch", default=d.moe_dispatch,
                         choices=["ragged", "dense"],
                         help="dropless MoE data path")
@@ -289,6 +322,10 @@ class ServeConfig:
         ap.add_argument("--ratelimit-burst", type=float,
                         default=d.ratelimit_burst,
                         help="per-tenant token-bucket burst capacity")
+        ap.add_argument("--keepalive-timeout", type=float,
+                        default=d.keepalive_timeout,
+                        help="seconds an idle keep-alive connection is "
+                             "held open before the server closes it")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "ServeConfig":
@@ -371,6 +408,7 @@ class ServeConfig:
                     ratelimit_burst=self.ratelimit_burst,
                     queue_watermark=self.queue_watermark,
                     pool_watermark=self.pool_watermark,
+                    keepalive_timeout=self.keepalive_timeout,
                     slo=self.slo())
 
     def slo(self) -> SLOConfig:

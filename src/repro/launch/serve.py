@@ -49,11 +49,12 @@ from repro.core.base import make_scheduler
 from repro.launch.config import ServeConfig
 from repro.models.model import DecoderModel
 from repro.serving.cost_model import H100X2, TPU_V5E
-from repro.serving.engine import Engine
+from repro.serving.engine import Engine, EngineHandoff
 from repro.serving.metrics import per_class_metrics, request_metrics
-from repro.serving.runtime import EngineExecutor, ServingRuntime
+from repro.serving.runtime import (DisaggRuntime, EngineExecutor,
+                                   ServingRuntime)
 from repro.serving.server import ServingServer
-from repro.serving.simulator import Simulator
+from repro.serving.simulator import DisaggSimulator, Simulator
 from repro.serving.traffic import (ARRIVAL_PROCESSES, DATASETS, ClassSpec,
                                    multi_class_trace)
 
@@ -98,6 +99,76 @@ def serve_http(sc: ServeConfig) -> None:
     eng = build_engine(sc)
     server = ServingServer(eng, **sc.server_kwargs())
     server.serve_forever()
+
+
+def build_disagg_engines(sc: ServeConfig):
+    """(prefill, decode) Engine pair sharing one model + params: the
+    prefill pool runs the selected scheduler, the decode pool the
+    internal decode-only scheduler (residents arrive via ``adopt``)."""
+    cfg = get_smoke_config(sc.arch) if sc.smoke else get_config(sc.arch)
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sp = make_scheduler(sc.scheduler, model.n_blocks,
+                        **sc.scheduler_kwargs())
+    sd = make_scheduler("decode", model.n_blocks, **sc.scheduler_kwargs())
+    ekw = sc.engine_kwargs()
+    dkw = dict(ekw, pages=sc.decode_pages if sc.decode_pages is not None
+               else ekw["pages"])
+    return (Engine(model, params, sp, **ekw),
+            Engine(model, params, sd, **dkw))
+
+
+def serve_disagg_real(sc: ServeConfig) -> None:
+    """Two-pool real execution: prefill and decode engines under one
+    DisaggRuntime clock, KV handed off through ``EngineHandoff``."""
+    ep, ed = build_disagg_engines(sc)
+    cfg = ep.cfg
+
+    def _stream(rid, tok, t):
+        print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
+    bridge = EngineHandoff(ep, ed, streaming=sc.handoff == "stream")
+    runtime = DisaggRuntime(
+        EngineExecutor(ep), EngineExecutor(ed), bridge,
+        on_token=_stream if sc.stream else None, clock="iteration",
+        decode_watermark_pages=sc.decode_watermark)
+    if sc.open_loop:
+        trace = sc.engine_trace(cfg.vocab_size)
+    else:
+        trace = ()
+        rng = np.random.default_rng(sc.seed)
+        for _ in range(sc.requests):
+            n = int(rng.integers(16, sc.max_len // 2))
+            enc = None
+            if cfg.encoder.enabled:
+                enc = np.zeros((cfg.encoder.n_frames, cfg.d_model),
+                               np.float32)
+            cls = "batch" if rng.random() < sc.batch_fraction \
+                else "interactive"
+            ep.submit(rng.integers(1, cfg.vocab_size, n).tolist(),
+                      max_new_tokens=int(rng.integers(4, 16)),
+                      enc_frames=enc, slo_class=cls)
+    rr = runtime.run(trace, max_iterations=100_000)
+    reqs = list(ep.requests.values()) + list(ed.requests.values())
+    m = request_metrics(reqs)
+    loop = "open-loop" if sc.open_loop else "closed-loop"
+    print(f"[serve-disagg] {cfg.name} x {sc.scheduler}+decode ({loop}, "
+          f"{sc.handoff} handoff): {sc.requests} requests in "
+          f"{rr.n_prefill_iterations} prefill + "
+          f"{rr.n_decode_iterations} decode iterations")
+    print(f"[serve-disagg] ttft(iters) mean={_f(m['ttft_mean'], '.1f')} "
+          f"p99={_f(m['ttft_p99'], '.1f')}; "
+          f"{rr.n_migrations} migrations ({rr.n_returns} returns), "
+          f"{rr.handoff_bytes / 1e6:.1f} MB handed off, "
+          f"queue peak {rr.migration_queue_peak}")
+    print(f"[serve-disagg] handoff chunks/req "
+          f"{_f(m['handoff_chunks_mean'], '.1f')}; link ratio "
+          f"{_f(m['handoff_link_ratio'])}; decode-pool prefill slices "
+          f"{rr.decode_prefill_slices} (must stay 0)")
+    print(f"[serve-disagg] kv high-water prefill "
+          f"{ep.alloc.pages_high_water}/{ep.alloc.n_pages}, decode "
+          f"{ed.alloc.pages_high_water}/{ed.alloc.n_pages}; "
+          f"preemptions {ep.n_preempted}+{ed.n_preempted}")
+    _print_per_class("serve-disagg", reqs)
 
 
 def serve_real(sc: ServeConfig) -> None:
@@ -201,6 +272,9 @@ def serve_sim(sc: ServeConfig) -> None:
     else:
         trace = ARRIVAL_PROCESSES[sc.arrival](
             DATASETS[sc.dataset], sc.rate, sc.requests, seed=sc.seed)
+    if sc.disagg:
+        _serve_sim_disagg(sc, cfg, hw, trace)
+        return
     sim = Simulator(cfg, sc.scheduler, hw, **sc.sim_kwargs())
     res = sim.run(trace)
     slo = sc.slo()
@@ -243,6 +317,49 @@ def serve_sim(sc: ServeConfig) -> None:
     _print_per_class("serve-sim", res.requests, slo)
 
 
+def _serve_sim_disagg(sc: ServeConfig, cfg, hw, trace) -> None:
+    """Two-pool analytic serving report: per-pool rollups plus the link
+    accounting the monolithic report has no column for."""
+    sim = DisaggSimulator(cfg, sc.scheduler, hw, handoff=sc.handoff,
+                          decode_pages=sc.decode_pages,
+                          decode_watermark=sc.decode_watermark,
+                          **sc.sim_kwargs())
+    res = sim.run(trace)
+    slo = sc.slo()
+    m = request_metrics(res.requests, slo)
+    print(f"[serve-sim] {cfg.name} x {sc.scheduler}+decode on "
+          f"{sc.dataset} @{sc.rate} req/s ({hw.name}; {sc.handoff} "
+          f"handoff; decode pool "
+          f"{sim.decode.kv.n_pages} x {sim.decode.kv.page_size}-token "
+          f"pages)")
+    for k in ("ttft_mean", "ttft_p99", "tbt_mean", "tbt_p99",
+              "slo_attainment", "e2e_mean", "queue_delay_mean",
+              "preemption_rate"):
+        print(f"[serve-sim]   {k:<16} {_f(m[k], '.3f')}")
+    n_tok = sum(r.n_generated for r in res.requests) or 1
+    print(f"[serve-sim]   energy/token     "
+          f"{res.total_energy / n_tok * 1e3:.1f} mJ "
+          f"(link {res.link_energy * 1e3:.1f} mJ total)")
+    print(f"[serve-sim]   handoff          "
+          f"{res.n_migrations} migrations ({res.n_returns} returns); "
+          f"{res.link_bytes / 1e9:.2f} GB over link, "
+          f"{res.link_stall_time:.4f} s unhidden stall, "
+          f"{res.handoff_wait_time:.4f} s watermark wait; "
+          f"queue peak {res.migration_queue_peak}")
+    print(f"[serve-sim]   decode pool      "
+          f"tbt mean {_f(res.decode_pool_tbt_mean, '.4f')} s over "
+          f"{res.decode.n_iterations} iterations; prefill slices "
+          f"{res.decode_prefill_slices} (must stay 0)")
+    print(f"[serve-sim]   kv pages         "
+          f"prefill high-water "
+          f"{res.prefill.pages_high_water}/{res.prefill.n_pool_pages}, "
+          f"decode {res.decode.pages_high_water}"
+          f"/{res.decode.n_pool_pages}; "
+          f"{res.prefill.n_preemptions + res.decode.n_preemptions} "
+          f"preemptions")
+    _print_per_class("serve-sim", res.requests, slo)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ServeConfig.add_arguments(ap)
@@ -257,6 +374,8 @@ def main() -> None:
     sc.slots = min(sc.slots, 8)
     if sc.http is not None:
         serve_http(sc)
+    elif sc.disagg:
+        serve_disagg_real(sc)
     else:
         serve_real(sc)
 

@@ -56,6 +56,13 @@ class HardwareSpec:
     host_bw: float = 50e9          # bytes/s
     e_host_pj_per_byte: float = 60.0
     host_dma_latency_s: float = 50e-6
+    # inter-pool link (the disaggregated prefill→decode KV handoff path):
+    # ``link_bw`` above is the raw per-link bandwidth; e_link covers the
+    # end-to-end byte move over the serdes + remote HBM touch, and
+    # link_latency_s the fixed per-transfer setup cost (one RDMA/ICI
+    # descriptor per handoff chunk).
+    e_link_pj_per_byte: float = 20.0
+    link_latency_s: float = 5e-6
 
     @property
     def flops(self) -> float:
@@ -88,6 +95,8 @@ H100X2 = HardwareSpec(
     block_overhead_s=300e-6,
     # 2 x PCIe gen5 x16 (~55 GB/s usable each) to host DRAM
     host_bw=110e9, e_host_pj_per_byte=60.0, host_dma_latency_s=50e-6,
+    # NVLink pool-to-pool: cheap per byte, microsecond-class setup
+    e_link_pj_per_byte=15.0, link_latency_s=3e-6,
 )
 
 # This repo's target: TPU v5e (constants mandated by the brief).
@@ -99,6 +108,9 @@ TPU_V5E = HardwareSpec(
     # PCIe gen3-class host attach on v5e boards; runtime-mediated DMA
     # submission carries a higher fixed latency than the GPU driver path
     host_bw=16e9, e_host_pj_per_byte=80.0, host_dma_latency_s=100e-6,
+    # ICI pool-to-pool: lower bandwidth than NVLink, runtime-mediated
+    # descriptor submission carries a higher fixed latency
+    e_link_pj_per_byte=25.0, link_latency_s=10e-6,
 )
 
 
@@ -348,6 +360,17 @@ class CostModel:
         return {"bytes": b,
                 "duration": self.hw.host_dma_latency_s + b / self.hw.host_bw,
                 "energy": b * self.hw.e_host_pj_per_byte * 1e-12}
+
+    def link_transfer(self, n_tokens: float) -> Dict[str, float]:
+        """Time/energy to stream ``n_tokens`` of KV over the inter-pool
+        link (the disaggregated prefill→decode handoff): a fixed setup
+        latency per transfer plus the byte stream at ``link_bw``.  The
+        simulator overlaps this against remaining prefill compute and only
+        charges ``stall = max(0, transfer − remaining_compute)``."""
+        b = self.kv_swap_bytes(n_tokens)
+        return {"bytes": b,
+                "duration": self.hw.link_latency_s + b / self.hw.link_bw,
+                "energy": b * self.hw.e_link_pj_per_byte * 1e-12}
 
     def recompute_cost(self, n_tokens: int) -> Dict[str, float]:
         """Cost of re-running a full-stack prefill over ``n_tokens`` — what

@@ -95,6 +95,17 @@ def _scatter_cache(full, row, slot):
             f, r.astype(f.dtype), slot, axis=1), full, row)
 
 
+def _chunks_cover(chunks, n_blocks: int) -> bool:
+    """True iff the staged handoff chunks tile every block [0, n_blocks)
+    — the export can then be assembled without touching the device."""
+    nxt = 0
+    for b0, b1 in sorted((b0, b1) for b0, b1, _ in chunks):
+        if b0 > nxt:
+            return False
+        nxt = max(nxt, b1)
+    return nxt >= n_blocks
+
+
 class Engine:
     def __init__(self, model: DecoderModel, params, scheduler, *,
                  n_slots: int = 8, max_len: int = 512,
@@ -250,6 +261,17 @@ class Engine:
         self.enc_frames: Dict[int, np.ndarray] = {}
         # swapped-out requests: req -> (host cache rows, offset, last_tok)
         self.host_kv: Dict[int, Tuple[object, int, int]] = {}
+        # disaggregated handoff (DESIGN.md §Disaggregated serving): with
+        # staging on (this engine is a prefill pool), every layer group
+        # whose KV completes is sliced per-block and host-staged through
+        # the same single end-of-iteration fetch as swap victims; at
+        # export the chunks ARE the transfer — no extra device sync.
+        # req -> [(block_start, block_end, host rows per block)]
+        self.handoff_staging = False
+        self._handoff_chunks: Dict[int, List[Tuple[int, int, list]]] = {}
+        self.n_handoffs_out = 0
+        self.n_handoffs_in = 0
+        self.handoff_bytes = 0
 
         # metrics
         self.iteration = 0
@@ -547,7 +569,21 @@ class Engine:
             self._admit(rid)
 
         groups = self._pack_slices(plan.prefill)
-        launched = [self._launch_prefill_group(*g) for g in groups]
+        launched, staged = [], []
+        for g in groups:
+            launched.append(self._launch_prefill_group(*g))
+            if self.handoff_staging:
+                # group-granular streaming: a slice whose token range ends
+                # at the prompt completes its blocks' KV this iteration —
+                # slice those rows NOW (before a later donated call retires
+                # this cache buffer); values join the single fetch below
+                for sl in g[3]:
+                    if sl.token_end == self.requests[sl.req_id].prompt_len:
+                        staged.append(
+                            (sl.req_id, sl.block_start, sl.block_end,
+                             self._slice_block_rows(sl.req_id,
+                                                    sl.block_start,
+                                                    sl.block_end)))
         prefill_tokens = sum(sl.n_tokens for sl in plan.prefill)
 
         # speculative verify-k: draft + verify are LAUNCHED here (device
@@ -565,12 +601,19 @@ class Engine:
 
         # ---- the ONE host sync per iteration ----
         if launched or decode_out is not None or swap_pending \
-                or spec_fetch is not None:
-            launched, decode_out, spec_fetch, swap_rows = jax.device_get(
-                (launched, decode_out, spec_fetch,
-                 [row for _, row in swap_pending]))
+                or spec_fetch is not None or staged:
+            launched, decode_out, spec_fetch, swap_rows, staged_rows = \
+                jax.device_get(
+                    (launched, decode_out, spec_fetch,
+                     [row for _, row in swap_pending],
+                     [rows for *_, rows in staged]))
             for (rid, _), row in zip(swap_pending, swap_rows):
                 self.host_kv[rid] = (row,) + self.host_kv[rid][1:]
+            for (rid, b0, b1, _), rows in zip(staged, staged_rows):
+                self._handoff_chunks.setdefault(rid, []).append(
+                    (b0, b1, rows))
+                self.handoff_bytes += sum(
+                    a.nbytes for a in jax.tree_util.tree_leaves(rows))
 
         for (start, end, emit, slices), (loads, toks) in zip(groups,
                                                              launched):
@@ -626,17 +669,109 @@ class Engine:
         self.iteration += 1
         return self._step_events
 
+    # ------------------------------------------------ disaggregated handoff
+
+    def _slice_block_rows(self, rid: int, b0: int, b1: int) -> list:
+        """Device-slice one slot's cache rows for blocks [b0, b1) — the
+        group-granular handoff chunk.  Eager ops allocate fresh buffers,
+        so the snapshot survives later donated calls; the VALUES ride the
+        single end-of-iteration ``jax.device_get``."""
+        slot = self._slot_of[rid]
+        rows = []
+        for b in range(b0, b1):
+            s, r, p_idx = self.model.index_map[b]
+            rows.append(jax.tree_util.tree_map(
+                lambda c: jax.lax.dynamic_slice_in_dim(c[r], slot, 1,
+                                                       axis=0),
+                self.cache[s][p_idx]))
+        return rows
+
+    def _scatter_block_rows(self, slot: int, b0: int, b1: int,
+                            rows: list) -> None:
+        """Install imported per-block chunk rows into ``slot`` (the decode-
+        side half of the streaming handoff; device ops, no host sync)."""
+        for b, row in zip(range(b0, b1), rows):
+            s, r, p_idx = self.model.index_map[b]
+            self.cache[s][p_idx] = jax.tree_util.tree_map(
+                lambda f, ch: f.at[r, slot].set(
+                    jnp.asarray(ch[0]).astype(f.dtype)),
+                self.cache[s][p_idx], row)
+
+    def export_request(self, rid: int) -> dict:
+        """Pull a migrating request's state off this engine (the prefill
+        pool): host-staged KV chunks (or, when they do not tile the stack
+        — staging off, or a preemption dropped them — a one-off full-row
+        snapshot), the token buffers, and the allocator-level page export
+        (shared-prefix pages stay warm in THIS pool's LRU).  The caller
+        has already ``pop_request``-ed the id from the scheduler."""
+        req = self.requests.pop(rid)
+        slot = self._slot_of.pop(rid)
+        offset = int(self.offsets[slot])
+        last = int(self.last_tok[slot])
+        chunks = self._handoff_chunks.pop(rid, [])
+        row = None
+        if not _chunks_cover(chunks, self.model.n_blocks):
+            # whole-prompt fallback: the only device sync outside the
+            # per-iteration fetch, taken exactly when streaming was off
+            row = jax.device_get(_slice_cache(self.cache, slot))
+            chunks = []
+        self._free_slots.append(slot)
+        self.decoding[slot] = False
+        self.stash.pop(rid, None)
+        self.n_handoffs_out += 1
+        return {"req": req, "prompt": self.prompts.pop(rid),
+                "outputs": self.outputs.pop(rid),
+                "enc_frames": self.enc_frames.pop(rid, None),
+                "offset": offset, "last_tok": last,
+                "chunks": chunks, "row": row,
+                "kv": self.alloc.export_pages(rid)}
+
+    def import_request(self, payload: dict):
+        """Install an exported request on this engine (the decode pool):
+        land its pages (warm shared chains link for free), scatter the
+        staged chunks — or the fallback full row — into a fresh slot, and
+        resume decode exactly where the prefill pool left off.  Returns
+        the allocator's ``KVImport`` (linked/moved token split).  The
+        caller adopts the request into this engine's scheduler AFTER this
+        lands (``Scheduler.adopt`` asserts residency)."""
+        req = payload["req"]
+        rid = req.req_id
+        imp = self.alloc.import_pages(payload["kv"])
+        slot = self._free_slots.pop()
+        self._slot_of[rid] = slot
+        if payload["row"] is not None:
+            self.cache = _scatter_cache(self.cache, payload["row"], slot)
+        else:
+            for b0, b1, rows in payload["chunks"]:
+                self._scatter_block_rows(slot, b0, b1, rows)
+        self.offsets[slot] = payload["offset"]
+        self.last_tok[slot] = payload["last_tok"]
+        self.decoding[slot] = True
+        self.requests[rid] = req
+        self.prompts[rid] = payload["prompt"]
+        self.outputs[rid] = payload["outputs"]
+        if payload["enc_frames"] is not None:
+            self.enc_frames[rid] = payload["enc_frames"]
+        self.n_handoffs_in += 1
+        return imp
+
     # -------------------------------------------------------------- helpers
 
     def _preempt(self, rid: int) -> None:
         """Execute a scheduler eviction: release the physical slot row and
         the boundary-activation stash, and fold the tokens generated so far
         into the recompute prompt (matching the scheduler's prompt_len
-        fold in ``Scheduler.preempt``)."""
-        slot = self._slot_of.pop(rid)
-        self._free_slots.append(slot)
-        self.decoding[slot] = False
+        fold in ``Scheduler.preempt``).  A demoted SWAPPED victim (the
+        scheduler's swap-pin pressure valve) holds no slot — its dead
+        host snapshot is dropped instead."""
+        slot = self._slot_of.pop(rid, None)
+        if slot is not None:
+            self._free_slots.append(slot)
+            self.decoding[slot] = False
+        else:
+            self.host_kv.pop(rid, None)
         self.stash.pop(rid, None)
+        self._handoff_chunks.pop(rid, None)   # staged KV is void post-fold
         # append only the tokens generated since the last fold — a request
         # preempted twice must not duplicate the already-folded prefix
         tail = self.requests[rid].prompt_len - len(self.prompts[rid])
@@ -1014,3 +1149,63 @@ class Engine:
             if self.alloc.owns(rid):        # EOS path frees via scheduler
                 self.alloc.free(rid)
             self.stash.pop(rid, None)
+            self._handoff_chunks.pop(rid, None)
+
+
+class EngineHandoff:
+    """``HandoffBridge`` over two Engines sharing one model + params (the
+    real-execution realization of DESIGN.md §Disaggregated serving).  With
+    ``streaming=True`` the source engine host-stages each completed layer
+    group through its per-iteration fetch, so exports assemble from chunks
+    with zero extra device syncs; ``streaming=False`` is the whole-prompt
+    baseline (one full-row snapshot per migration).  The transfer is
+    host-to-host, so ``ready_time == export_time`` — on real two-device
+    deployments the simulator's link model prices what this path would
+    cost."""
+
+    def __init__(self, src: "Engine", dst: "Engine", *,
+                 streaming: bool = True):
+        if src.cfg is not dst.cfg and src.cfg != dst.cfg:
+            raise ValueError("prefill/decode engines must share the model "
+                             "config (KV layouts must match)")
+        src.handoff_staging = streaming
+        self.src = src
+        self.dst = dst
+
+    def decode_free_pages(self) -> int:
+        return self.dst.alloc.n_free_pages
+
+    def stage(self, plan, requests, t_end, duration) -> None:
+        pass            # the engine stages inside execute_plan
+
+    def export(self, req, now):
+        from repro.serving.runtime import Migration
+        payload = self.src.export_request(req.req_id)
+        blob = [rows for _, _, rows in payload["chunks"]] \
+            if payload["row"] is None else payload["row"]
+        nbytes = sum(a.nbytes for a in jax.tree_util.tree_leaves(blob))
+        return Migration(req=req, payload=payload, export_time=now,
+                         ready_time=now,
+                         n_chunks=len(payload["chunks"]),
+                         bytes_total=float(nbytes))
+
+    def can_import(self, m) -> bool:
+        return bool(self.dst._free_slots) \
+            and self.dst.alloc.can_import(m.payload["kv"])
+
+    def do_import(self, m, now) -> Dict[str, int]:
+        imp = self.dst.import_request(m.payload)
+        return {"linked_tokens": imp.linked_tokens,
+                "moved_tokens": imp.moved_tokens}
+
+    def drop(self, req_id: int) -> None:
+        self.src._handoff_chunks.pop(req_id, None)
+
+    def return_to_prefill(self, req) -> None:
+        rid = req.req_id
+        for src_d, dst_d in ((self.dst.requests, self.src.requests),
+                             (self.dst.prompts, self.src.prompts),
+                             (self.dst.outputs, self.src.outputs)):
+            dst_d[rid] = src_d.pop(rid)
+        if rid in self.dst.enc_frames:
+            self.src.enc_frames[rid] = self.dst.enc_frames.pop(rid)

@@ -106,6 +106,37 @@ class PrefixHit:
 _NO_HIT = PrefixHit()
 
 
+@dataclass(frozen=True)
+class KVExport:
+    """Serializable manifest of one request's KV residency, produced by
+    ``export_pages`` for transfer to ANOTHER allocator (the disaggregated
+    prefill→decode handoff, DESIGN.md §Disaggregated serving).
+
+    ``chain`` is the leading shared-prefix run in block-table order —
+    ``(digest, page_tokens)`` per full shared page — carried so the
+    importing side can LINK pages its own index already holds (zero link
+    bytes) and register the rest, keeping the chain warm on both pools.
+    ``private_tokens`` are the KV tokens whose payload must actually cross
+    the inter-pool link if no page of the chain links on import."""
+    req_id: int
+    length: int
+    chain: Tuple[Tuple[bytes, Tuple[int, ...]], ...] = ()
+    n_private_pages: int = 0
+    private_tokens: int = 0
+    host_resident: bool = False
+
+
+@dataclass(frozen=True)
+class KVImport:
+    """Outcome of ``import_pages``: how many tokens were served by pages
+    already warm on the importing pool (``linked_tokens`` — zero bytes on
+    the link) vs. materialized from the transferred payload
+    (``moved_tokens``)."""
+    linked_tokens: int = 0
+    moved_tokens: int = 0
+    n_pages: int = 0
+
+
 @dataclass
 class PagedKVAllocator:
     n_pages: int
@@ -159,6 +190,12 @@ class PagedKVAllocator:
     n_prefix_tokens: int = 0
     n_prefix_cow: int = 0
     n_prefix_evictions: int = 0
+    # inter-pool handoff accounting (cumulative, in KV tokens)
+    n_exports: int = 0
+    n_imports: int = 0
+    exported_tokens: int = 0
+    import_linked_tokens: int = 0
+    import_moved_tokens: int = 0
 
     def __post_init__(self):
         assert self.n_pages > 0 and self.page_size > 0
@@ -545,6 +582,116 @@ class PagedKVAllocator:
         self.n_swap_ins += 1
         self.swapped_in_tokens += moved
         return moved
+
+    # -- inter-pool export / import (disaggregated handoff) -------------------
+    #
+    # ``export_pages`` serializes a request's residency into a ``KVExport``
+    # manifest and releases its pages HERE (move semantics): shared prefix
+    # pages decref and park in this pool's LRU — the source stays warm for
+    # later prompts — while the manifest carries the chain digests so the
+    # importing pool can link pages it already holds instead of receiving
+    # their payload.  ``import_pages`` is the mirror: it lands the request
+    # as owned (private) + pinned-shared (linked/registered chain) pages,
+    # with ``check_invariants`` holding on both allocators at every step.
+
+    def export_pages(self, req_id: int) -> KVExport:
+        """Serialize ``req_id``'s KV residency (resident OR swapped) for
+        transfer to another allocator, then release every page it holds on
+        this side.  Returns the manifest the destination imports from."""
+        assert self.owns(req_id), req_id
+        length = self._lengths[req_id]
+        if self.is_resident(req_id):
+            shared, private = self._split_shared(self._tables[req_id])
+            host_resident = False
+        else:
+            shared = list(self._swapped_shared.get(req_id, []))
+            private = self._host_tables[req_id]
+            host_resident = True
+        # the chain only ever covers FULL pages of the filled length
+        shared = shared[:length // self.page_size]
+        chain = tuple((self._page_digests[p], self._page_tokens[p])
+                      for p in shared)
+        export = KVExport(
+            req_id=req_id, length=length, chain=chain,
+            n_private_pages=len(private),
+            private_tokens=max(0, length - len(chain) * self.page_size),
+            host_resident=host_resident)
+        self.free(req_id)
+        self.n_exports += 1
+        self.exported_tokens += length
+        return export
+
+    def _match_chain(self, export: KVExport) -> List[int]:
+        """Leading run of ``export.chain`` already served by THIS pool's
+        index (content-verified, like ``lookup_prefix``).  Non-mutating."""
+        linked: List[int] = []
+        for digest, toks in export.chain:
+            pid = self._index.get(digest)
+            if pid is None or self._page_tokens.get(pid) != toks:
+                break
+            linked.append(pid)
+        return linked
+
+    def can_import(self, export: KVExport, n_tokens: Optional[int] = None,
+                   headroom_pages: int = 0) -> bool:
+        """True iff ``import_pages`` would succeed right now (prefix-aware:
+        chain pages warm on this side are charged zero new pages)."""
+        n_tokens = max(n_tokens or 0, export.length)
+        linked = self._match_chain(export)
+        hit = PrefixHit(cached_tokens=len(linked) * self.page_size,
+                        pages=tuple(linked))
+        need = max(0, self.pages_for(n_tokens) - len(linked))
+        return need + headroom_pages <= self._avail_for(hit)
+
+    def import_pages(self, export: KVExport,
+                     n_tokens: Optional[int] = None) -> KVImport:
+        """Materialize an exported request on THIS allocator: chain pages
+        already warm here are linked refcounted (zero link bytes), the
+        rest of the chain allocates fresh pages and registers into the
+        index (the transferred payload makes this pool warm too), and the
+        private remainder allocates owned pages.  ``n_tokens`` reserves
+        decode growth past the filled length (default: exactly the filled
+        length).  Raises ``PagedPoolExhausted`` when the pool cannot hold
+        the request — probe ``can_import`` first."""
+        req_id = export.req_id
+        assert req_id not in self._tables, req_id
+        n_tokens = max(n_tokens or 0, export.length)
+        linked = self._match_chain(export)
+        hit = PrefixHit(cached_tokens=len(linked) * self.page_size,
+                        pages=tuple(linked))
+        need_new = max(0, self.pages_for(n_tokens) - len(linked))
+        if need_new > self._avail_for(hit):
+            raise PagedPoolExhausted(
+                f"import_pages({req_id}): need {need_new} pages, "
+                f"{self.n_free_pages} free of {self.n_pages}")
+        table: List[int] = []
+        for pid in linked:
+            self._refs[pid] += 1
+            self._lru.pop(pid, None)
+            table.append(pid)
+        # cold chain pages: allocate + register so the chain is warm here
+        # for the NEXT import/admission sharing this prefix
+        for digest, toks in export.chain[len(linked):]:
+            pid = self._take_page()
+            table.append(pid)
+            if digest not in self._index and self.prefix_caching:
+                self._index[digest] = pid
+                self._page_digests[pid] = digest
+                self._page_tokens[pid] = toks
+                self._refs[pid] = 1
+        while len(table) < self.pages_for(n_tokens):
+            table.append(self._take_page())
+        self._tables[req_id] = table
+        self._stash[req_id] = []
+        self._lengths[req_id] = export.length
+        self._bump_high_water()
+        linked_tokens = min(hit.cached_tokens, export.length)
+        self.n_imports += 1
+        self.import_linked_tokens += linked_tokens
+        self.import_moved_tokens += export.length - linked_tokens
+        return KVImport(linked_tokens=linked_tokens,
+                        moved_tokens=export.length - linked_tokens,
+                        n_pages=len(table))
 
     # -- physical mapping ----------------------------------------------------
 

@@ -102,6 +102,20 @@ def request_metrics(requests: Iterable[Request],
     out["prefix_hit_rate"] = cached / admitted if admitted else 0.0
     out["cached_prompt_tokens"] = cached / len(reqs) if reqs \
         else float("nan")
+    # disaggregated prefill->decode handoff: migration counts, streamed
+    # layer-group chunks, and the linked/moved token split (tokens linked
+    # to pages already warm on the decode pool crossed the link for free
+    # — the KV-locality routing win).  All zero under monolithic serving.
+    n_handoffs = sum(r.n_handoffs for r in reqs)
+    moved = sum(r.handoff_moved_tokens for r in reqs)
+    linked = sum(r.handoff_linked_tokens for r in reqs)
+    out["n_handoffs"] = float(n_handoffs)
+    out["handoff_chunks_mean"] = sum(r.n_handoff_chunks for r in reqs) \
+        / n_handoffs if n_handoffs else float("nan")
+    out["handoff_moved_tokens"] = float(moved)
+    out["handoff_linked_tokens"] = float(linked)
+    out["handoff_link_ratio"] = linked / (linked + moved) \
+        if linked + moved else float("nan")
     if slo is not None:
         att = [slo.attained(r) for r in reqs]
         out["slo_attainment"] = sum(att) / len(att) if att else float("nan")
@@ -127,6 +141,26 @@ def per_class_metrics(
         out[cls] = request_metrics(
             [r for r in reqs if r.slo_class == cls], cls_slo)
     return out
+
+
+def handoff_counters(*, handoff_bytes: float = 0.0, queue_depth: int = 0,
+                     link_stall_time: float = 0.0,
+                     handoff_wait_time: float = 0.0,
+                     n_migrations: int = 0,
+                     n_returns: int = 0) -> Dict[str, float]:
+    """THE canonical names for the disaggregated-handoff counters, shared
+    by the live ``/metrics`` scrape (via ``prometheus_text(counters=...)``)
+    and the offline benchmark reports, so the two can never disagree on
+    spelling or units.  ``queue_depth`` is instantaneous (migrations
+    exported but not yet imported); the rest are run totals."""
+    return {
+        "handoff_bytes_total": float(handoff_bytes),
+        "handoff_queue_depth": float(queue_depth),
+        "handoff_link_stall_seconds_total": float(link_stall_time),
+        "handoff_wait_seconds_total": float(handoff_wait_time),
+        "handoff_migrations_total": float(n_migrations),
+        "handoff_returns_total": float(n_returns),
+    }
 
 
 # ---------------------------------------------------------------- exporters
@@ -193,6 +227,16 @@ def prometheus_text(requests: Iterable[Request],
           help_text="swap-to-host evictions executed")
     gauge("prefix_hit_rate", m["prefix_hit_rate"],
           help_text="cached / admitted prompt tokens")
+    gauge("handoffs_total", m["n_handoffs"],
+          help_text="prefill->decode pool migrations completed")
+    if m["n_handoffs"]:
+        gauge("handoff_moved_tokens_total", m["handoff_moved_tokens"],
+              help_text="KV tokens whose payload crossed the pool link")
+        gauge("handoff_linked_tokens_total", m["handoff_linked_tokens"],
+              help_text="KV tokens linked to pages already warm on the "
+                        "decode pool")
+        gauge("handoff_link_ratio", m["handoff_link_ratio"],
+              help_text="linked / (linked + moved) handoff tokens")
     if _finite(m.get("spec_acceptance_rate")):
         gauge("spec_acceptance_rate", m["spec_acceptance_rate"],
               help_text="accepted / drafted speculative tokens")

@@ -37,7 +37,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import (TYPE_CHECKING, Callable, List, Optional, Protocol,
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Protocol,
                     Sequence, Union)
 
 import numpy as np
@@ -357,6 +357,320 @@ class ServingRuntime:
             t = t_end
 
         res.clock = t
+        return res
+
+
+@dataclass
+class Migration:
+    """One prefill→decode handoff in flight: the migrating Request, a
+    backend-opaque payload (KV export + physical state), and the link
+    timeline — ``ready_time`` is when the last KV byte lands on the decode
+    side (== ``export_time`` plus the residual transfer the remaining
+    prefill compute could not hide; equal to ``export_time`` on the engine,
+    whose chunks were host-staged through the per-iteration fetch)."""
+    req: Request
+    payload: object
+    export_time: float
+    ready_time: float
+    n_chunks: int = 0
+    bytes_total: float = 0.0
+
+
+class HandoffBridge(Protocol):
+    """Backend-specific mechanics of the prefill→decode KV handoff; the
+    ``DisaggRuntime`` decides WHEN to stage/export/import, the bridge knows
+    HOW (engine: host-staged cache rows; simulator: priced link FIFO)."""
+
+    def decode_free_pages(self) -> int:
+        """Free pages on the decode pool's allocator (watermark signal)."""
+        ...
+
+    def stage(self, plan: IterationPlan, requests: Dict[int, Request],
+              t_end: float, duration: float) -> None:
+        """Observe one executed prefill-pool plan: layer groups whose KV
+        completed this iteration enter the per-request handoff stream
+        (simulator link model; the engine stages inside execute_plan)."""
+        ...
+
+    def export(self, req: Request, now: float) -> Migration:
+        """Pull the migrating request's KV/state off the prefill backend
+        (the scheduler has already ``pop_request``-ed it)."""
+        ...
+
+    def can_import(self, m: Migration) -> bool:
+        """True iff the decode backend can take the payload right now."""
+        ...
+
+    def do_import(self, m: Migration, now: float) -> Dict[str, int]:
+        """Install the payload on the decode backend; returns the
+        ``{"linked_tokens", "moved_tokens"}`` split (pages already warm on
+        the decode pool link for free — KV-locality routing's win)."""
+        ...
+
+    def drop(self, req_id: int) -> None:
+        """A prefill-pool preemption voided any staged chunks."""
+        ...
+
+    def return_to_prefill(self, req: Request) -> None:
+        """Move a decode-pool recompute victim's backend state (prompt /
+        output buffers) back to the prefill backend before readmission."""
+        ...
+
+
+@dataclass
+class DisaggRunResult(RunResult):
+    """``RunResult`` plus the two-pool accounting: per-pool iteration
+    counts, migration/handoff traffic, and the link-stall totals.
+    ``decode_prefill_slices`` MUST stay 0 — the decode pool's iteration
+    clock never contains prefill work (its TBT is prefill-free by
+    construction; the CI gate asserts the counter)."""
+    n_prefill_iterations: int = 0
+    n_decode_iterations: int = 0
+    n_migrations: int = 0
+    n_returns: int = 0             # recompute victims routed back to prefill
+    handoff_bytes: float = 0.0     # payload bytes that crossed the link
+    link_stall_time: float = 0.0   # export→ready residual (unhidden) time
+    handoff_wait_time: float = 0.0  # export→import total (stall + capacity)
+    migration_queue_peak: int = 0
+    held_peak: int = 0             # watermark-backpressured arrivals
+    decode_prefill_slices: int = 0
+
+
+class DisaggRuntime:
+    """Two-pool disaggregated serving loop (DESIGN.md §Disaggregated
+    serving): a prefill executor and a decode executor advance under ONE
+    runtime clock.  Requests are admitted and prefilled on the prefill
+    pool; as each layer group's KV completes it streams toward the decode
+    pool (bridge-managed), and when the final group emits the first token
+    the request is exported, crosses the link, and is ``adopt``-ed by the
+    decode pool, which runs decode-only iterations forever after.  Decode-
+    pool recompute victims fold and route BACK to the prefill pool (the
+    decode pool cannot prefill); swap victims restore locally.
+
+    Clock semantics mirror ``ServingRuntime``: ``clock="iteration"``
+    advances both pools in lockstep 1.0 per iteration (deterministic
+    engine replay — token streams bit-identical to monolithic serving);
+    ``clock="executor"`` gives each pool its own event-driven ready time,
+    so decode-pool timestamps contain ONLY decode durations — the
+    prefill-free-TBT property the paper's disaggregation argument needs.
+
+    ``decode_watermark_pages`` backpressures admission: new arrivals are
+    HELD (not submitted to the prefill pool) while the decode pool's free
+    pages sit below the watermark, so prefill work whose handoff would
+    have nowhere to land is never started."""
+
+    def __init__(self, prefill: Executor, decode: Executor,
+                 bridge: HandoffBridge, *,
+                 on_token: Optional[TokenCallback] = None,
+                 clock: str = "executor",
+                 decode_watermark_pages: int = 0,
+                 record_plans: bool = False):
+        if clock not in ("executor", "iteration"):
+            raise ValueError(f"unknown clock {clock!r}")
+        self.prefill = prefill
+        self.decode = decode
+        self.bridge = bridge
+        self.on_token = on_token
+        self.clock = clock
+        self.decode_watermark_pages = decode_watermark_pages
+        self.record_plans = record_plans
+        self.plans: List = []          # (pool_tag, IterationPlan)
+
+    def run(self, trace: Sequence[Union["TraceRequest", SubmitSpec]] = (),
+            max_iterations: int = 10_000, *,
+            feed: Optional[SubmitQueue] = None,
+            idle_poll: float = 0.05) -> DisaggRunResult:
+        xp, xd, bridge = self.prefill, self.decode, self.bridge
+        sp, sd = xp.scheduler, xd.scheduler
+        step = self.clock == "iteration"
+        res = DisaggRunResult(
+            requests=[sp.requests[k] for k in sorted(sp.requests)])
+        pending = sorted(trace, key=lambda tr: tr.arrival_time)
+        i_arr = 0
+        t = max(float(xp.initial_clock()), float(xd.initial_clock()))
+        rp = rd = t                    # per-pool next-ready clocks
+        held: deque = deque()          # (spec, ticket|None) backpressured
+        migr: deque = deque()          # Migration FIFO (link order)
+        # a pool whose last attempt produced an empty plan is stalled until
+        # some OTHER event (arrival, import, return, other-pool iteration)
+        # can change its state — re-planning the same state would spin
+        stall_p = stall_d = False
+
+        def live() -> bool:
+            return feed is not None and not feed.exhausted
+
+        def inject(now: float) -> bool:
+            nonlocal i_arr
+            n0 = len(held)
+            while i_arr < len(pending) \
+                    and pending[i_arr].arrival_time <= now:
+                held.append((pending[i_arr], None))
+                i_arr += 1
+            if feed is not None:
+                for ticket in feed.drain():
+                    held.append((ticket.spec, ticket))
+            res.held_peak = max(res.held_peak, len(held))
+            return len(held) > n0
+
+        def admit_held(now: float) -> bool:
+            n = 0
+            while held:
+                if self.decode_watermark_pages > 0 \
+                        and bridge.decode_free_pages() \
+                        < self.decode_watermark_pages:
+                    break              # decode pool must drain first
+                item, ticket = held.popleft()
+                spec = item.to_spec() if hasattr(item, "to_spec") else item
+                try:
+                    req = xp.submit(spec, now)
+                except Exception as e:
+                    if ticket is None:
+                        raise
+                    ticket._fail(e)
+                    continue
+                res.requests.append(req)
+                if ticket is not None:
+                    ticket._resolve(req)
+                n += 1
+            return n > 0
+
+        def attempt_imports(now: float) -> bool:
+            n = 0
+            while migr and migr[0].ready_time <= now:
+                m = migr[0]
+                if not (sd.can_adopt(m.req) and bridge.can_import(m)):
+                    if not sd.has_work():
+                        raise RuntimeError(
+                            f"decode pool can never import request "
+                            f"{m.req.req_id} — enlarge the decode pool")
+                    break              # FIFO: wait for the decode pool
+                migr.popleft()
+                info = bridge.do_import(m, now)
+                sd.adopt(m.req)
+                m.req.n_handoffs += 1
+                m.req.handoff_linked_tokens += info.get("linked_tokens", 0)
+                m.req.handoff_moved_tokens += info.get("moved_tokens", 0)
+                m.req.handoff_time = now
+                res.handoff_wait_time += now - m.export_time
+                res.n_migrations += 1
+                n += 1
+            return n > 0
+
+        while i_arr < len(pending) or held or migr \
+                or sp.has_work() or sd.has_work() or live():
+            acted = inject(t)
+            acted |= admit_held(t)
+            acted |= attempt_imports(t)
+            if acted:
+                stall_p = stall_d = False
+
+            executed = False
+            if sp.has_work() and rp <= t and not stall_p:
+                plan = sp.next_plan(now=t)
+                if plan.empty:
+                    stall_p = True
+                else:
+                    if self.record_plans:
+                        self.plans.append(("prefill", plan))
+                    for rid in plan.preempted_ids:
+                        bridge.drop(rid)
+                    res.n_preemptions += len(plan.preempted_ids)
+                    res.recompute_tokens += sum(
+                        sp.requests[rid].prompt_len
+                        for rid in plan.preempted_ids)
+                    res.n_swap_outs += len(plan.swapped_out_ids)
+                    res.n_swap_ins += len(plan.swapped_in_ids)
+                    outcome = xp.execute(plan, t)
+                    dur = 1.0 if step else outcome.duration
+                    t_end = t + dur
+                    bridge.stage(plan, sp.requests, t_end, dur)
+                    timestamp_events(sp, outcome.events, t_end,
+                                     self.on_token)
+                    res.n_iterations += 1
+                    res.n_prefill_iterations += 1
+                    res.n_dispatches += outcome.n_dispatches
+                    rp = t_end
+                    # completed prefills migrate NOW: the pool is pure
+                    # prefill — first-token emitters leave for the decode
+                    # pool the moment their last layer group finishes
+                    for rid in sorted(
+                            r.req_id for r in sp.requests.values()
+                            if r.state == RequestState.DECODE):
+                        req = sp.pop_request(rid)
+                        m = bridge.export(req, t_end)
+                        req.n_handoff_chunks += m.n_chunks
+                        res.handoff_bytes += m.bytes_total
+                        res.link_stall_time += max(
+                            0.0, m.ready_time - m.export_time)
+                        migr.append(m)
+                    res.migration_queue_peak = max(
+                        res.migration_queue_peak, len(migr))
+                    executed = True
+                    stall_d = False
+
+            if sd.has_work() and rd <= t and not stall_d:
+                plan = sd.next_plan(now=t)
+                if plan.empty:
+                    stall_d = True
+                else:
+                    if self.record_plans:
+                        self.plans.append(("decode", plan))
+                    res.decode_prefill_slices += len(plan.prefill)
+                    res.n_swap_outs += len(plan.swapped_out_ids)
+                    res.n_swap_ins += len(plan.swapped_in_ids)
+                    outcome = xd.execute(plan, t)
+                    dur = 1.0 if step else outcome.duration
+                    t_end = t + dur
+                    timestamp_events(sd, outcome.events, t_end,
+                                     self.on_token)
+                    res.n_iterations += 1
+                    res.n_decode_iterations += 1
+                    res.n_dispatches += outcome.n_dispatches
+                    res.decode_batch_sizes.append(len(plan.decode_ids))
+                    rd = t_end
+                    # fold-to-recompute victims route back to the prefill
+                    # pool (this pool cannot prefill); swap victims stay —
+                    # they restore locally via _readmit_swapped
+                    for rid in plan.preempted_ids:
+                        req = sd.pop_request(rid)
+                        bridge.return_to_prefill(req)
+                        sp.readmit(req)
+                        res.n_returns += 1
+                        res.n_preemptions += 1
+                        res.recompute_tokens += req.prompt_len
+                    executed = True
+                    stall_p = False
+
+            if res.n_iterations > max_iterations:
+                raise RuntimeError(
+                    f"did not drain within {max_iterations} iterations; "
+                    "scheduler stuck?")
+            if executed or acted:
+                continue
+            # nothing ran at t: advance to the next event
+            if live():
+                feed.wait(idle_poll)
+                t = max(t, xp.poll_clock(t))
+                continue
+            nxt = []
+            if sp.has_work() and not stall_p:
+                nxt.append(rp)
+            if sd.has_work() and not stall_d:
+                nxt.append(rd)
+            if i_arr < len(pending):
+                nxt.append(pending[i_arr].arrival_time)
+            if migr:
+                nxt.append(migr[0].ready_time)
+            nxt = [x for x in nxt if x > t]
+            if not nxt:
+                raise RuntimeError(
+                    f"disaggregated loop made no progress at t={t}: "
+                    f"{len(sp.waiting)} prefill-waiting, "
+                    f"{sp.n_active}/{sd.n_active} active, "
+                    f"{len(migr)} migrations, {len(held)} held")
+            t = min(nxt)
+
+        res.clock = max(t, rp, rd)
         return res
 
 

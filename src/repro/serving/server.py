@@ -94,6 +94,7 @@ class ServingServer:
                  pool_watermark: float = 0.125,
                  retry_after: float = 1.0,
                  slo: Optional[SLOConfig] = None,
+                 keepalive_timeout: float = 5.0,
                  max_iterations: int = 1_000_000_000):
         self.engine = engine
         self.host = host
@@ -102,6 +103,7 @@ class ServingServer:
         self.queue_watermark = queue_watermark
         self.pool_watermark = pool_watermark
         self.retry_after = retry_after
+        self.keepalive_timeout = keepalive_timeout
         self.max_iterations = max_iterations
         self.limiter = None if ratelimit_rate is None else \
             TenantRateLimiter(ratelimit_rate, ratelimit_burst)
@@ -227,26 +229,42 @@ class ServingServer:
 
     async def _handle_conn(self, reader: asyncio.StreamReader,
                            writer: asyncio.StreamWriter) -> None:
+        """Serve requests off one connection.  Non-SSE requests honour
+        ``Connection: keep-alive``: the handler loops, waiting up to
+        ``keepalive_timeout`` seconds for the next request before closing
+        the idle socket.  SSE responses always close — the event stream
+        owns the connection until the generation finishes."""
         try:
-            req = await self._read_request(reader)
-            if req is None:
-                return
-            method, path, headers, body = req
-            if method == "POST" and path == "/v1/generate":
-                await self._generate(writer, body)
-            elif method == "GET" and path == "/metrics":
-                await self._metrics(writer)
-            elif method == "GET" and path == "/healthz":
-                if self._engine_error is not None \
-                        or not self._thread.is_alive():
-                    await self._respond(writer, 503, {
-                        "status": "engine dead",
-                        "error": repr(self._engine_error)})
+            while True:
+                try:
+                    req = await asyncio.wait_for(
+                        self._read_request(reader),
+                        timeout=self.keepalive_timeout)
+                except asyncio.TimeoutError:
+                    break                        # idle keep-alive expired
+                if req is None:
+                    break
+                method, path, headers, body = req
+                keep = headers.get("connection", "").lower() == "keep-alive"
+                if method == "POST" and path == "/v1/generate":
+                    keep = await self._generate(writer, body, keep=keep)
+                elif method == "GET" and path == "/metrics":
+                    await self._metrics(writer, keep=keep)
+                elif method == "GET" and path == "/healthz":
+                    if self._engine_error is not None \
+                            or not self._thread.is_alive():
+                        await self._respond(writer, 503, {
+                            "status": "engine dead",
+                            "error": repr(self._engine_error)}, keep=keep)
+                    else:
+                        await self._respond(writer, 200, {"status": "ok"},
+                                            keep=keep)
                 else:
-                    await self._respond(writer, 200, {"status": "ok"})
-            else:
-                await self._respond(writer, 404,
-                                    {"error": f"no route {method} {path}"})
+                    await self._respond(
+                        writer, 404,
+                        {"error": f"no route {method} {path}"}, keep=keep)
+                if not keep:
+                    break
         except (ConnectionResetError, BrokenPipeError, asyncio.IncompleteReadError):
             pass
         finally:
@@ -280,24 +298,28 @@ class ServingServer:
                 429: "Too Many Requests", 500: "Internal Server Error",
                 503: "Service Unavailable"}
 
-    def _head(self, status: int, extra: bytes = b"") -> bytes:
+    def _head(self, status: int, extra: bytes = b"",
+              keep: bool = False) -> bytes:
         self._status_counts[status] = self._status_counts.get(status, 0) + 1
         reason = self._REASONS.get(status, "Unknown")
-        return (f"HTTP/1.1 {status} {reason}\r\n".encode()
-                + b"Connection: close\r\n" + extra)
+        conn = b"Connection: keep-alive\r\n" if keep \
+            else b"Connection: close\r\n"
+        return f"HTTP/1.1 {status} {reason}\r\n".encode() + conn + extra
 
     async def _respond(self, writer, status: int, payload,
                        retry_after: Optional[float] = None,
-                       ctype: str = "application/json") -> None:
+                       ctype: str = "application/json",
+                       keep: bool = False) -> None:
         body = payload if isinstance(payload, bytes) \
             else json.dumps(payload).encode()
         extra = f"Content-Type: {ctype}\r\nContent-Length: {len(body)}\r\n"
         if retry_after is not None:
             extra += f"Retry-After: {max(1, math.ceil(retry_after))}\r\n"
-        writer.write(self._head(status, extra.encode()) + b"\r\n" + body)
+        writer.write(self._head(status, extra.encode(), keep=keep)
+                     + b"\r\n" + body)
         await writer.drain()
 
-    async def _metrics(self, writer) -> None:
+    async def _metrics(self, writer, keep: bool = False) -> None:
         alloc = self.engine.alloc
         counters = {
             "queue_depth": float(self.queue_depth()),
@@ -324,9 +346,12 @@ class ServingServer:
                                slo=self.slo, counters=counters,
                                labeled=labeled)
         await self._respond(writer, 200, text.encode(),
-                            ctype="text/plain; version=0.0.4")
+                            ctype="text/plain; version=0.0.4", keep=keep)
 
-    async def _generate(self, writer, body: bytes) -> None:
+    async def _generate(self, writer, body: bytes,
+                        keep: bool = False) -> bool:
+        """Returns whether the connection may be kept open for another
+        request (never after an SSE stream — it owns the socket)."""
         try:
             payload = json.loads(body or b"{}")
             spec = SubmitSpec(
@@ -338,11 +363,13 @@ class ServingServer:
                 prefix_cache=bool(payload.get("prefix_cache", True)),
                 speculative=bool(payload.get("speculative", True)))
         except (KeyError, TypeError, ValueError, json.JSONDecodeError) as e:
-            await self._respond(writer, 400, {"error": f"bad request: {e}"})
-            return
+            await self._respond(writer, 400, {"error": f"bad request: {e}"},
+                                keep=keep)
+            return keep
         if self._engine_error is not None or not self._thread.is_alive():
-            await self._respond(writer, 503, {"error": "engine dead"})
-            return
+            await self._respond(writer, 503, {"error": "engine dead"},
+                                keep=keep)
+            return keep
         if self.limiter is not None:
             wait = self.limiter.acquire(spec.tenant)
             if wait > 0:
@@ -350,16 +377,16 @@ class ServingServer:
                     writer, 429, {"error": "rate limited",
                                   "tenant": spec.tenant,
                                   "retry_after": wait},
-                    retry_after=wait)
-                return
+                    retry_after=wait, keep=keep)
+                return keep
         wait = self.overloaded()
         if wait is not None:
             await self._respond(
                 writer, 429, {"error": "overloaded",
                               "queue_depth": self.queue_depth(),
                               "retry_after": wait},
-                retry_after=wait)
-            return
+                retry_after=wait, keep=keep)
+            return keep
 
         stream = _TokenStream(self._loop)
         submitted = self._loop.create_future()
@@ -379,23 +406,25 @@ class ServingServer:
         try:
             self.feed.put(spec, on_submit=on_submit, on_fail=on_fail)
         except RuntimeError:                      # queue closed: shutdown
-            await self._respond(writer, 503, {"error": "shutting down"})
-            return
+            await self._respond(writer, 503, {"error": "shutting down"},
+                                keep=keep)
+            return keep
         try:
             rid = await submitted
         except ValueError as e:                   # engine rejected the spec
-            await self._respond(writer, 400, {"error": str(e)})
-            return
+            await self._respond(writer, 400, {"error": str(e)}, keep=keep)
+            return keep
         except Exception as e:
-            await self._respond(writer, 500, {"error": repr(e)})
-            return
+            await self._respond(writer, 500, {"error": repr(e)}, keep=keep)
+            return keep
 
         if payload.get("stream", True):
             await self._stream_sse(writer, rid, stream,
                                    tag=payload.get("tag"))
-        else:
-            await self._block_json(writer, rid, stream,
-                                   tag=payload.get("tag"))
+            return False
+        await self._block_json(writer, rid, stream,
+                               tag=payload.get("tag"), keep=keep)
+        return keep
 
     async def _stream_sse(self, writer, rid: int, stream: _TokenStream,
                           tag=None) -> None:
@@ -424,7 +453,7 @@ class ServingServer:
             self.n_dropped_streams += 1
 
     async def _block_json(self, writer, rid: int, stream: _TokenStream,
-                          tag=None) -> None:
+                          tag=None, keep: bool = False) -> None:
         tokens: List[int] = []
         while True:
             item = await stream.queue.get()
@@ -432,6 +461,6 @@ class ServingServer:
                 tokens.append(item[1])
             else:
                 summary = dict(item[1], tag=tag)
-                await self._respond(writer, 200, summary)
+                await self._respond(writer, 200, summary, keep=keep)
                 self.n_streams_completed += 1
                 return

@@ -28,7 +28,8 @@ from repro.core.plan import Request
 from repro.models.config import ModelConfig
 from repro.serving.cost_model import CostModel, HardwareSpec, kv_pool_pages
 from repro.serving.kvcache import PagedKVAllocator
-from repro.serving.runtime import ServingRuntime, SimExecutor
+from repro.serving.runtime import (DisaggRuntime, Migration, ServingRuntime,
+                                   SimExecutor)
 from repro.serving.traffic import TraceRequest
 
 
@@ -190,21 +191,32 @@ class Simulator:
         ex = SimExecutor(self)
         runtime = ServingRuntime(ex, on_token=on_token, clock=clock)
         rr = runtime.run(trace, max_iterations=max_iterations)
+        return self._result(ex, rr.requests, rr.n_iterations, rr.clock,
+                            rr.decode_batch_sizes, rr.n_preemptions,
+                            rr.recompute_tokens, rr.n_swap_outs,
+                            rr.n_swap_ins)
+
+    def _result(self, ex: SimExecutor, requests, n_iterations, sim_time,
+                decode_batch_sizes, n_preemptions, recompute_tokens,
+                n_swap_outs, n_swap_ins) -> SimResult:
+        """Fold one executor's accounting plus this pool's allocator
+        counters into a ``SimResult`` (shared by the monolithic ``run``
+        and the per-pool reports of ``DisaggSimulator``)."""
         return SimResult(
-            requests=rr.requests,
+            requests=requests,
             total_energy=ex.total_energy,
             total_expert_bytes=ex.total_expert_bytes,
             total_hbm_bytes=ex.total_hbm_bytes,
             total_flops=ex.total_flops,
-            n_iterations=rr.n_iterations,
-            sim_time=rr.clock,
-            decode_batch_sizes=rr.decode_batch_sizes,
-            n_preemptions=rr.n_preemptions,
-            recompute_tokens=rr.recompute_tokens,
+            n_iterations=n_iterations,
+            sim_time=sim_time,
+            decode_batch_sizes=decode_batch_sizes,
+            n_preemptions=n_preemptions,
+            recompute_tokens=recompute_tokens,
             pages_high_water=self.kv.pages_high_water,
             n_pool_pages=self.kv.n_pages,
-            n_swap_outs=rr.n_swap_outs,
-            n_swap_ins=rr.n_swap_ins,
+            n_swap_outs=n_swap_outs,
+            n_swap_ins=n_swap_ins,
             swap_bytes=ex.swap_bytes,
             swap_dma_time=ex.swap_dma_time,
             swap_stall_time=ex.swap_stall_time,
@@ -214,4 +226,207 @@ class Simulator:
             total_accepted=ex.total_accepted,
             n_prefix_hits=self.kv.n_prefix_hits,
             prefix_cached_tokens=self.kv.n_prefix_tokens,
+        )
+
+
+class SimHandoff:
+    """Analytic ``HandoffBridge``: the inter-pool link is a FIFO resource
+    priced by ``CostModel.link_transfer``.  In ``stream`` mode every layer
+    group whose KV completes enqueues its chunk at that iteration's end,
+    so the transfer overlaps the REMAINING groups' prefill compute and the
+    export-time stall is only the residual —
+    ``stall = max(0, transfer_done - export_time)``, the paper's
+    ``max(0, transfer - remaining_prefill_compute)`` realized on a link
+    timeline that also captures cross-request queueing.  ``whole`` mode
+    enqueues the full prompt's KV only at export, hiding nothing: with
+    G >= 2 layer groups streaming strictly dominates because at most the
+    LAST group's chunk (~1/G of the bytes) is left unhidden."""
+
+    def __init__(self, src: Simulator, dst: Simulator,
+                 mode: str = "stream"):
+        if mode not in ("stream", "whole"):
+            raise ValueError(f"unknown handoff mode {mode!r}")
+        self.src = src
+        self.dst = dst
+        self.mode = mode
+        self.cost = src.cost
+        self._link_free = 0.0          # when the link finishes its queue
+        self._done_t: Dict[int, float] = {}
+        self._chunks: Dict[int, int] = {}
+        self._bytes: Dict[int, float] = {}
+        self.link_bytes = 0.0
+        self.link_energy = 0.0
+        self.n_chunks = 0
+
+    def _enqueue(self, rid: int, n_tokens: float, now: float) -> None:
+        x = self.cost.link_transfer(n_tokens)
+        start = max(self._link_free, now)
+        self._link_free = start + x["duration"]
+        self._done_t[rid] = self._link_free
+        self._chunks[rid] = self._chunks.get(rid, 0) + 1
+        self._bytes[rid] = self._bytes.get(rid, 0.0) + x["bytes"]
+        self.link_bytes += x["bytes"]
+        self.link_energy += x["energy"]
+        self.n_chunks += 1
+
+    def decode_free_pages(self) -> int:
+        return self.dst.kv.n_free_pages
+
+    def stage(self, plan, requests, t_end: float, duration: float) -> None:
+        if self.mode != "stream":
+            return
+        nb = self.src.scheduler.n_blocks
+        for sl in plan.prefill:
+            r = requests[sl.req_id]
+            if sl.token_end == r.prompt_len:
+                # this group's KV is complete: its share of the prompt's
+                # pages enters the link queue at iteration end
+                frac = (sl.block_end - sl.block_start) / nb
+                self._enqueue(sl.req_id, sl.token_end * frac, t_end)
+
+    def export(self, req: Request, now: float) -> Migration:
+        rid = req.req_id
+        exp = self.src.kv.export_pages(rid)
+        if rid not in self._done_t:
+            # whole-prompt handoff (or a chunked scheduler that never
+            # completed a partial-stack group): everything crosses now
+            self._enqueue(rid, exp.length, now)
+        return Migration(req=req, payload=exp, export_time=now,
+                         ready_time=max(now, self._done_t.pop(rid, now)),
+                         n_chunks=self._chunks.pop(rid, 0),
+                         bytes_total=self._bytes.pop(rid, 0.0))
+
+    def can_import(self, m: Migration) -> bool:
+        return self.dst.kv.can_import(m.payload)
+
+    def do_import(self, m: Migration, now: float) -> Dict[str, int]:
+        imp = self.dst.kv.import_pages(m.payload)
+        return {"linked_tokens": imp.linked_tokens,
+                "moved_tokens": imp.moved_tokens}
+
+    def drop(self, req_id: int) -> None:
+        self._done_t.pop(req_id, None)
+        self._chunks.pop(req_id, None)
+        self._bytes.pop(req_id, None)
+
+    def return_to_prefill(self, req: Request) -> None:
+        pass                           # analytic backends hold no buffers
+
+
+@dataclass
+class DisaggSimResult:
+    """Two-pool analytic outcome: per-pool ``SimResult`` reports plus the
+    migration/link accounting.  ``decode_prefill_slices`` MUST be 0 — the
+    decode pool's clock never contains prefill work, so every decode-pool
+    TBT sample is prefill-stall-free by construction."""
+    requests: List[Request]
+    prefill: SimResult
+    decode: SimResult
+    sim_time: float = 0.0
+    n_migrations: int = 0
+    n_returns: int = 0
+    handoff_bytes: float = 0.0
+    link_bytes: float = 0.0
+    link_energy: float = 0.0
+    link_stall_time: float = 0.0
+    handoff_wait_time: float = 0.0
+    migration_queue_peak: int = 0
+    decode_prefill_slices: int = 0
+    handoff_linked_tokens: int = 0
+    handoff_moved_tokens: int = 0
+
+    @property
+    def total_energy(self) -> float:
+        return self.prefill.total_energy + self.decode.total_energy \
+            + self.link_energy
+
+    def decode_pool_tbts(self) -> List[float]:
+        """Inter-token gaps timestamped entirely INSIDE the decode pool
+        (at or after the request's last migration) — the latency the
+        paper's disaggregation argument protects."""
+        out: List[float] = []
+        for r in self.requests:
+            if r.handoff_time is None:
+                continue
+            ts = [r.first_token_time] + r.token_times \
+                if r.first_token_time is not None else list(r.token_times)
+            ts = [x for x in ts if x >= r.handoff_time]
+            out.extend(b - a for a, b in zip(ts, ts[1:]))
+        return out
+
+    @property
+    def decode_pool_tbt_mean(self) -> float:
+        xs = self.decode_pool_tbts()
+        return sum(xs) / len(xs) if xs else float("nan")
+
+
+class DisaggSimulator:
+    """Analytic two-pool serving: a prefill ``Simulator`` (any scheduler)
+    and a decode ``Simulator`` (``DecodeOnlyScheduler``) coupled by a
+    ``SimHandoff`` link under the shared ``DisaggRuntime`` loop.
+    ``handoff`` picks group-granular streaming ("stream") or the
+    whole-prompt baseline ("whole"); ``decode_pages`` sizes the decode
+    pool's allocator (default: mirror the prefill pool);
+    ``decode_watermark`` holds new admissions while the decode pool has
+    fewer free pages (backpressure).  Remaining kwargs configure the
+    prefill pool exactly like ``Simulator``; the decode pool inherits the
+    memory/preemption/speculation settings but never admits or prefills."""
+
+    # Simulator kwargs the decode pool inherits (scheduler-specific ones
+    # like n_groups/chunk_size stay on the prefill side)
+    _POOL_KEYS = ("moe_dispatch", "page_size", "preemption",
+                  "preemption_mode", "host_pages", "swap_in_budget",
+                  "decode_reserve", "swap_overlap", "class_headroom",
+                  "prefix_cache", "prefix_lru_pages", "spec_mode", "spec_k",
+                  "spec_adaptive", "spec_acceptance", "spec_seed",
+                  "n_slots", "token_budget", "quantum")
+
+    def __init__(self, cfg: ModelConfig, scheduler, hw: HardwareSpec, *,
+                 handoff: str = "stream", decode_pages: Optional[int] = None,
+                 decode_watermark: int = 0, **kw):
+        if handoff not in ("stream", "whole"):
+            raise ValueError(f"unknown handoff mode {handoff!r}")
+        self.handoff = handoff
+        self.decode_watermark = decode_watermark
+        self.prefill = Simulator(cfg, scheduler, hw, **kw)
+        dkw = {k: kw[k] for k in self._POOL_KEYS if k in kw}
+        dkw["n_pages"] = self.prefill.kv.n_pages \
+            if decode_pages is None else decode_pages
+        self.decode = Simulator(cfg, "decode", hw, **dkw)
+
+    def run(self, trace: List[TraceRequest],
+            max_iterations: int = 2_000_000, *,
+            on_token=None, clock: str = "executor") -> DisaggSimResult:
+        xp = SimExecutor(self.prefill)
+        xd = SimExecutor(self.decode)
+        bridge = SimHandoff(self.prefill, self.decode, mode=self.handoff)
+        runtime = DisaggRuntime(
+            xp, xd, bridge, on_token=on_token, clock=clock,
+            decode_watermark_pages=self.decode_watermark)
+        rr = runtime.run(trace, max_iterations=max_iterations)
+        pre = self.prefill._result(
+            xp, rr.requests, rr.n_prefill_iterations, rr.clock, [],
+            rr.n_preemptions - rr.n_returns, rr.recompute_tokens, 0, 0)
+        dec = self.decode._result(
+            xd, rr.requests, rr.n_decode_iterations, rr.clock,
+            rr.decode_batch_sizes, rr.n_returns, 0,
+            rr.n_swap_outs, rr.n_swap_ins)
+        return DisaggSimResult(
+            requests=rr.requests,
+            prefill=pre,
+            decode=dec,
+            sim_time=rr.clock,
+            n_migrations=rr.n_migrations,
+            n_returns=rr.n_returns,
+            handoff_bytes=rr.handoff_bytes,
+            link_bytes=bridge.link_bytes,
+            link_energy=bridge.link_energy,
+            link_stall_time=rr.link_stall_time,
+            handoff_wait_time=rr.handoff_wait_time,
+            migration_queue_peak=rr.migration_queue_peak,
+            decode_prefill_slices=rr.decode_prefill_slices,
+            handoff_linked_tokens=sum(r.handoff_linked_tokens
+                                      for r in rr.requests),
+            handoff_moved_tokens=sum(r.handoff_moved_tokens
+                                     for r in rr.requests),
         )

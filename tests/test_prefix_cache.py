@@ -232,6 +232,90 @@ def test_interleaved_lifecycle_never_leaks(seed):
     assert alloc.host_pages_in_use() == 0
 
 
+# -- export/import property test ---------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_export_import_round_trip_never_leaks(seed):
+    """Random interleavings of admit / grow / swap / export->import /
+    free over a PAIR of allocators whose requests share prefix content
+    (the disaggregated prefill->decode handoff, both directions): an
+    exported request's pages live in the serialized payload — on NEITHER
+    pool — until imported; chain refcounts travel with it; page
+    conservation holds on both pools after every operation; and at drain
+    both pools are fully reclaimable with every refcount zero."""
+    rng = np.random.default_rng(seed)
+    pyrng = random.Random(seed)
+    pools = [_alloc(n_pages=int(rng.integers(24, 40)), n_host_pages=24),
+             _alloc(n_pages=int(rng.integers(24, 40)), n_host_pages=24)]
+    prefixes = [[int(x) for x in rng.integers(1, 97, 8)] for _ in range(3)]
+    where, lengths, in_flight, next_rid = {}, {}, [], 0
+    for _ in range(60):
+        op = pyrng.choice(["admit", "grow", "swap_out", "export",
+                           "import", "free"])
+        try:
+            if op == "admit":
+                prompt = _prompt(rng, pyrng.choice(prefixes),
+                                 int(rng.integers(0, 6)))
+                rid, next_rid = next_rid, next_rid + 1
+                side = pyrng.randint(0, 1)
+                alloc = pools[side]
+                alloc.reserve(rid, len(prompt) + PS, prompt_tokens=prompt)
+                alloc.set_length(rid, len(prompt))
+                alloc.register_prefix(rid, prompt)
+                where[rid] = side
+                lengths[rid] = len(prompt)
+            elif op == "grow" and where:
+                rid = pyrng.choice(sorted(where))
+                alloc = pools[where[rid]]
+                if alloc.is_resident(rid):
+                    alloc.grow_to(rid, alloc.length(rid) + 1)
+                    lengths[rid] = alloc.length(rid)
+            elif op == "swap_out" and where:
+                rid = pyrng.choice(sorted(where))
+                alloc = pools[where[rid]]
+                if alloc.can_swap_out(rid):
+                    alloc.swap_out(rid)
+            elif op == "export" and where:
+                # export works from resident AND swapped residency; the
+                # payload then holds the pages (in flight over the link)
+                rid = pyrng.choice(sorted(where))
+                src_side = where.pop(rid)
+                exp = pools[src_side].export_pages(rid)
+                assert exp.length == lengths[rid]
+                in_flight.append((exp, 1 - src_side))
+            elif op == "import" and in_flight:
+                exp, dst_side = in_flight[0]
+                dst = pools[dst_side]
+                if dst.can_import(exp, exp.length + PS):
+                    in_flight.pop(0)
+                    dst.import_pages(exp, exp.length + PS)
+                    assert dst.length(exp.req_id) == lengths[exp.req_id]
+                    where[exp.req_id] = dst_side
+            elif op == "free" and where:
+                rid = pyrng.choice(sorted(where))
+                pools[where.pop(rid)].free(rid)
+                lengths.pop(rid)
+        except PagedPoolExhausted:
+            pass
+        for alloc in pools:
+            alloc.check_invariants()
+    # drain: land every in-flight payload (pools empty out as we free)
+    for rid in sorted(where):
+        pools[where[rid]].free(rid)
+    for exp, dst_side in in_flight:
+        dst = pools[dst_side]
+        assert dst.can_import(exp)
+        dst.import_pages(exp)
+        dst.free(exp.req_id)
+    for alloc in pools:
+        alloc.check_invariants()
+        assert alloc.pages_in_use() == 0
+        assert all(r == 0 for r in alloc._refs.values())
+        assert alloc.host_pages_in_use() == 0
+
+
 # -- engine bit-identity -----------------------------------------------------
 
 

@@ -354,6 +354,35 @@ def test_batch_victims_evicted_before_interactive():
     assert 0 not in preempted              # earliest resident never evicted
 
 
+def test_batch_earliest_resident_does_not_shield_itself():
+    """Class-aware forward-progress guard: the earliest-resident shield
+    protects the earliest request of the HIGHEST-priority class present.
+    With a batch request as the earliest resident and interactive ones
+    behind it, pressure must evict the batch request first — under a
+    class-blind guard it would shield itself while interactive requests
+    starve (pure recency would evict request 2 instead)."""
+    sched = make_scheduler("continuous", 4, n_slots=4)
+    kv = PagedKVAllocator(n_pages=18, page_size=2)
+    sched.attach_kv(kv, decode_reserve=0)
+    specs = [("batch", 0), ("interactive", 1), ("interactive", 2)]
+    for i, (cls, t) in enumerate(specs):
+        sched.submit(Request(req_id=i, prompt_len=7, max_new_tokens=10,
+                             arrival_time=float(t), slo_class=cls))
+    preempted = []
+    it = 0
+    while sched.has_work():
+        plan = sched.next_plan(now=float(it))
+        preempted.extend(plan.preempted_ids)
+        it += 1
+        assert it < 1000
+    assert preempted, "scenario must create pressure"
+    assert preempted[0] == 0               # the batch EARLIEST resident
+    assert 1 not in preempted              # earliest interactive protected
+    for r in sched.requests.values():
+        assert r.n_generated == r.max_new_tokens
+    assert kv.pages_in_use() == 0
+
+
 def test_class_headroom_blocks_batch_admission_only():
     """class_headroom={"interactive": k}: a batch request must leave k
     pages free at admission; an identical interactive request is exempt."""

@@ -256,6 +256,78 @@ def test_bad_request_400_and_metrics_and_healthz():
     asyncio.run(_with_server(body))
 
 
+# ------------------------------------------------------------- keep-alive
+
+
+async def _raw(writer, reader, method, path, payload=None, keep=True):
+    """One request over an ALREADY-OPEN connection; returns (status,
+    headers, body) parsed by Content-Length so the socket can be reused."""
+    import json as _json
+    body = b"" if payload is None else _json.dumps(payload).encode()
+    head = f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+    if keep:
+        head += "Connection: keep-alive\r\n"
+    if body:
+        head += f"Content-Length: {len(body)}\r\n"
+    writer.write(head.encode() + b"\r\n" + body)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    headers = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        k, _, v = line.decode().partition(":")
+        headers[k.strip().lower()] = v.strip()
+    n = int(headers.get("content-length", "0") or 0)
+    return status, headers, await reader.readexactly(n) if n else b""
+
+
+def test_http_keepalive_reuses_connection():
+    """Connection: keep-alive must serve multiple requests over ONE
+    socket — mixed POST /v1/generate (non-streaming) and GETs — with the
+    keep-alive echoed in every response; a request WITHOUT the header
+    gets Connection: close and the server really closes."""
+    async def body(srv):
+        tr = _trace(n=1)[0]
+        payload = {"prompt_tokens": list(tr.prompt_tokens),
+                   "max_new_tokens": 4, "stream": False}
+        reader, writer = await asyncio.open_connection(srv.host, srv.port)
+        for _ in range(2):
+            status, headers, doc = await _raw(
+                writer, reader, "POST", "/v1/generate", payload)
+            assert status == 200
+            assert headers["connection"] == "keep-alive"
+            assert b"tokens" in doc
+        status, headers, _ = await _raw(writer, reader, "GET", "/healthz")
+        assert status == 200 and headers["connection"] == "keep-alive"
+        # same socket, no keep-alive header: the server answers then
+        # closes the connection
+        status, headers, _ = await _raw(writer, reader, "GET", "/healthz",
+                                        keep=False)
+        assert status == 200 and headers["connection"] == "close"
+        assert await reader.read() == b""          # EOF
+        writer.close()
+        # the whole exchange used ONE connection: 4 responses served
+        assert srv._status_counts[200] == 4
+
+    asyncio.run(_with_server(body))
+
+
+def test_http_keepalive_idle_timeout_closes():
+    """An idle keep-alive connection must be closed once
+    ``keepalive_timeout`` expires — idle sockets cannot pin the server."""
+    async def body(srv):
+        reader, writer = await asyncio.open_connection(srv.host, srv.port)
+        status, headers, _ = await _raw(writer, reader, "GET", "/healthz")
+        assert status == 200 and headers["connection"] == "keep-alive"
+        got = await asyncio.wait_for(reader.read(), timeout=5.0)
+        assert got == b""                          # server-side close
+        writer.close()
+
+    asyncio.run(_with_server(body, keepalive_timeout=0.2))
+
+
 # ----------------------------------------------------------- rate limiter
 
 
