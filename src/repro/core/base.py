@@ -71,6 +71,27 @@ if TYPE_CHECKING:  # avoid core <-> serving import cycle at runtime
 CLASS_EVICT_RANK: Dict[str, int] = {"interactive": 0, "batch": 1}
 
 
+def fold_for_recompute(r: Request) -> None:
+    """Fold ``r``'s generated tokens into its recompute prompt and reset
+    the prefill counters for a fresh epoch (PREEMPTED state).  Recompute
+    prefill covers prompt + everything generated so far; its final slice
+    then emits generation token n_generated + 1 (greedy decode of token
+    g+1 given the g-token prefix is the same function whether reached by
+    a decode step or by prefill over the prefix).  Only the NOT-yet-
+    folded tail is appended — a second fold must not duplicate tokens
+    folded by the first.  Module-level because the disaggregated runtime
+    folds in-flight migrations that belong to NO scheduler (a dropped
+    link's victim); callers queue/route the request themselves."""
+    if r.orig_prompt_len is None:
+        r.orig_prompt_len = r.prompt_len
+    r.prompt_len += r.n_generated - r.n_folded
+    r.n_folded = r.n_generated
+    r.tokens_done = 0
+    r.blocks_done = 0
+    r.n_preemptions += 1
+    r.state = RequestState.PREEMPTED
+
+
 class Scheduler:
     name = "base"
 
@@ -424,21 +445,46 @@ class Scheduler:
         self._on_preempt(req_id)
         if self.kv is not None and self.kv.owns(req_id):
             self.kv.free(req_id)
-        if r.orig_prompt_len is None:
-            r.orig_prompt_len = r.prompt_len
-        # recompute prefill covers prompt + everything generated so far; its
-        # final slice then emits generation token n_generated + 1 (greedy
-        # decode of token g+1 given the g-token prefix is the same function
-        # whether reached by a decode step or by prefill over the prefix).
-        # Only the NOT-yet-folded tail is appended — a second preemption
-        # must not re-fold tokens folded by the first.
-        r.prompt_len += r.n_generated - r.n_folded
-        r.n_folded = r.n_generated
-        r.tokens_done = 0
-        r.blocks_done = 0
-        r.n_preemptions += 1
-        r.state = RequestState.PREEMPTED
+        fold_for_recompute(r)
         self.waiting.appendleft(req_id)
+        self.n_preemptions += 1
+
+    def shed(self, req_id: int, reason: str = "deadline") -> None:
+        """Remove ``req_id`` from service without completing it (deadline
+        expiry, retry exhaustion, client disconnect, load shedding):
+        release every page it holds — resident, swapped, or stash — drop
+        it from the waiting queue, and mark it DONE with ``shed_reason``
+        so metrics can tell a shed stream from a finished one.  Unlike
+        ``finish`` this handles any pre-DONE state and scrubs the waiting
+        deque (a DONE rid left at the head would corrupt ``admit``)."""
+        r = self.requests[req_id]
+        assert r.state != RequestState.DONE, req_id
+        self._on_preempt(req_id)
+        try:
+            self.waiting.remove(req_id)
+        except ValueError:
+            pass
+        self._spec_ema.pop(req_id, None)
+        if self.kv is not None and self.kv.owns(req_id):
+            self.kv.free(req_id)
+        r.state = RequestState.DONE
+        r.shed_reason = reason
+
+    def fail_swap_out(self, req_id: int) -> None:
+        """A swap-out DMA failed mid-flight: the host copy is void, so the
+        victim cannot be restored by swap-in.  Demote it to a recompute
+        eviction — free its pages (dropping the dead host copy), un-record
+        the swap, and fold for a fresh prefill epoch.  The request is
+        already queued at the head from ``swap_out``; only the state and
+        the pages change, exactly like ``_demote_swapped``."""
+        r = self.requests[req_id]
+        assert r.state == RequestState.SWAPPED, r.state
+        self.kv.free(req_id)
+        r.n_swaps -= 1
+        if r.swap_out_times:
+            r.swap_out_times.pop()
+        self.n_swap_outs -= 1
+        fold_for_recompute(r)
         self.n_preemptions += 1
 
     def _evict_route(self, r: Request) -> Optional[str]:
@@ -563,14 +609,7 @@ class Scheduler:
                                     r.arrival_time, r.req_id))
         rid = victim.req_id
         self.kv.free(rid)
-        if victim.orig_prompt_len is None:
-            victim.orig_prompt_len = victim.prompt_len
-        victim.prompt_len += victim.n_generated - victim.n_folded
-        victim.n_folded = victim.n_generated
-        victim.tokens_done = 0
-        victim.blocks_done = 0
-        victim.n_preemptions += 1
-        victim.state = RequestState.PREEMPTED
+        fold_for_recompute(victim)
         self.n_preemptions += 1
         return rid
 

@@ -67,6 +67,12 @@ class SubmitSpec:
     enc_frames: Optional[object] = None
     prefix_cache: bool = True
     speculative: bool = True
+    # per-request completion deadline: the serving runtime sheds the
+    # request (freeing ALL its KV) once arrival_time + deadline elapses.
+    # Interpreted against the runtime's clock — wall-clock executors read
+    # it as milliseconds, the deterministic iteration clock as iterations.
+    # None disables shedding for this request.
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         if self.prompt_tokens is None and self.prompt_len is None:
@@ -90,6 +96,9 @@ class SubmitSpec:
                              f"got {self.max_new_tokens}")
         if self.tenant is None:
             object.__setattr__(self, "tenant", self.slo_class)
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be positive or None, "
+                             f"got {self.deadline_ms}")
 
 
 @dataclass
@@ -110,6 +119,9 @@ class Request:
     tenant: str = "interactive"
     use_prefix_cache: bool = True
     use_speculation: bool = True
+    # completion deadline relative to arrival (SubmitSpec.deadline_ms);
+    # enforced by the serving runtime's shed scan, None = no deadline
+    deadline_ms: Optional[float] = None
     state: RequestState = RequestState.WAITING
     # prefill progress. After a preemption, prompt_len is the RECOMPUTE
     # length (original prompt + tokens generated before eviction) and these
@@ -147,6 +159,12 @@ class Request:
     handoff_moved_tokens: int = 0
     handoff_linked_tokens: int = 0
     handoff_time: Optional[float] = None
+    # fault-tolerance bookkeeping (serving/faults.py): recoveries consumed
+    # from the runtime's retry budget, and — for requests removed without
+    # completing — why ("deadline" | "retries" | "disconnect" | "degrade");
+    # shed_reason None on a DONE request means it finished normally
+    n_fault_retries: int = 0
+    shed_reason: Optional[str] = None
     # metrics (filled by engine/simulator)
     admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
@@ -187,7 +205,8 @@ class Request:
                    if prompt_tokens is None else prompt_tokens,
                    tenant=spec.tenant,
                    use_prefix_cache=spec.prefix_cache,
-                   use_speculation=spec.speculative)
+                   use_speculation=spec.speculative,
+                   deadline_ms=spec.deadline_ms)
 
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:

@@ -98,6 +98,11 @@ class ServeConfig:
     ratelimit_rate: Optional[float] = None
     ratelimit_burst: float = 8.0
     keepalive_timeout: float = 5.0
+    # fault tolerance / chaos (serving/faults.py)
+    fault_plan: Optional[str] = None    # "@file.json" | "seed:N" | inline JSON
+    deadline_ms: Optional[float] = None
+    drain_timeout: float = 10.0
+    retry_budget: int = 3
 
     # ------------------------------------------------------------ validation
 
@@ -121,14 +126,14 @@ class ServeConfig:
         positive = ["rate", "requests", "slots", "quantum", "token_budget",
                     "max_len", "page_size", "spec_k", "ttft_slo", "tbt_slo",
                     "queue_watermark", "ratelimit_burst",
-                    "keepalive_timeout"]
+                    "keepalive_timeout", "drain_timeout"]
         for name in positive:
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be positive "
                                  f"(got {getattr(self, name)})")
         for name in ("pages", "host_pages", "swap_in_budget",
                      "prefix_lru_pages", "host_bw", "ratelimit_rate",
-                     "decode_pages"):
+                     "decode_pages", "deadline_ms"):
             v = getattr(self, name)
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be positive or None "
@@ -146,6 +151,9 @@ class ServeConfig:
         if self.decode_watermark < 0:
             raise ValueError(f"decode_watermark must be >= 0 "
                              f"(got {self.decode_watermark})")
+        if self.retry_budget < 0:
+            raise ValueError(f"retry_budget must be >= 0 "
+                             f"(got {self.retry_budget})")
         if self.disagg and self.http is not None:
             raise ValueError("--disagg runs the two-pool trace drivers; "
                              "it cannot be combined with --http")
@@ -326,6 +334,24 @@ class ServeConfig:
                         default=d.keepalive_timeout,
                         help="seconds an idle keep-alive connection is "
                              "held open before the server closes it")
+        ap.add_argument("--fault-plan", default=d.fault_plan,
+                        help="chaos mode: a FaultPlan spec — '@plan.json' "
+                             "loads a file, 'seed:N' draws a deterministic "
+                             "random schedule, anything else parses as "
+                             "inline JSON (default: no fault injection)")
+        ap.add_argument("--deadline-ms", type=float, default=d.deadline_ms,
+                        help="default per-request completion deadline; "
+                             "expired requests are shed and their KV "
+                             "freed (wall clocks: ms; virtual clocks: "
+                             "clock units; default: no deadline)")
+        ap.add_argument("--drain-timeout", type=float,
+                        default=d.drain_timeout,
+                        help="graceful-drain bound: seconds the HTTP "
+                             "server waits for in-flight streams before "
+                             "cancelling them on shutdown")
+        ap.add_argument("--retry-budget", type=int, default=d.retry_budget,
+                        help="fault recoveries (crash/link-drop "
+                             "recomputes) per request before it is shed")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "ServeConfig":
@@ -409,6 +435,9 @@ class ServeConfig:
                     queue_watermark=self.queue_watermark,
                     pool_watermark=self.pool_watermark,
                     keepalive_timeout=self.keepalive_timeout,
+                    deadline_ms=self.deadline_ms,
+                    drain_timeout=self.drain_timeout,
+                    retry_budget=self.retry_budget,
                     slo=self.slo())
 
     def slo(self) -> SLOConfig:

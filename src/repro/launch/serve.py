@@ -50,6 +50,7 @@ from repro.launch.config import ServeConfig
 from repro.models.model import DecoderModel
 from repro.serving.cost_model import H100X2, TPU_V5E
 from repro.serving.engine import Engine, EngineHandoff
+from repro.serving.faults import FaultInjector, FaultPlan
 from repro.serving.metrics import per_class_metrics, request_metrics
 from repro.serving.runtime import (DisaggRuntime, EngineExecutor,
                                    ServingRuntime)
@@ -81,6 +82,31 @@ def _print_per_class(tag, requests, slo=None) -> None:
               f"swap rate {_f(m['swap_rate'])}/req{att}")
 
 
+def build_faults(sc: ServeConfig) -> FaultInjector | None:
+    """Chaos mode: a deterministic ``FaultInjector`` from ``--fault-plan``
+    ('@file.json' | 'seed:N' | inline JSON), or None when off."""
+    if sc.fault_plan is None:
+        return None
+    return FaultInjector(FaultPlan.load(sc.fault_plan))
+
+
+def _print_faults(tag: str, fi: FaultInjector | None, requests) -> None:
+    """Chaos-run report line: what was injected and what got shed (a
+    DONE request with ``shed_reason`` set never completed)."""
+    if fi is None:
+        return
+    shed: dict = {}
+    for r in requests:
+        if r.shed_reason is not None:
+            shed[r.shed_reason] = shed.get(r.shed_reason, 0) + 1
+    inj = ", ".join(f"{k[2:]}={v}" for k, v in sorted(fi.counters.items())
+                    if v)
+    sheds = ", ".join(f"{k}={v}" for k, v in sorted(shed.items()))
+    print(f"[{tag}] chaos: {sum(fi.counters.values())} faults injected"
+          + (f" ({inj})" if inj else "")
+          + (f"; shed {sheds}" if sheds else "; no requests shed"))
+
+
 def build_engine(sc: ServeConfig) -> Engine:
     """The one engine constructor every real-execution mode shares
     (closed loop, open-loop replay, HTTP service, load_gen verification)."""
@@ -97,7 +123,8 @@ def serve_http(sc: ServeConfig) -> None:
     background thread in wall-clock mode while asyncio ingests requests
     concurrently (serving/server.py)."""
     eng = build_engine(sc)
-    server = ServingServer(eng, **sc.server_kwargs())
+    server = ServingServer(eng, faults=build_faults(sc),
+                           **sc.server_kwargs())
     server.serve_forever()
 
 
@@ -127,10 +154,12 @@ def serve_disagg_real(sc: ServeConfig) -> None:
     def _stream(rid, tok, t):
         print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
     bridge = EngineHandoff(ep, ed, streaming=sc.handoff == "stream")
+    faults = build_faults(sc)
     runtime = DisaggRuntime(
         EngineExecutor(ep), EngineExecutor(ed), bridge,
         on_token=_stream if sc.stream else None, clock="iteration",
-        decode_watermark_pages=sc.decode_watermark)
+        decode_watermark_pages=sc.decode_watermark,
+        faults=faults, retry_budget=sc.retry_budget)
     if sc.open_loop:
         trace = sc.engine_trace(cfg.vocab_size)
     else:
@@ -168,6 +197,7 @@ def serve_disagg_real(sc: ServeConfig) -> None:
           f"{ep.alloc.pages_high_water}/{ep.alloc.n_pages}, decode "
           f"{ed.alloc.pages_high_water}/{ed.alloc.n_pages}; "
           f"preemptions {ep.n_preempted}+{ed.n_preempted}")
+    _print_faults("serve-disagg", faults, reqs)
     _print_per_class("serve-disagg", reqs)
 
 
@@ -178,6 +208,7 @@ def serve_real(sc: ServeConfig) -> None:
     def _stream(rid, tok, t):
         print(f"[stream] t={t:8.2f} req={rid:<4} tok={tok}")
     on_token = _stream if sc.stream else None
+    faults = build_faults(sc)
     if sc.open_loop:
         # open-loop timed replay through the shared runtime: requests are
         # injected at their arrival times, the engine idles through gaps
@@ -185,7 +216,8 @@ def serve_real(sc: ServeConfig) -> None:
         wall = sc.clock == "wall"
         runtime = ServingRuntime(
             EngineExecutor(eng, wall=wall), on_token=on_token,
-            clock="executor" if wall else "iteration")
+            clock="executor" if wall else "iteration",
+            faults=faults, retry_budget=sc.retry_budget)
         runtime.run(trace, max_iterations=100_000)
         unit = "s" if wall else "iters"
     else:
@@ -202,7 +234,9 @@ def serve_real(sc: ServeConfig) -> None:
                        max_new_tokens=int(rng.integers(4, 16)),
                        enc_frames=enc, slo_class=cls)
         runtime = ServingRuntime(EngineExecutor(eng), on_token=on_token,
-                                 clock="iteration")
+                                 clock="iteration",
+                                 faults=faults,
+                                 retry_budget=sc.retry_budget)
         runtime.run((), max_iterations=100_000)
         unit = "iters"
     m = request_metrics(eng.requests.values())
@@ -249,6 +283,7 @@ def serve_real(sc: ServeConfig) -> None:
               f"{eng.alloc.host_pages_high_water}/{eng.alloc.n_host_pages};"
               f" restore latency mean "
               f"{_f(m['restore_latency_mean'], '.1f')} {unit}")
+    _print_faults("serve", faults, eng.requests.values())
     _print_per_class("serve", eng.requests.values())
 
 
@@ -276,7 +311,8 @@ def serve_sim(sc: ServeConfig) -> None:
         _serve_sim_disagg(sc, cfg, hw, trace)
         return
     sim = Simulator(cfg, sc.scheduler, hw, **sc.sim_kwargs())
-    res = sim.run(trace)
+    faults = build_faults(sc)
+    res = sim.run(trace, faults=faults, retry_budget=sc.retry_budget)
     slo = sc.slo()
     m = request_metrics(res.requests, slo)
     print(f"[serve-sim] {cfg.name} x {sc.scheduler} on {sc.dataset} "
@@ -314,6 +350,7 @@ def serve_sim(sc: ServeConfig) -> None:
               f"high-water {res.host_pages_high_water}/{res.n_host_pages};"
               f" restore latency mean "
               f"{_f(m['restore_latency_mean'], '.3f')} s")
+    _print_faults("serve-sim", faults, res.requests)
     _print_per_class("serve-sim", res.requests, slo)
 
 
@@ -324,7 +361,8 @@ def _serve_sim_disagg(sc: ServeConfig, cfg, hw, trace) -> None:
                           decode_pages=sc.decode_pages,
                           decode_watermark=sc.decode_watermark,
                           **sc.sim_kwargs())
-    res = sim.run(trace)
+    faults = build_faults(sc)
+    res = sim.run(trace, faults=faults, retry_budget=sc.retry_budget)
     slo = sc.slo()
     m = request_metrics(res.requests, slo)
     print(f"[serve-sim] {cfg.name} x {sc.scheduler}+decode on "
@@ -357,6 +395,7 @@ def _serve_sim_disagg(sc: ServeConfig, cfg, hw, trace) -> None:
           f"/{res.decode.n_pool_pages}; "
           f"{res.prefill.n_preemptions + res.decode.n_preemptions} "
           f"preemptions")
+    _print_faults("serve-sim", faults, res.requests)
     _print_per_class("serve-sim", res.requests, slo)
 
 

@@ -755,6 +755,22 @@ class Engine:
         self.n_handoffs_in += 1
         return imp
 
+    def release_request(self, rid: int) -> None:
+        """Drop every physical resource a SHED request still holds — slot
+        row, host swap snapshot, boundary stash, staged handoff chunks —
+        without touching its token buffers (the shed stream's partial
+        output stays readable in ``outputs``).  The scheduler side (page
+        release, queue scrub, DONE state) is ``Scheduler.shed``'s job;
+        this is its executor-side mirror, callable in any pre-DONE state
+        (WAITING victims hold nothing and every pop is a no-op)."""
+        slot = self._slot_of.pop(rid, None)
+        if slot is not None:
+            self._free_slots.append(slot)
+            self.decoding[slot] = False
+        self.host_kv.pop(rid, None)
+        self.stash.pop(rid, None)
+        self._handoff_chunks.pop(rid, None)
+
     # -------------------------------------------------------------- helpers
 
     def _preempt(self, rid: int) -> None:
@@ -1200,6 +1216,31 @@ class EngineHandoff:
 
     def drop(self, req_id: int) -> None:
         self.src._handoff_chunks.pop(req_id, None)
+
+    def abort_export(self, m) -> None:
+        """A link failure lost migration ``m``'s payload in flight.
+        Reinstall its backend state on the prefill engine — the token
+        buffers come back and the generated tail folds into the prompt
+        array (the runtime already folded the Request itself to
+        PREEMPTED) — so the whole-prompt retry re-prefills bit-
+        identically.  The exported KV pages died with the link:
+        ``export_pages`` already freed them from this pool, so the drop
+        leaks nothing on either allocator."""
+        req = m.req
+        rid = req.req_id
+        p = m.payload
+        prompt = np.asarray(p["prompt"], np.int32)
+        tail = req.prompt_len - len(prompt)
+        if tail:
+            prompt = np.concatenate(
+                [prompt, np.asarray(p["outputs"][-tail:], np.int32)])
+        assert len(prompt) == req.prompt_len, \
+            (rid, len(prompt), req.prompt_len)
+        self.src.requests[rid] = req
+        self.src.prompts[rid] = prompt
+        self.src.outputs[rid] = p["outputs"]
+        if p["enc_frames"] is not None:
+            self.src.enc_frames[rid] = p["enc_frames"]
 
     def return_to_prefill(self, req) -> None:
         rid = req.req_id

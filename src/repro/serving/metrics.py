@@ -163,6 +163,48 @@ def handoff_counters(*, handoff_bytes: float = 0.0, queue_depth: int = 0,
     }
 
 
+def fault_counters(*, n_injected_faults: float = 0.0,
+                   n_executor_crashes: float = 0.0,
+                   n_link_drops: float = 0.0,
+                   n_link_delays: float = 0.0,
+                   n_swap_dma_fails: float = 0.0,
+                   n_pressure_spikes: float = 0.0,
+                   n_injected_disconnects: float = 0.0,
+                   n_deadline_sheds: float = 0.0,
+                   n_retry_sheds: float = 0.0,
+                   n_disconnect_sheds: float = 0.0,
+                   n_degrade_sheds: float = 0.0,
+                   n_fault_retries: float = 0.0,
+                   degradation_level: float = 0.0,
+                   n_degradation_escalations: float = 0.0,
+                   n_degradation_deescalations: float = 0.0,
+                   ) -> Dict[str, float]:
+    """THE canonical names for the fault-tolerance counters — shaped so
+    ``fault_counters(**runtime.fault_stats())`` is the whole call.  Same
+    contract as ``handoff_counters``: the live ``/metrics`` scrape and
+    offline chaos reports share one spelling.  All ``*_total`` names are
+    run totals; ``degradation_level`` is the instantaneous ladder rung
+    index (0 = normal .. 4 = interactive_503)."""
+    return {
+        "faults_injected_total": float(n_injected_faults),
+        "fault_executor_crashes_total": float(n_executor_crashes),
+        "fault_link_drops_total": float(n_link_drops),
+        "fault_link_delays_total": float(n_link_delays),
+        "fault_swap_dma_fails_total": float(n_swap_dma_fails),
+        "fault_pressure_spikes_total": float(n_pressure_spikes),
+        "fault_injected_disconnects_total": float(n_injected_disconnects),
+        "sheds_deadline_total": float(n_deadline_sheds),
+        "sheds_retries_total": float(n_retry_sheds),
+        "sheds_disconnect_total": float(n_disconnect_sheds),
+        "sheds_degrade_total": float(n_degrade_sheds),
+        "fault_retries_total": float(n_fault_retries),
+        "degradation_level": float(degradation_level),
+        "degradation_escalations_total": float(n_degradation_escalations),
+        "degradation_deescalations_total": float(
+            n_degradation_deescalations),
+    }
+
+
 # ---------------------------------------------------------------- exporters
 
 def _finite(v) -> bool:

@@ -42,7 +42,10 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Protocol,
 
 import numpy as np
 
+from repro.core.base import fold_for_recompute
 from repro.core.plan import IterationPlan, Request, RequestState, SubmitSpec
+from repro.serving.faults import (FAULT_KINDS, DegradationLadder,
+                                  ExecutorCrash, FaultInjector)
 
 if TYPE_CHECKING:  # typing only — runtime must not import its backends
     from repro.core.base import Scheduler
@@ -95,6 +98,44 @@ def timestamp_events(sched, events: List[TokenEvent], t_end: float,
             on_token(ev.req_id, ev.token, t_end)
 
 
+def diagnose_stall(reason: str, pools, *, pending: int = 0, held: int = 0,
+                   migrations: int = 0, max_rows: int = 12) -> str:
+    """Build the no-progress / failed-drain diagnostic: per-pool queue
+    depths, allocator free/in-use/high-water, a per-state census, and a
+    bounded per-request table — raised instead of a bare "no progress"
+    message so a hang is debuggable from the exception text alone.
+    ``pools`` is a sequence of (tag, scheduler) pairs."""
+    lines = [reason,
+             f"pending_arrivals={pending} held={held} "
+             f"migrations_in_flight={migrations}"]
+    for tag, s in pools:
+        states: Dict[str, int] = {}
+        for r in s.requests.values():
+            states[r.state.name] = states.get(r.state.name, 0) + 1
+        kv = s.kv
+        kv_line = "kv=unbounded"
+        if kv is not None:
+            kv_line = (f"kv free={kv.n_free_pages}/{kv.n_pages} "
+                       f"in_use={kv.pages_in_use()} "
+                       f"hwm={kv.pages_high_water} "
+                       f"host={kv.host_pages_in_use()}/{kv.n_host_pages}")
+        lines.append(f"[{tag}] sched={s.name!r} waiting={len(s.waiting)} "
+                     f"active={s.n_active} states={states or '{}'} "
+                     f"{kv_line}")
+        live = [r for r in sorted(s.requests.values(),
+                                  key=lambda r: r.req_id)
+                if r.state != RequestState.DONE]
+        for r in live[:max_rows]:
+            lines.append(f"  r{r.req_id} {r.state.name} "
+                         f"class={r.slo_class} prompt={r.prompt_len} "
+                         f"tokens_done={r.tokens_done} "
+                         f"gen={r.n_generated} "
+                         f"preempts={r.n_preemptions} swaps={r.n_swaps}")
+        if len(live) > max_rows:
+            lines.append(f"  ... and {len(live) - max_rows} more")
+    return "\n".join(lines)
+
+
 class Executor(Protocol):
     """Backend protocol: the runtime never touches jax or the cost model
     directly — it schedules, clocks and timestamps; the executor runs."""
@@ -129,6 +170,20 @@ class Executor(Protocol):
         cannot stamp tokens EARLIER than requests submitted after the
         first (TTFT stays positive across incremental submit/run
         cycles); fresh backends start at 0."""
+        ...
+
+    def evict(self, req_id: int) -> None:
+        """Release the backend's physical state for a resident the
+        SCHEDULER just preempted outside a plan (fault recovery): the
+        executor-side half of ``Scheduler.preempt``, normally run by
+        ``execute`` for ``plan.preempted_ids``.  No-op for analytic
+        backends."""
+        ...
+
+    def release(self, req_id: int) -> None:
+        """Release the backend's physical state for a SHED request (any
+        pre-DONE state) — the executor-side mirror of
+        ``Scheduler.shed``.  No-op for analytic backends."""
         ...
 
 
@@ -245,11 +300,222 @@ class RunResult:
     n_dispatches: int = 0          # total device launches (engine backends)
 
 
-class ServingRuntime:
+class _Supervised:
+    """Fault supervision shared by ``ServingRuntime`` and
+    ``DisaggRuntime`` (DESIGN.md §Fault tolerance): per-request deadline
+    shedding, bounded retry through the existing PREEMPTED/recompute
+    machinery (a failed step is just an eviction with a retry budget),
+    thread-safe client cancellation, and the graceful-degradation
+    ladder.  Every recovery path reuses machinery the equivalence tests
+    already pin down, which is why surviving requests' token streams
+    stay bit-identical to a fault-free run."""
+
+    # shed reason -> counter attribute (unknown reasons count as
+    # disconnects — the catch-all for operator-initiated cancels)
+    _SHED_COUNTERS = {"deadline": "n_deadline_sheds",
+                      "retries": "n_retry_sheds",
+                      "disconnect": "n_disconnect_sheds",
+                      "degrade": "n_degrade_sheds"}
+
+    def _init_supervision(self, schedulers, *,
+                          faults: Optional[FaultInjector],
+                          retry_budget: int,
+                          ladder: Optional[DegradationLadder],
+                          on_shed) -> None:
+        self.faults = faults
+        self.retry_budget = retry_budget
+        self.ladder = ladder if ladder is not None \
+            else DegradationLadder(schedulers)
+        self.on_shed = on_shed
+        self._cancel_lock = threading.Lock()
+        self._cancels: deque = deque()
+        self.n_deadline_sheds = 0
+        self.n_retry_sheds = 0
+        self.n_disconnect_sheds = 0
+        self.n_degrade_sheds = 0
+        self.n_fault_retries = 0
+
+    # -- client cancellation (any thread) -----------------------------------
+
+    def cancel(self, req_id: int, reason: str = "disconnect") -> None:
+        """Request cancellation from ANY thread (the HTTP front-end's
+        disconnect handler): queued here, applied at the next iteration
+        boundary IN the serving-loop thread — the only place scheduler
+        and executor state may be touched.  Unknown or already-finished
+        ids are ignored."""
+        with self._cancel_lock:
+            self._cancels.append((req_id, reason))
+
+    def _drain_cancel_queue(self) -> List:
+        if not self._cancels:
+            return []
+        with self._cancel_lock:
+            items = list(self._cancels)
+            self._cancels.clear()
+        return items
+
+    # -- shedding -----------------------------------------------------------
+
+    def _count_shed(self, reason: str) -> None:
+        attr = self._SHED_COUNTERS.get(reason, "n_disconnect_sheds")
+        setattr(self, attr, getattr(self, attr) + 1)
+
+    def _shed_request(self, sched, x, rid: int, reason: str,
+                      iteration: int) -> None:
+        """Shed one request end to end: scheduler side (pages freed, queue
+        scrubbed, DONE + shed_reason) plus the executor's physical state
+        (slot/stash/host snapshot), then notify ``on_shed`` so front-end
+        streams can terminate."""
+        r = sched.requests[rid]
+        sched.shed(rid, reason)
+        release = getattr(x, "release", None)
+        if release is not None:
+            release(rid)
+        self._count_shed(reason)
+        if reason in ("deadline", "retries"):
+            self.ladder.record_pressure(iteration)
+        if self.on_shed is not None:
+            self.on_shed(r, reason)
+
+    def _shed_batch_class(self, pools, iteration: int) -> None:
+        if not self.ladder.shed_batch:
+            return
+        for sched, x in pools:
+            for rid in [rid for rid, r in sorted(sched.requests.items())
+                        if r.state != RequestState.DONE
+                        and self.ladder.shed_class(r.slo_class)]:
+                self._shed_request(sched, x, rid, "degrade", iteration)
+
+    # -- deadlines ----------------------------------------------------------
+
+    def _deadline_scale(self, x) -> float:
+        # wall executors clock in seconds, so deadline_ms really is
+        # milliseconds; virtual clocks read it in their own units
+        # (iterations on the deterministic clock, modeled seconds on the
+        # simulator) — deterministic replay stays deterministic
+        return 1e-3 if getattr(x, "wall", False) else 1.0
+
+    @staticmethod
+    def _expired(r: Request, now: float, scale: float) -> bool:
+        return (r.deadline_ms is not None
+                and r.state != RequestState.DONE
+                and now >= r.arrival_time + r.deadline_ms * scale)
+
+    def _check_deadlines(self, sched, x, now: float,
+                         iteration: int) -> bool:
+        scale = self._deadline_scale(x)
+        expired = [rid for rid, r in sorted(sched.requests.items())
+                   if self._expired(r, now, scale)]
+        for rid in expired:
+            self._shed_request(sched, x, rid, "deadline", iteration)
+        return bool(expired)
+
+    # -- injected faults ----------------------------------------------------
+
+    def _recover_crash(self, sched, x, res, iteration: int) -> None:
+        """Executor-step failure: every PREFILL/DECODE resident is evicted
+        (latest-arrival-first, so head-requeueing leaves the earliest in
+        front) and recovered through the recompute path; a victim over
+        its retry budget is shed instead.  SWAPPED residents keep their
+        intact host copy — a crash does not touch host memory."""
+        victims = sorted((r for r in sched.requests.values()
+                          if r.state in (RequestState.PREFILL,
+                                         RequestState.DECODE)),
+                         key=lambda r: (r.arrival_time, r.req_id),
+                         reverse=True)
+        evict = getattr(x, "evict", None)
+        for r in victims:
+            rid = r.req_id
+            if r.n_fault_retries >= self.retry_budget:
+                self._shed_request(sched, x, rid, "retries", iteration)
+                continue
+            r.n_fault_retries += 1
+            self.n_fault_retries += 1
+            sched.preempt(rid)
+            if evict is not None:
+                evict(rid)
+            res.n_preemptions += 1
+            res.recompute_tokens += r.prompt_len
+        self.ladder.record_pressure(iteration)
+
+    def _fail_swap_dma(self, sched, plan: IterationPlan,
+                       iteration: int) -> None:
+        """swap_dma_fail: this iteration's swap-out DMA batch failed —
+        demote the victims to recompute evictions BEFORE the executor
+        runs, so the engine releases their slots via the preempt path
+        instead of snapshotting dead data to host.  Armed until an
+        iteration with swap activity."""
+        if self.faults is None or not plan.swapped_out_ids:
+            return
+        if not self.faults.due("swap_dma_fail", iteration):
+            return
+        for rid in list(plan.swapped_out_ids):
+            sched.fail_swap_out(rid)
+            plan.preempted_ids.append(rid)
+        plan.swapped_out_ids.clear()
+        self.ladder.record_pressure(iteration)
+
+    def _inject_disconnects(self, pools, iteration: int) -> bool:
+        """client_disconnect: shed the ``target``-th live request (rid
+        order) as if its SSE peer vanished mid-stream."""
+        if self.faults is None:
+            return False
+        live = [(sched, x, rid)
+                for sched, x in pools
+                for rid, r in sorted(sched.requests.items())
+                if r.state != RequestState.DONE]
+        if not live:
+            return False
+        acted = False
+        for ev in self.faults.due("client_disconnect", iteration):
+            if not live:
+                break
+            sched, x, rid = live.pop(ev.target % len(live))
+            self._shed_request(sched, x, rid, "disconnect", iteration)
+            acted = True
+        return acted
+
+    # -- metrics ------------------------------------------------------------
+
+    def fault_stats(self) -> Dict[str, float]:
+        """Counter snapshot shaped as ``metrics.fault_counters`` kwargs —
+        the one schema the /metrics endpoint, offline reports, and the CI
+        chaos gate all read."""
+        c = dict(self.faults.counters) if self.faults is not None \
+            else {f"n_{k}": 0 for k in FAULT_KINDS}
+        return {
+            "n_injected_faults": float(sum(c.values())),
+            "n_executor_crashes": c["n_executor_crash"],
+            "n_link_drops": c["n_link_drop"],
+            "n_link_delays": c["n_link_delay"],
+            "n_swap_dma_fails": c["n_swap_dma_fail"],
+            "n_pressure_spikes": c["n_pressure_spike"],
+            "n_injected_disconnects": c["n_client_disconnect"],
+            "n_deadline_sheds": self.n_deadline_sheds,
+            "n_retry_sheds": self.n_retry_sheds,
+            "n_disconnect_sheds": self.n_disconnect_sheds,
+            "n_degrade_sheds": self.n_degrade_sheds,
+            "n_fault_retries": self.n_fault_retries,
+            "degradation_level": self.ladder.level_index,
+            "n_degradation_escalations": self.ladder.n_escalations,
+            "n_degradation_deescalations": self.ladder.n_deescalations,
+        }
+
+
+class ServingRuntime(_Supervised):
     def __init__(self, executor: Executor, *,
                  on_token: Optional[TokenCallback] = None,
                  clock: str = "executor",
-                 record_plans: bool = False):
+                 record_plans: bool = False,
+                 faults: Optional[FaultInjector] = None,
+                 retry_budget: int = 3,
+                 ladder: Optional[DegradationLadder] = None,
+                 on_shed: Optional[Callable[[Request, str], None]] = None):
+        """``faults`` attaches a deterministic fault injector (see
+        serving/faults.py); ``retry_budget`` bounds per-request crash
+        recoveries before the victim is shed; ``on_shed(req, reason)``
+        fires in the serving-loop thread whenever a request is removed
+        without completing (deadline, retries, disconnect, degrade)."""
         if clock not in ("executor", "iteration"):
             raise ValueError(f"unknown clock {clock!r}")
         self.executor = executor
@@ -257,6 +523,34 @@ class ServingRuntime:
         self.clock = clock
         self.record_plans = record_plans
         self.plans: List[IterationPlan] = []
+        self._init_supervision([executor.scheduler], faults=faults,
+                               retry_budget=retry_budget, ladder=ladder,
+                               on_shed=on_shed)
+
+    def _supervise(self, sched, x, res, t: float, it: int) -> bool:
+        """One pre-plan supervision pass: queued cancels, deadline sheds,
+        injected faults (allocator pressure, executor crash, client
+        disconnects), then the degradation ladder.  Runs BEFORE
+        ``next_plan`` so every recovery is a plain eviction — no plan
+        bookkeeping has advanced against state that never executed.
+        Returns True when the pass consumed all resident work."""
+        for rid, reason in self._drain_cancel_queue():
+            r = sched.requests.get(rid)
+            if r is not None and r.state != RequestState.DONE:
+                self._shed_request(sched, x, rid, reason, it)
+        self._check_deadlines(sched, x, t, it)
+        f = self.faults
+        if f is not None:
+            f.release_pressure(it)
+            f.apply_pressure([sched.kv], it)
+            try:
+                f.maybe_crash(it, active=sched.n_active > 0)
+            except ExecutorCrash:
+                self._recover_crash(sched, x, res, it)
+            self._inject_disconnects([(sched, x)], it)
+        self.ladder.step(it)
+        self._shed_batch_class([(sched, x)], it)
+        return not sched.has_work()
 
     def run(self, trace: Sequence[Union["TraceRequest", SubmitSpec]] = (),
             max_iterations: int = 10_000, *,
@@ -323,10 +617,14 @@ class ServingRuntime:
                 t = nxt if self.clock == "iteration" else x.idle(t, nxt)
                 inject(t)
             if res.n_iterations >= max_iterations:
-                raise RuntimeError(
+                raise RuntimeError(diagnose_stall(
                     f"did not drain within {max_iterations} iterations; "
-                    "scheduler stuck?")
+                    "scheduler stuck?", [("pool", sched)],
+                    pending=len(pending) - i_arr))
+            if self._supervise(sched, x, res, t, res.n_iterations):
+                continue       # supervision consumed all resident work
             plan = sched.next_plan(now=t)
+            self._fail_swap_dma(sched, plan, res.n_iterations)
             if self.record_plans:
                 self.plans.append(plan)
             res.n_preemptions += len(plan.preempted_ids)
@@ -343,10 +641,10 @@ class ServingRuntime:
                     continue
                 # no runnable work, no future arrivals: advancing neither
                 # t nor the iteration count would spin forever
-                raise RuntimeError(
-                    f"scheduler {sched.name!r} made no progress: "
-                    f"{len(sched.waiting)} waiting, {sched.n_active} "
-                    "active, no pending arrivals")
+                raise RuntimeError(diagnose_stall(
+                    f"scheduler {sched.name!r} made no progress at t={t}: "
+                    "no pending arrivals and the next plan is empty",
+                    [("pool", sched)]))
             outcome = x.execute(plan, t)
             res.n_iterations += 1
             res.n_dispatches += outcome.n_dispatches
@@ -356,7 +654,9 @@ class ServingRuntime:
             timestamp_events(sched, outcome.events, t_end, self.on_token)
             t = t_end
 
-        res.clock = t
+        if self.faults is not None:
+            self.faults.release_pressure(None)   # zero-leak: no phantom
+        res.clock = t                            # reservation survives a run
         return res
 
 
@@ -411,6 +711,14 @@ class HandoffBridge(Protocol):
         """A prefill-pool preemption voided any staged chunks."""
         ...
 
+    def abort_export(self, m: Migration) -> None:
+        """A link failure lost migration ``m`` in flight: reinstall the
+        victim's backend state on the prefill side so a whole-prompt
+        recompute retry can run (the KV payload itself died with the
+        link — export's move semantics already freed it, nothing
+        leaks)."""
+        ...
+
     def return_to_prefill(self, req: Request) -> None:
         """Move a decode-pool recompute victim's backend state (prompt /
         output buffers) back to the prefill backend before readmission."""
@@ -436,7 +744,7 @@ class DisaggRunResult(RunResult):
     decode_prefill_slices: int = 0
 
 
-class DisaggRuntime:
+class DisaggRuntime(_Supervised):
     """Two-pool disaggregated serving loop (DESIGN.md §Disaggregated
     serving): a prefill executor and a decode executor advance under ONE
     runtime clock.  Requests are admitted and prefilled on the prefill
@@ -464,7 +772,11 @@ class DisaggRuntime:
                  on_token: Optional[TokenCallback] = None,
                  clock: str = "executor",
                  decode_watermark_pages: int = 0,
-                 record_plans: bool = False):
+                 record_plans: bool = False,
+                 faults: Optional[FaultInjector] = None,
+                 retry_budget: int = 3,
+                 ladder: Optional[DegradationLadder] = None,
+                 on_shed: Optional[Callable[[Request, str], None]] = None):
         if clock not in ("executor", "iteration"):
             raise ValueError(f"unknown clock {clock!r}")
         self.prefill = prefill
@@ -475,6 +787,167 @@ class DisaggRuntime:
         self.decode_watermark_pages = decode_watermark_pages
         self.record_plans = record_plans
         self.plans: List = []          # (pool_tag, IterationPlan)
+        self._init_supervision([prefill.scheduler, decode.scheduler],
+                               faults=faults, retry_budget=retry_budget,
+                               ladder=ladder, on_shed=on_shed)
+
+    # -- disagg-specific supervision ----------------------------------------
+
+    def _shed_request(self, sched, x, rid: int, reason: str,
+                      iteration: int) -> None:
+        _Supervised._shed_request(self, sched, x, rid, reason, iteration)
+        self.bridge.drop(rid)      # staged handoff chunks die with it
+
+    def _shed_migration(self, m: Migration, reason: str,
+                        iteration: int) -> None:
+        """Shed a request caught mid-migration: its KV pages were already
+        freed from the prefill pool by the export's move semantics and
+        never landed on the decode pool, so discarding the payload leaks
+        nothing — only the control record needs retiring."""
+        r = m.req
+        r.state = RequestState.DONE
+        r.shed_reason = reason
+        self._count_shed(reason)
+        if reason in ("deadline", "retries"):
+            self.ladder.record_pressure(iteration)
+        if self.on_shed is not None:
+            self.on_shed(r, reason)
+
+    def _drop_migration(self, m: Migration, res, iteration: int) -> None:
+        """link_drop recovery: the payload is lost in flight, but the
+        request is NEVER lost — it folds for recompute and re-enters the
+        prefill pool's queue at the head (whole-prompt retry).  Victims
+        over their retry budget are shed instead."""
+        req = m.req
+        if req.n_fault_retries >= self.retry_budget:
+            self._shed_migration(m, "retries", iteration)
+            return
+        req.n_fault_retries += 1
+        self.n_fault_retries += 1
+        fold_for_recompute(req)
+        abort = getattr(self.bridge, "abort_export", None)
+        if abort is not None:
+            abort(m)
+        sp = self.prefill.scheduler
+        sp.readmit(req)
+        sp.n_preemptions += 1
+        res.n_preemptions += 1
+        res.recompute_tokens += req.prompt_len
+        self.ladder.record_pressure(iteration)
+
+    def _recover_decode_crash(self, res, iteration: int) -> None:
+        """Decode-pool executor crash: recompute victims cannot re-prefill
+        locally (the decode pool never plans prefill), so each one folds
+        and routes BACK to the prefill pool — exactly the plan-level
+        recompute-victim return path.  SWAPPED residents keep their host
+        copy and restore locally."""
+        sp, sd = self.prefill.scheduler, self.decode.scheduler
+        xd, bridge = self.decode, self.bridge
+        victims = sorted((r for r in sd.requests.values()
+                          if r.state == RequestState.DECODE),
+                         key=lambda r: (r.arrival_time, r.req_id),
+                         reverse=True)
+        evict = getattr(xd, "evict", None)
+        for r in victims:
+            rid = r.req_id
+            if r.n_fault_retries >= self.retry_budget:
+                self._shed_request(sd, xd, rid, "retries", iteration)
+                continue
+            r.n_fault_retries += 1
+            self.n_fault_retries += 1
+            sd.preempt(rid)
+            if evict is not None:
+                evict(rid)
+            req = sd.pop_request(rid)
+            bridge.return_to_prefill(req)
+            sp.readmit(req)
+            res.n_returns += 1
+            res.n_preemptions += 1
+            res.recompute_tokens += req.prompt_len
+        self.ladder.record_pressure(iteration)
+
+    def _supervise(self, migr: deque, held: deque, res, t: float,
+                   it: int) -> bool:
+        """Pre-step supervision over BOTH pools, the link queue, and the
+        backpressure-held arrivals.  Returns True when it changed pool
+        state (the caller resets the stall latches)."""
+        sp, sd = self.prefill.scheduler, self.decode.scheduler
+        xp, xd = self.prefill, self.decode
+        acted = False
+        # queued client cancels: the victim may live on either pool or be
+        # mid-migration on the link
+        for rid, reason in self._drain_cancel_queue():
+            shed = False
+            for sched, x in ((sp, xp), (sd, xd)):
+                r = sched.requests.get(rid)
+                if r is not None and r.state != RequestState.DONE:
+                    self._shed_request(sched, x, rid, reason, it)
+                    shed = acted = True
+                    break
+            if not shed:
+                for m in list(migr):
+                    if m.req.req_id == rid:
+                        migr.remove(m)
+                        self._shed_migration(m, reason, it)
+                        acted = True
+                        break
+        # deadlines: both pools, in-flight migrations, held arrivals
+        for sched, x in ((sp, xp), (sd, xd)):
+            acted |= self._check_deadlines(sched, x, t, it)
+        scale = self._deadline_scale(xp)
+        for m in [m for m in migr if self._expired(m.req, t, scale)]:
+            migr.remove(m)
+            self._shed_migration(m, "deadline", it)
+            acted = True
+        for item in [h for h in held
+                     if getattr(h[0], "deadline_ms", None) is not None
+                     and getattr(h[0], "arrival_time", None) is not None
+                     and t >= h[0].arrival_time
+                     + h[0].deadline_ms * scale]:
+            held.remove(item)
+            _, ticket = item
+            self.n_deadline_sheds += 1
+            self.ladder.record_pressure(it)
+            if ticket is not None:
+                ticket._fail(TimeoutError(
+                    "deadline expired before admission"))
+            acted = True
+        f = self.faults
+        if f is not None:
+            f.release_pressure(it)
+            f.apply_pressure([sp.kv, sd.kv], it)
+            if migr:
+                # latency spike: queued payloads land late — the import
+                # gate re-reads ready_time, token values never change
+                for ev in f.due("link_delay", it):
+                    for m in migr:
+                        m.ready_time += ev.magnitude
+                for ev in f.due("link_drop", it):
+                    if not migr:
+                        break
+                    m = migr[ev.target % len(migr)]
+                    migr.remove(m)
+                    self._drop_migration(m, res, it)
+                    acted = True
+            try:
+                f.maybe_crash(it, pool=0, active=sp.n_active > 0)
+            except ExecutorCrash:
+                self._recover_crash(sp, xp, res, it)
+                for rid, r in sp.requests.items():
+                    if r.state == RequestState.PREEMPTED:
+                        self.bridge.drop(rid)   # staged KV is void
+                acted = True
+            try:
+                f.maybe_crash(it, pool=1, active=sd.n_active > 0)
+            except ExecutorCrash:
+                self._recover_decode_crash(res, it)
+                acted = True
+            acted |= self._inject_disconnects([(sp, xp), (sd, xd)], it)
+        self.ladder.step(it)
+        before = self.n_degrade_sheds
+        self._shed_batch_class([(sp, xp), (sd, xd)], it)
+        acted |= self.n_degrade_sheds != before
+        return acted
 
     def run(self, trace: Sequence[Union["TraceRequest", SubmitSpec]] = (),
             max_iterations: int = 10_000, *,
@@ -540,9 +1013,12 @@ class DisaggRuntime:
                 m = migr[0]
                 if not (sd.can_adopt(m.req) and bridge.can_import(m)):
                     if not sd.has_work():
-                        raise RuntimeError(
+                        raise RuntimeError(diagnose_stall(
                             f"decode pool can never import request "
-                            f"{m.req.req_id} — enlarge the decode pool")
+                            f"{m.req.req_id} — enlarge the decode pool",
+                            [("prefill", sp), ("decode", sd)],
+                            pending=len(pending) - i_arr,
+                            held=len(held), migrations=len(migr)))
                     break              # FIFO: wait for the decode pool
                 migr.popleft()
                 info = bridge.do_import(m, now)
@@ -561,12 +1037,14 @@ class DisaggRuntime:
             acted = inject(t)
             acted |= admit_held(t)
             acted |= attempt_imports(t)
+            acted |= self._supervise(migr, held, res, t, res.n_iterations)
             if acted:
                 stall_p = stall_d = False
 
             executed = False
             if sp.has_work() and rp <= t and not stall_p:
                 plan = sp.next_plan(now=t)
+                self._fail_swap_dma(sp, plan, res.n_iterations)
                 if plan.empty:
                     stall_p = True
                 else:
@@ -610,6 +1088,7 @@ class DisaggRuntime:
 
             if sd.has_work() and rd <= t and not stall_d:
                 plan = sd.next_plan(now=t)
+                self._fail_swap_dma(sd, plan, res.n_iterations)
                 if plan.empty:
                     stall_d = True
                 else:
@@ -642,9 +1121,11 @@ class DisaggRuntime:
                     stall_p = False
 
             if res.n_iterations > max_iterations:
-                raise RuntimeError(
+                raise RuntimeError(diagnose_stall(
                     f"did not drain within {max_iterations} iterations; "
-                    "scheduler stuck?")
+                    "scheduler stuck?", [("prefill", sp), ("decode", sd)],
+                    pending=len(pending) - i_arr, held=len(held),
+                    migrations=len(migr)))
             if executed or acted:
                 continue
             # nothing ran at t: advance to the next event
@@ -663,13 +1144,16 @@ class DisaggRuntime:
                 nxt.append(migr[0].ready_time)
             nxt = [x for x in nxt if x > t]
             if not nxt:
-                raise RuntimeError(
+                raise RuntimeError(diagnose_stall(
                     f"disaggregated loop made no progress at t={t}: "
-                    f"{len(sp.waiting)} prefill-waiting, "
-                    f"{sp.n_active}/{sd.n_active} active, "
-                    f"{len(migr)} migrations, {len(held)} held")
+                    "no pool can step and no future event exists",
+                    [("prefill", sp), ("decode", sd)],
+                    pending=len(pending) - i_arr, held=len(held),
+                    migrations=len(migr)))
             t = min(nxt)
 
+        if self.faults is not None:
+            self.faults.release_pressure(None)   # zero-leak at drain
         res.clock = max(t, rp, rd)
         return res
 
@@ -719,6 +1203,14 @@ class EngineExecutor:
                 break
             time.sleep(min(remaining, 0.05))
         return time.monotonic() - self._t0
+
+    def evict(self, req_id: int) -> None:
+        # fault recovery: the scheduler already ran its preempt fold; this
+        # is the engine-side half a plan's preempted_ids would have run
+        self.engine._preempt(req_id)
+
+    def release(self, req_id: int) -> None:
+        self.engine.release_request(req_id)
 
     def poll_clock(self, t: float) -> float:
         return time.monotonic() - self._t0 if self.wall else t
@@ -816,6 +1308,12 @@ class SimExecutor:
 
     def idle(self, t: float, until: float) -> float:
         return until
+
+    def evict(self, req_id: int) -> None:
+        pass    # analytic backend: no per-request physical state to drop
+
+    def release(self, req_id: int) -> None:
+        pass
 
     def poll_clock(self, t: float) -> float:
         return t

@@ -35,6 +35,10 @@ Endpoints
     attainment, prefix hit rate, preemption/swap/queue/pool/HTTP
     counters.
   * ``GET /healthz`` — liveness (503 once the engine thread has died).
+  * ``GET /readyz`` — readiness: 503 while draining, while the
+    degradation ladder's top rung is refusing interactive work, or once
+    the engine is dead; load balancers should route on this, not
+    healthz.
 
 Backpressure
 ------------
@@ -57,7 +61,7 @@ import threading
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.plan import RequestState, SubmitSpec
-from repro.serving.metrics import SLOConfig, prometheus_text
+from repro.serving.metrics import SLOConfig, fault_counters, prometheus_text
 from repro.serving.ratelimit import TenantRateLimiter
 from repro.serving.runtime import EngineExecutor, ServingRuntime, SubmitQueue
 
@@ -95,7 +99,10 @@ class ServingServer:
                  retry_after: float = 1.0,
                  slo: Optional[SLOConfig] = None,
                  keepalive_timeout: float = 5.0,
-                 max_iterations: int = 1_000_000_000):
+                 max_iterations: int = 1_000_000_000,
+                 faults=None, retry_budget: int = 3,
+                 deadline_ms: Optional[float] = None,
+                 drain_timeout: float = 10.0):
         self.engine = engine
         self.host = host
         self.port = port
@@ -105,6 +112,10 @@ class ServingServer:
         self.retry_after = retry_after
         self.keepalive_timeout = keepalive_timeout
         self.max_iterations = max_iterations
+        # default per-request completion deadline (wall ms) applied to
+        # specs that do not carry their own; None disables shedding
+        self.deadline_ms = deadline_ms
+        self.drain_timeout = drain_timeout
         self.limiter = None if ratelimit_rate is None else \
             TenantRateLimiter(ratelimit_rate, ratelimit_burst)
 
@@ -112,7 +123,10 @@ class ServingServer:
         self.executor = EngineExecutor(engine, wall=True)
         self.runtime = ServingRuntime(self.executor,
                                       on_token=self._on_token,
-                                      clock="executor")
+                                      clock="executor",
+                                      faults=faults,
+                                      retry_budget=retry_budget,
+                                      on_shed=self._on_shed)
         self._thread: Optional[threading.Thread] = None
         self._engine_error: Optional[BaseException] = None
         self._server: Optional[asyncio.base_events.Server] = None
@@ -129,6 +143,8 @@ class ServingServer:
         self._status_counts: Dict[int, int] = {}
         self.n_dropped_streams = 0
         self.n_streams_completed = 0
+        self.n_shed_streams = 0
+        self._draining = False
 
     # ------------------------------------------------------------ lifecycle
 
@@ -140,6 +156,24 @@ class ServingServer:
         self._server = await asyncio.start_server(
             self._handle_conn, self.host, self.port)
         self.port = self._server.sockets[0].getsockname()[1]
+
+    async def drain(self, timeout: Optional[float] = None) -> None:
+        """Graceful shutdown: flip to draining (new POSTs answer 503 and
+        /readyz fails so balancers stop routing here), wait up to
+        ``drain_timeout`` seconds for in-flight streams to finish, cancel
+        any stragglers (the engine thread sheds them, freeing their KV
+        and terminating their SSE streams), then stop the engine and the
+        listener."""
+        self._draining = True
+        t = self.drain_timeout if timeout is None else timeout
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + t
+        while self._streams and self._thread.is_alive() \
+                and loop.time() < deadline:
+            await asyncio.sleep(0.05)
+        for rid in list(self._streams):
+            self.runtime.cancel(rid)
+        await self.stop()
 
     async def stop(self) -> None:
         """Close ingestion, drain resident work, join the engine thread,
@@ -206,6 +240,29 @@ class ServingServer:
             self._streams.pop(rid, None)
             self._emitted.pop(rid, None)
 
+    def _on_shed(self, req, reason: str) -> None:
+        """Engine thread: the runtime removed ``req`` without completing
+        it (deadline expiry, retry exhaustion, cancel, degradation).  Its
+        KV is already freed; deregister the stream here — the same thread
+        that registered it — and emit the terminal event so the
+        connection's consumer unblocks with the partial result."""
+        rid = req.req_id
+        stream = self._streams.pop(rid, None)
+        self._emitted.pop(rid, None)
+        self.n_shed_streams += 1
+        if stream is None:
+            return
+        stream.push(("done", {
+            "req_id": rid,
+            "n_generated": req.n_generated,
+            "tokens": list(self.engine.outputs.get(rid, [])),
+            "ttft": req.ttft(),
+            "finish_time": req.finish_time,
+            "n_preemptions": req.n_preemptions,
+            "n_swaps": req.n_swaps,
+            "shed_reason": reason,
+        }))
+
     # ------------------------------------------------------------- overload
 
     def queue_depth(self) -> int:
@@ -258,6 +315,21 @@ class ServingServer:
                             "error": repr(self._engine_error)}, keep=keep)
                     else:
                         await self._respond(writer, 200, {"status": "ok"},
+                                            keep=keep)
+                elif method == "GET" and path == "/readyz":
+                    dead = self._engine_error is not None \
+                        or not self._thread.is_alive()
+                    if dead or self._draining \
+                            or self.runtime.ladder.refuse_new:
+                        reason = "engine dead" if dead else (
+                            "draining" if self._draining else "degraded")
+                        await self._respond(
+                            writer, 503,
+                            {"ready": False, "reason": reason,
+                             "degradation": self.runtime.ladder.level},
+                            keep=keep)
+                    else:
+                        await self._respond(writer, 200, {"ready": True},
                                             keep=keep)
                 else:
                     await self._respond(
@@ -332,7 +404,9 @@ class ServingServer:
             "engine_dispatches_total": float(self.engine.n_dispatches),
             "engine_preempted_total": float(self.engine.n_preempted),
             "engine_swapped_out_total": float(self.engine.n_swapped_out),
+            "shed_streams_total": float(self.n_shed_streams),
         }
+        counters.update(fault_counters(**self.runtime.fault_stats()))
         labeled = {"http_responses_total|status":
                    {str(s): float(c)
                     for s, c in sorted(self._status_counts.items())}}
@@ -354,6 +428,7 @@ class ServingServer:
         request (never after an SSE stream — it owns the socket)."""
         try:
             payload = json.loads(body or b"{}")
+            dl = payload.get("deadline_ms", self.deadline_ms)
             spec = SubmitSpec(
                 max_new_tokens=int(payload["max_new_tokens"]),
                 prompt_tokens=tuple(int(t)
@@ -361,7 +436,8 @@ class ServingServer:
                 slo_class=str(payload.get("slo_class", "interactive")),
                 tenant=payload.get("tenant"),
                 prefix_cache=bool(payload.get("prefix_cache", True)),
-                speculative=bool(payload.get("speculative", True)))
+                speculative=bool(payload.get("speculative", True)),
+                deadline_ms=None if dl is None else float(dl))
         except (KeyError, TypeError, ValueError, json.JSONDecodeError) as e:
             await self._respond(writer, 400, {"error": f"bad request: {e}"},
                                 keep=keep)
@@ -369,6 +445,19 @@ class ServingServer:
         if self._engine_error is not None or not self._thread.is_alive():
             await self._respond(writer, 503, {"error": "engine dead"},
                                 keep=keep)
+            return keep
+        if self._draining:
+            await self._respond(writer, 503, {"error": "draining"},
+                                retry_after=self.retry_after, keep=keep)
+            return keep
+        if self.runtime.ladder.refuse_new \
+                and spec.slo_class == "interactive":
+            # top degradation rung: interactive admission is the shed class
+            await self._respond(
+                writer, 503,
+                {"error": "degraded: interactive load shed",
+                 "degradation": self.runtime.ladder.level},
+                retry_after=self.retry_after, keep=keep)
             return keep
         if self.limiter is not None:
             wait = self.limiter.acquire(spec.tenant)
@@ -449,8 +538,11 @@ class ServingServer:
                     self.n_streams_completed += 1
                     return
         except (ConnectionResetError, BrokenPipeError, OSError):
-            # client went away mid-stream; generation continues server-side
+            # client went away mid-stream: cancel the generation — the
+            # engine thread sheds the request at the next iteration
+            # boundary, freeing its KV and deregistering this stream
             self.n_dropped_streams += 1
+            self.runtime.cancel(rid)
 
     async def _block_json(self, writer, rid: int, stream: _TokenStream,
                           tag=None, keep: bool = False) -> None:

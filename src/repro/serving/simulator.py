@@ -182,14 +182,18 @@ class Simulator:
 
     def run(self, trace: List[TraceRequest],
             max_iterations: int = 2_000_000, *,
-            on_token=None, clock: str = "executor") -> SimResult:
+            on_token=None, clock: str = "executor",
+            faults=None, retry_budget: int = 3) -> SimResult:
         """Replay ``trace`` through the shared ServingRuntime loop with the
         analytic backend.  ``on_token``/``clock`` pass straight through to
         the runtime (tokens stream as ``None`` — the simulator carries no
         model; ``clock="iteration"`` interprets arrival times as iteration
-        indices for deterministic cross-backend replay)."""
+        indices for deterministic cross-backend replay).  ``faults`` takes
+        a ``serving.faults.FaultInjector`` to chaos-test the analytic
+        stack under the same supervision the engine runs with."""
         ex = SimExecutor(self)
-        runtime = ServingRuntime(ex, on_token=on_token, clock=clock)
+        runtime = ServingRuntime(ex, on_token=on_token, clock=clock,
+                                 faults=faults, retry_budget=retry_budget)
         rr = runtime.run(trace, max_iterations=max_iterations)
         return self._result(ex, rr.requests, rr.n_iterations, rr.clock,
                             rr.decode_batch_sizes, rr.n_preemptions,
@@ -309,6 +313,12 @@ class SimHandoff:
         self._chunks.pop(req_id, None)
         self._bytes.pop(req_id, None)
 
+    def abort_export(self, m: Migration) -> None:
+        # analytic backends hold no buffers: the exported pages were
+        # already freed (move semantics), so voiding the migration only
+        # needs the link bookkeeping scrubbed
+        self.drop(m.req.req_id)
+
     def return_to_prefill(self, req: Request) -> None:
         pass                           # analytic backends hold no buffers
 
@@ -396,13 +406,15 @@ class DisaggSimulator:
 
     def run(self, trace: List[TraceRequest],
             max_iterations: int = 2_000_000, *,
-            on_token=None, clock: str = "executor") -> DisaggSimResult:
+            on_token=None, clock: str = "executor",
+            faults=None, retry_budget: int = 3) -> DisaggSimResult:
         xp = SimExecutor(self.prefill)
         xd = SimExecutor(self.decode)
         bridge = SimHandoff(self.prefill, self.decode, mode=self.handoff)
         runtime = DisaggRuntime(
             xp, xd, bridge, on_token=on_token, clock=clock,
-            decode_watermark_pages=self.decode_watermark)
+            decode_watermark_pages=self.decode_watermark,
+            faults=faults, retry_budget=retry_budget)
         rr = runtime.run(trace, max_iterations=max_iterations)
         pre = self.prefill._result(
             xp, rr.requests, rr.n_prefill_iterations, rr.clock, [],

@@ -1,0 +1,582 @@
+"""Chaos-hardened serving (serving/faults.py + runtime supervision).
+
+The headline invariant: under ANY seeded fault schedule — injected
+executor crashes, dropped/delayed inter-pool migrations, failed swap
+DMAs, allocator pressure spikes, mid-stream client disconnects — every
+SURVIVING request's token stream is bit-identical to the fault-free run,
+in BOTH preemption modes, and no KV page leaks from any pool.  Recovery
+reuses the machinery the equivalence tests already pin down (eviction +
+recompute, swap demotion, migration re-routing), so chaos only reorders
+WHEN work happens, never WHAT is computed.
+
+Also covered: per-request deadlines, bounded retry budgets, the
+graceful-degradation ladder, the no-progress diagnostic dump, the
+FaultPlan seed/JSON determinism contract, and the fault-counter schema
+shared by /metrics and the CI chaos gate.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_dense
+from repro.core.base import make_scheduler
+from repro.core.plan import RequestState, SubmitSpec
+from repro.launch.load_gen import _fetch, _post_generate
+from repro.models.model import DecoderModel
+from repro.serving.engine import Engine, EngineHandoff
+from repro.serving.faults import (DEGRADATION_LEVELS, DegradationLadder,
+                                  FaultEvent, FaultInjector, FaultPlan)
+from repro.serving.metrics import fault_counters, prometheus_text
+from repro.serving.runtime import (DisaggRuntime, EngineExecutor,
+                                   ServingRuntime)
+from repro.serving.server import ServingServer
+from repro.serving.traffic import TraceRequest
+
+
+# ---------------------------------------------------------------- fixtures
+
+def _mixed_trace(n=24, seed=0, spread=30):
+    """Multi-class oversubscribed trace with iteration-indexed arrivals
+    and real token ids (same idiom as tests/test_disagg.py)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.sort(rng.integers(0, spread, n)).astype(float)
+    trace = []
+    for i, t in enumerate(arrivals):
+        n_tok = int(rng.integers(4, 10))
+        trace.append(TraceRequest(
+            arrival_time=float(t), prompt_len=n_tok,
+            output_len=int(rng.integers(8, 13)),
+            slo_class="batch" if i % 3 == 0 else "interactive",
+            prompt_tokens=tuple(int(x)
+                                for x in rng.integers(1, 200, n_tok))))
+    return trace
+
+
+def _engine(cfg, **eng_kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=4,
+                           quantum=8, token_budget=16)
+    return Engine(model, params, sched, n_slots=4, max_len=64, **eng_kw)
+
+
+def _engine_pair(cfg, **eng_kw):
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched_kw = dict(n_slots=4, quantum=8, token_budget=16)
+    sp = make_scheduler("layered", model.n_blocks, **sched_kw)
+    sd = make_scheduler("decode", model.n_blocks, **sched_kw)
+    common = dict(n_slots=4, max_len=64, **eng_kw)
+    return Engine(model, params, sp, **common), \
+        Engine(model, params, sd, **common)
+
+
+def _free_outputs(cfg, trace):
+    """Fault-free unconstrained reference run over the same prompts."""
+    free = _engine(cfg)
+    for tr in trace:
+        free.submit(list(tr.prompt_tokens), tr.output_len,
+                    slo_class=tr.slo_class)
+    free.run(max_iterations=100_000)
+    return free.outputs
+
+
+def _assert_survivors_identical(requests, outputs, free_outputs):
+    """Survivors bit-identical; shed requests' partial streams must be a
+    PREFIX of the fault-free stream (greedy determinism)."""
+    n_survivors = 0
+    for r in requests:
+        got = list(outputs.get(r.req_id, []))
+        ref = list(free_outputs[r.req_id])
+        if r.shed_reason is None:
+            assert got == ref, f"survivor r{r.req_id} tokens diverged"
+            n_survivors += 1
+        else:
+            assert got == ref[:len(got)], \
+                f"shed r{r.req_id} stream is not a prefix"
+    assert n_survivors > 0, "chaos schedule killed every request"
+
+
+def _assert_no_leaks(*engines):
+    for e in engines:
+        assert e.alloc.pages_in_use() == 0
+        assert e.alloc.host_pages_in_use() == 0
+        e.alloc.check_invariants()
+
+
+# ------------------------------------------------------- plan determinism
+
+def test_fault_plan_seed_deterministic_and_json_round_trip(tmp_path):
+    a = FaultPlan.from_seed(7)
+    b = FaultPlan.from_seed(7)
+    assert a.events == b.events and a.events
+    assert FaultPlan.from_seed(8).events != a.events
+    rt = FaultPlan.from_json(a.to_json())
+    assert rt.events == a.events and rt.seed == a.seed
+    # the three CLI spellings
+    assert FaultPlan.load("seed:7").events == a.events
+    assert FaultPlan.load(a.to_json()).events == a.events
+    p = tmp_path / "plan.json"
+    p.write_text(a.to_json())
+    assert FaultPlan.load(f"@{p}").events == a.events
+
+
+def test_fault_plan_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(iteration=1, kind="meteor_strike")
+    with pytest.raises(ValueError, match="iteration"):
+        FaultEvent(iteration=-1, kind="link_drop")
+    with pytest.raises(ValueError, match="unknown FaultPlan fields"):
+        FaultPlan.from_json('{"events": [], "typo": 1}')
+
+
+def test_injector_events_stay_armed_until_due():
+    plan = FaultPlan(events=[FaultEvent(iteration=5, kind="link_drop")])
+    fi = FaultInjector(plan)
+    assert fi.due("link_drop", 4) == []
+    assert fi.armed("link_drop") == 1
+    assert len(fi.due("link_drop", 9)) == 1      # late poll still fires
+    assert fi.counters["n_link_drop"] == 1
+    assert fi.exhausted()
+
+
+# --------------------------------------------- survivor identity: crashes
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_executor_crash_survivors_bit_identical(mode):
+    """Injected executor-step crashes under memory pressure: every
+    resident is evicted and recovered by recompute; with budget to spare,
+    ALL requests survive with fault-free token streams."""
+    cfg = tiny_dense()
+    trace = _mixed_trace()
+    eng = _engine(cfg, pages=16, page_size=4, decode_reserve=1,
+                  preemption_mode=mode)
+    plan = FaultPlan(events=[FaultEvent(iteration=4, kind="executor_crash"),
+                             FaultEvent(iteration=15,
+                                        kind="executor_crash")])
+    fi = FaultInjector(plan)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        faults=fi, retry_budget=50)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    assert fi.counters["n_executor_crash"] == 2
+    assert rt.n_fault_retries > 0
+    assert all(r.shed_reason is None for r in rr.requests)
+    assert eng.outputs == _free_outputs(cfg, trace), \
+        "crash recovery changed generated tokens"
+    _assert_no_leaks(eng)
+    stats = rt.fault_stats()
+    assert stats["n_executor_crashes"] == 2
+    assert stats["n_retry_sheds"] == 0
+
+
+def test_swap_dma_failure_demotes_to_recompute_bit_identical():
+    """A failed swap-out DMA batch demotes its victims to recompute
+    evictions (host snapshot discarded pre-write) — tokens unchanged,
+    swap accounting consistent, zero leaks."""
+    cfg = tiny_dense()
+    trace = _mixed_trace()
+    eng = _engine(cfg, pages=16, page_size=4, decode_reserve=1,
+                  preemption_mode="swap")
+    # scheduled early; stays armed until an iteration actually swaps
+    plan = FaultPlan(events=[FaultEvent(iteration=1,
+                                        kind="swap_dma_fail")])
+    fi = FaultInjector(plan)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        faults=fi, retry_budget=50)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    assert fi.counters["n_swap_dma_fail"] == 1
+    assert all(r.shed_reason is None for r in rr.requests)
+    assert eng.outputs == _free_outputs(cfg, trace)
+    # the demoted victims count as preemptions, not swaps
+    assert sum(r.n_swaps for r in rr.requests) == rr.n_swap_outs
+    _assert_no_leaks(eng)
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_disagg_link_faults_survivors_bit_identical(mode):
+    """Dropped and delayed inter-pool migrations plus a per-pool crash:
+    victims fold and retry through the prefill pool (never lost), decode
+    clock stays prefill-free, and the merged two-pool output equals the
+    fault-free monolithic run."""
+    cfg = tiny_dense()
+    trace = _mixed_trace()
+    ep, ed = _engine_pair(cfg, pages=16, page_size=4, decode_reserve=1,
+                          preemption_mode=mode)
+    bridge = EngineHandoff(ep, ed, streaming=True)
+    plan = FaultPlan(events=[
+        FaultEvent(iteration=2, kind="link_drop"),
+        FaultEvent(iteration=6, kind="link_delay", magnitude=3.0),
+        FaultEvent(iteration=10, kind="link_drop", target=1),
+        FaultEvent(iteration=12, kind="executor_crash", target=0),
+        FaultEvent(iteration=20, kind="executor_crash", target=1),
+    ])
+    fi = FaultInjector(plan)
+    rt = DisaggRuntime(EngineExecutor(ep), EngineExecutor(ed), bridge,
+                       clock="iteration", faults=fi, retry_budget=50)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    assert fi.counters["n_link_drop"] == 2
+    assert fi.counters["n_link_delay"] == 1
+    assert fi.counters["n_executor_crash"] == 2
+    assert rr.decode_prefill_slices == 0
+    assert all(r.shed_reason is None for r in rr.requests)
+    outs = {**ep.outputs, **ed.outputs}
+    assert outs == _free_outputs(cfg, trace), \
+        "link chaos changed generated tokens"
+    _assert_no_leaks(ep, ed)
+
+
+@pytest.mark.parametrize("mode", ["recompute", "swap"])
+def test_seeded_chaos_schedule_survivors_bit_identical(mode):
+    """The headline: a seeded multi-kind schedule (crashes, pressure
+    spikes, disconnects, swap-DMA failures) against the oversubscribed
+    trace — survivors bit-identical, shed streams are prefixes, zero
+    pages leak.  Same seed, same chaos, every run."""
+    cfg = tiny_dense()
+    trace = _mixed_trace()
+    free_outputs = _free_outputs(cfg, trace)
+    plan = FaultPlan.from_seed(3, horizon=40, n_events=6,
+                               kinds=["executor_crash", "pressure_spike",
+                                      "client_disconnect",
+                                      "swap_dma_fail"])
+    eng = _engine(cfg, pages=16, page_size=4, decode_reserve=1,
+                  preemption_mode=mode)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        faults=FaultInjector(plan), retry_budget=50)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    assert rt.fault_stats()["n_injected_faults"] > 0
+    _assert_survivors_identical(rr.requests, eng.outputs, free_outputs)
+    _assert_no_leaks(eng)
+
+
+# --------------------------------------------- deadlines, cancels, budget
+
+def test_deadline_expiry_sheds_and_frees_kv():
+    cfg = tiny_dense()
+    rng = np.random.default_rng(0)
+    specs = []
+    for i in range(6):
+        toks = tuple(int(x) for x in rng.integers(1, 200, 6))
+        specs.append(SubmitSpec(
+            prompt_tokens=toks, max_new_tokens=40, arrival_time=0.0,
+            # the first two can never finish 40 tokens in 5 iterations
+            deadline_ms=5 if i < 2 else None))
+    eng = _engine(cfg)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration")
+    rr = rt.run(specs, max_iterations=100_000)
+
+    shed = [r for r in rr.requests if r.shed_reason == "deadline"]
+    assert len(shed) == 2
+    assert all(r.state is RequestState.DONE for r in shed)
+    assert rt.n_deadline_sheds == 2
+    done = [r for r in rr.requests if r.shed_reason is None]
+    assert done and all(r.n_generated == 40 for r in done)
+    _assert_no_leaks(eng)
+
+
+def test_cancel_mid_run_sheds_and_notifies():
+    """cancel() from another thread sheds at the next iteration boundary,
+    fires on_shed in the loop thread, and frees the victim's pages."""
+    cfg = tiny_dense()
+    rng = np.random.default_rng(1)
+    specs = [SubmitSpec(prompt_tokens=tuple(
+        int(x) for x in rng.integers(1, 200, 6)),
+        max_new_tokens=30, arrival_time=0.0) for _ in range(4)]
+    eng = _engine(cfg)
+    shed_log = []
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        on_shed=lambda r, why: shed_log.append(
+                            (r.req_id, why)))
+    rt.cancel(0)                    # queued before the loop even starts
+    rt.cancel(999)                  # unknown id: ignored
+    rr = rt.run(specs, max_iterations=100_000)
+
+    assert shed_log == [(0, "disconnect")]
+    assert rr.requests[0].shed_reason == "disconnect"
+    assert rt.n_disconnect_sheds == 1
+    assert all(r.shed_reason is None and r.n_generated == 30
+               for r in rr.requests[1:])
+    _assert_no_leaks(eng)
+
+
+def test_retry_budget_exhaustion_sheds_with_reason():
+    """retry_budget=0: the first injected crash sheds every resident with
+    reason 'retries' instead of recovering it — bounded, never a loop."""
+    cfg = tiny_dense()
+    trace = _mixed_trace(n=8, spread=2)
+    eng = _engine(cfg, pages=16, page_size=4, decode_reserve=1)
+    plan = FaultPlan(events=[FaultEvent(iteration=3,
+                                        kind="executor_crash")])
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        faults=FaultInjector(plan), retry_budget=0)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    shed = [r for r in rr.requests if r.shed_reason == "retries"]
+    assert shed, "crash with zero budget must shed residents"
+    assert rt.n_retry_sheds == len(shed)
+    assert rt.n_fault_retries == 0
+    survivors = [r for r in rr.requests if r.shed_reason is None]
+    assert survivors and all(r.finish_time is not None for r in survivors)
+    _assert_no_leaks(eng)
+
+
+def test_pressure_spike_forces_evictions_and_releases():
+    """Phantom page reservations under an otherwise-fitting load force
+    the eviction path; tokens unchanged and the phantom never leaks."""
+    cfg = tiny_dense()
+    trace = _mixed_trace(n=12, spread=10)
+    eng = _engine(cfg, pages=24, page_size=4, decode_reserve=1)
+    plan = FaultPlan(events=[
+        FaultEvent(iteration=3, kind="pressure_spike", magnitude=16,
+                   duration=8),
+        FaultEvent(iteration=20, kind="pressure_spike", magnitude=16,
+                   duration=8)])
+    fi = FaultInjector(plan)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        faults=fi, retry_budget=50)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    assert fi.counters["n_pressure_spike"] == 2
+    assert all(r.shed_reason is None for r in rr.requests)
+    assert eng.outputs == _free_outputs(cfg, trace)
+    assert fi.exhausted()           # phantoms released at run end
+    _assert_no_leaks(eng)
+
+
+# ------------------------------------------------------ degradation ladder
+
+def test_degradation_ladder_escalates_and_restores_spec():
+    s = make_scheduler("layered", 4, n_slots=4, quantum=8,
+                       token_budget=16)
+    s.configure_speculation("ngram", 4, adaptive=True)
+    lad = DegradationLadder([s], trip=2, window=4, cool=3)
+    assert lad.level == "normal"
+
+    def pressure_at(it):
+        lad.record_pressure(it)
+        lad.record_pressure(it)
+        lad.step(it)
+
+    pressure_at(1)
+    assert lad.level == "spec_shrunk" and s.spec_k == 2
+    pressure_at(2)
+    assert lad.level == "spec_off" and s.spec_mode == "off"
+    pressure_at(3)
+    assert lad.level == "shed_batch"
+    assert lad.shed_class("batch") and not lad.shed_class("interactive")
+    pressure_at(4)
+    assert lad.level == "interactive_503" and lad.refuse_new
+    # one rung per step, even under continuing pressure at the top
+    assert lad.n_escalations == 4
+    # quiet cool-down walks back down and restores the saved spec config
+    it = 4
+    while lad.level != "normal":
+        it += lad.cool
+        lad.step(it)
+    assert lad.n_deescalations == 4
+    assert (s.spec_mode, s.spec_k, s.spec_adaptive) == ("ngram", 4, True)
+    assert DEGRADATION_LEVELS[lad.level_index] == "normal"
+
+
+def test_degradation_shed_batch_shows_in_run():
+    """Sustained injected pressure climbs the ladder far enough to shed
+    batch-class work; interactive requests still finish identically."""
+    cfg = tiny_dense()
+    trace = _mixed_trace()
+    free_outputs = _free_outputs(cfg, trace)
+    eng = _engine(cfg, pages=16, page_size=4, decode_reserve=1)
+    events = [FaultEvent(iteration=i, kind="executor_crash")
+              for i in range(2, 26, 2)]
+    sched = eng.scheduler
+    ladder = DegradationLadder([sched], trip=2, window=6, cool=50)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration",
+                        faults=FaultInjector(FaultPlan(events=events)),
+                        retry_budget=50, ladder=ladder)
+    rr = rt.run(trace, max_iterations=100_000)
+
+    stats = rt.fault_stats()
+    assert stats["n_degradation_escalations"] >= \
+        DEGRADATION_LEVELS.index("shed_batch")
+    assert stats["n_degrade_sheds"] > 0
+    assert any(r.shed_reason == "degrade" and r.slo_class == "batch"
+               for r in rr.requests)
+    _assert_survivors_identical(rr.requests, eng.outputs, free_outputs)
+    _assert_no_leaks(eng)
+
+
+# ------------------------------------------------- diagnostics + counters
+
+def test_no_progress_dump_names_queues_pools_and_requests():
+    cfg = tiny_dense()
+    trace = _mixed_trace(n=8, spread=2)
+    eng = _engine(cfg)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration")
+    with pytest.raises(RuntimeError) as ei:
+        rt.run(trace, max_iterations=3)
+    msg = str(ei.value)
+    assert "did not drain" in msg
+    assert "pending_arrivals=" in msg
+    assert "kv free=" in msg and "hwm=" in msg
+    assert "[pool] sched=" in msg
+    assert "\n  r" in msg, "per-request rows missing from the dump"
+
+
+# ------------------------------------------------- HTTP server chaos
+
+async def _with_server(body, **server_kw):
+    cfg = tiny_dense()
+    model = DecoderModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sched = make_scheduler("layered", model.n_blocks, n_slots=4,
+                           quantum=8, token_budget=16)
+    eng = Engine(model, params, sched, n_slots=4, max_len=64)
+    srv = ServingServer(eng, port=0, **server_kw)
+    await srv.start()
+    try:
+        return await body(srv)
+    finally:
+        await srv.stop()
+
+
+async def _open_sse(host, port, payload):
+    """POST /v1/generate over a raw socket, consume the response head,
+    return the live (reader, writer) mid-stream."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(payload).encode()
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    status = int((await reader.readline()).split()[1])
+    while (await reader.readline()) not in (b"\r\n", b"\n", b""):
+        pass
+    return reader, writer, status
+
+
+def test_readyz_reflects_degradation_ladder():
+    """/readyz flips to 503 once the ladder refuses new interactive
+    work, and interactive POSTs are answered 503 at the front door."""
+    async def body(srv):
+        status, _ = await _fetch(srv.host, srv.port, "/readyz")
+        assert status == 200
+        lad = srv.runtime.ladder
+        for it in range(1, 5):                 # one rung per iteration
+            for _ in range(lad.trip):
+                lad.record_pressure(it)
+            lad.step(it)
+        assert lad.level == "interactive_503" and lad.refuse_new
+        status, raw = await _fetch(srv.host, srv.port, "/readyz")
+        assert status == 503 and b"degraded" in raw
+        status, headers, events = await _post_generate(
+            srv.host, srv.port,
+            {"prompt_tokens": [1, 2, 3], "max_new_tokens": 4})
+        assert status == 503
+        assert events[0][1]["error"].startswith("degraded")
+        assert int(headers["retry-after"]) >= 1
+        it = 4
+        while lad.level != "normal":           # quiet cool-down recovers
+            it += lad.cool
+            lad.step(it)
+        status, _ = await _fetch(srv.host, srv.port, "/readyz")
+        assert status == 200
+
+    asyncio.run(_with_server(body))
+
+
+def test_drain_gates_ingestion_and_finishes_inflight():
+    """While draining, /readyz fails and new POSTs answer 503; a stream
+    already in flight when drain() is called completes intact, and the
+    listener is torn down afterwards."""
+    async def body(srv):
+        srv._draining = True                   # the gate, deterministically
+        status, raw = await _fetch(srv.host, srv.port, "/readyz")
+        assert status == 503 and b"draining" in raw
+        status, _, events = await _post_generate(
+            srv.host, srv.port,
+            {"prompt_tokens": [1, 2, 3], "max_new_tokens": 4})
+        assert status == 503 and events[0][1]["error"] == "draining"
+        srv._draining = False
+        status, _ = await _fetch(srv.host, srv.port, "/readyz")
+        assert status == 200
+
+        fut = asyncio.ensure_future(_post_generate(
+            srv.host, srv.port,
+            {"prompt_tokens": [5, 6, 7, 8], "max_new_tokens": 24}))
+        await asyncio.sleep(0.3)               # let it register a stream
+        await srv.drain()
+        status, _, events = await fut
+        assert status == 200
+        done = [d for k, d in events if k == "done"][0]
+        assert "shed_reason" not in done and done["n_generated"] == 24
+        with pytest.raises(OSError):
+            await asyncio.open_connection(srv.host, srv.port)
+
+    asyncio.run(_with_server(body, drain_timeout=60.0))
+
+
+def test_sse_client_disconnect_cancels_and_frees_kv():
+    """A client vanishing mid-SSE must cancel its generation: the engine
+    thread sheds the request with reason 'disconnect', every KV page
+    comes back, and the shed shows up in /metrics."""
+    async def body(srv):
+        reader, writer, status = await _open_sse(
+            srv.host, srv.port,
+            {"prompt_tokens": [9, 8, 7, 6, 5, 4], "max_new_tokens": 40})
+        assert status == 200
+        seen = 0
+        while seen < 2:                        # two tokens, then vanish
+            line = await reader.readline()
+            assert line, "stream ended before any tokens"
+            if line.startswith(b"event: token"):
+                seen += 1
+        writer.transport.abort()               # RST, not a polite FIN
+
+        req = None
+        for _ in range(1000):
+            reqs = list(srv.engine.requests.values())
+            if reqs and reqs[0].shed_reason == "disconnect" \
+                    and srv.engine.alloc.pages_in_use() == 0:
+                req = reqs[0]
+                break
+            await asyncio.sleep(0.01)
+        assert req is not None, "disconnect never shed the request"
+        assert req.n_generated < 40
+        assert srv.n_dropped_streams == 1
+        assert srv.n_shed_streams == 1
+        assert srv.runtime.n_disconnect_sheds == 1
+        srv.engine.alloc.check_invariants()
+        status, raw = await _fetch(srv.host, srv.port, "/metrics")
+        text = raw.decode()
+        assert "repro_sheds_disconnect_total 1" in text
+        assert "repro_shed_streams_total 1" in text
+
+    asyncio.run(_with_server(body))
+
+
+def test_fault_stats_schema_matches_prometheus_counters():
+    cfg = tiny_dense()
+    eng = _engine(cfg)
+    rt = ServingRuntime(EngineExecutor(eng), clock="iteration")
+    stats = rt.fault_stats()            # faults=None still yields schema
+    counters = fault_counters(**stats)
+    assert counters["faults_injected_total"] == 0.0
+    assert counters["degradation_level"] == 0.0
+    text = prometheus_text([], counters=counters)
+    for name in ("repro_faults_injected_total",
+                 "repro_fault_executor_crashes_total",
+                 "repro_fault_link_drops_total",
+                 "repro_fault_swap_dma_fails_total",
+                 "repro_sheds_deadline_total",
+                 "repro_sheds_retries_total",
+                 "repro_sheds_disconnect_total",
+                 "repro_fault_retries_total",
+                 "repro_degradation_level"):
+        assert f"{name} 0" in text, f"{name} missing from /metrics"

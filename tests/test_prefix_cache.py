@@ -316,6 +316,109 @@ def test_export_import_round_trip_never_leaks(seed):
         assert alloc.host_pages_in_use() == 0
 
 
+@given(st.integers(min_value=0, max_value=10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_export_import_with_injected_failures_never_leaks(seed):
+    """The chaos variant of the round-trip property: the same
+    pair-of-pools interleaving plus injected link failures — in-flight
+    payloads DROPPED outright (the disagg link-drop fault), imports
+    bounced back to the SOURCE pool (the whole-prompt-retry fallback in
+    DisaggRuntime), and imports driven into ``PagedPoolExhausted``, which
+    must leave the destination untouched and the payload importable
+    later.  Export's move semantics mean a lost payload holds pages on
+    NEITHER side, so even adversarial interleavings leak nothing."""
+    rng = np.random.default_rng(seed)
+    pyrng = random.Random(seed ^ 0x5EED)
+    pools = [_alloc(n_pages=int(rng.integers(24, 40)), n_host_pages=24),
+             _alloc(n_pages=int(rng.integers(24, 40)), n_host_pages=24)]
+    prefixes = [[int(x) for x in rng.integers(1, 97, 8)] for _ in range(3)]
+    where, in_flight, dropped, next_rid = {}, [], set(), 0
+    for _ in range(70):
+        op = pyrng.choice(["admit", "grow", "swap_out", "export",
+                           "import", "drop", "bounce", "import_fail",
+                           "free"])
+        try:
+            if op == "admit":
+                prompt = _prompt(rng, pyrng.choice(prefixes),
+                                 int(rng.integers(0, 6)))
+                rid, next_rid = next_rid, next_rid + 1
+                side = pyrng.randint(0, 1)
+                alloc = pools[side]
+                alloc.reserve(rid, len(prompt) + PS, prompt_tokens=prompt)
+                alloc.set_length(rid, len(prompt))
+                alloc.register_prefix(rid, prompt)
+                where[rid] = side
+            elif op == "grow" and where:
+                rid = pyrng.choice(sorted(where))
+                alloc = pools[where[rid]]
+                if alloc.is_resident(rid):
+                    alloc.grow_to(rid, alloc.length(rid) + 1)
+            elif op == "swap_out" and where:
+                rid = pyrng.choice(sorted(where))
+                alloc = pools[where[rid]]
+                if alloc.can_swap_out(rid):
+                    alloc.swap_out(rid)
+            elif op == "export" and where:
+                rid = pyrng.choice(sorted(where))
+                src_side = where.pop(rid)
+                exp = pools[src_side].export_pages(rid)
+                in_flight.append((exp, 1 - src_side, src_side))
+            elif op == "drop" and in_flight:
+                # link failure: the serialized payload is lost in flight;
+                # nothing to release — export already freed the source
+                exp, _, _ = in_flight.pop(
+                    pyrng.randrange(len(in_flight)))
+                dropped.add(exp.req_id)
+            elif op == "bounce" and in_flight:
+                # destination refused: retry lands the request back HOME
+                exp, _, src_side = in_flight[0]
+                src = pools[src_side]
+                if src.can_import(exp, exp.length + PS):
+                    in_flight.pop(0)
+                    src.import_pages(exp, exp.length + PS)
+                    where[exp.req_id] = src_side
+            elif op == "import_fail" and in_flight:
+                # an import that cannot fit must be atomic: raise without
+                # mutating, leaving the payload importable later
+                exp, dst_side, _ = in_flight[0]
+                dst = pools[dst_side]
+                impossible = (dst.n_pages + 8) * PS
+                assert not dst.can_import(exp, impossible)
+                before = dst.pages_in_use()
+                with pytest.raises(PagedPoolExhausted):
+                    dst.import_pages(exp, impossible)
+                assert dst.pages_in_use() == before
+            elif op == "import" and in_flight:
+                exp, dst_side, _ = in_flight[0]
+                dst = pools[dst_side]
+                if dst.can_import(exp, exp.length + PS):
+                    in_flight.pop(0)
+                    dst.import_pages(exp, exp.length + PS)
+                    where[exp.req_id] = dst_side
+            elif op == "free" and where:
+                rid = pyrng.choice(sorted(where))
+                pools[where.pop(rid)].free(rid)
+        except PagedPoolExhausted:
+            pass
+        for alloc in pools:
+            alloc.check_invariants()
+    for rid in sorted(where):
+        pools[where[rid]].free(rid)
+    # land the remaining payloads wherever they fit (pools are empty now)
+    for exp, dst_side, src_side in in_flight:
+        landed = next(p for p in (pools[dst_side], pools[src_side])
+                      if p.can_import(exp))
+        landed.import_pages(exp)
+        landed.free(exp.req_id)
+    for rid in dropped:
+        assert not any(p.owns(rid) for p in pools)
+    for alloc in pools:
+        alloc.check_invariants()
+        assert alloc.pages_in_use() == 0
+        assert all(r == 0 for r in alloc._refs.values())
+        assert alloc.host_pages_in_use() == 0
+
+
 # -- engine bit-identity -----------------------------------------------------
 
 
